@@ -1,0 +1,183 @@
+"""Roofline derivation from the dry-run artifacts (§Roofline).
+
+Three terms per (arch x shape x mesh), all in seconds per executed step:
+
+  compute    = FLOPs_per_device / 197e12          (bf16 peak, v5e)
+  memory     = bytes_per_device / 819e9           (HBM bw)
+  collective = wire_bytes_per_device / 50e9       (ICI per-link bw)
+
+CPU-backend caveat (documented in EXPERIMENTS.md): ``cost_analysis`` counts
+while-loop bodies ONCE, and our stacks scan over layers — so HLO FLOPs/bytes
+undercount by ~n_layers. We therefore report the ANALYTIC FLOPs/bytes model
+(formulas below, from the known pass structure of an AdaFBiO step) as the
+roofline inputs, plus the raw HLO numbers for reference. Collective bytes are
+parsed from the partitioned HLO; collectives inside while bodies are scaled
+by the layer count (the dominant trip count).
+"""
+from __future__ import annotations
+
+import json
+import re
+from pathlib import Path
+from typing import Dict
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / link (ICI)
+
+DEVICES = {"16x16": 256, "2x16x16": 512}
+
+
+def _shape_params(shape_id):
+    from repro.configs import INPUT_SHAPES
+    return INPUT_SHAPES[shape_id]
+
+
+def analytic_terms(rec: Dict) -> Dict:
+    """Per-device analytic FLOPs & HBM bytes for the executed step."""
+    from repro.configs import FedConfig, get_arch
+    cfg = get_arch(rec["arch"])
+    shape = _shape_params(rec["shape"])
+    fed = FedConfig()
+    n_dev = DEVICES[rec["mesh"]] if rec["mesh"] in DEVICES else 256
+    n_act = cfg.active_param_count()
+    n_tot = cfg.param_count()
+    out = {}
+
+    if shape.kind == "train":
+        m = rec.get("n_clients", 1)
+        s = shape.seq_len
+        sn = max(s // 4, 64)
+        t_ll = max(shape.global_batch // m, 1) * s          # ζ tokens / client
+        t_ul = max(int((shape.global_batch // m) * fed.ul_batch_frac), 1) * s
+        t_n = fed.neumann_k * fed.neumann_batch * sn
+        t_h = fed.neumann_batch * sn
+        # v-refresh: 2 forwards over the LL batch (2ND per fwd token)
+        fl = 4 * n_act * t_ll
+        # w-refresh: 2 evals x [joint (gx,gy) fwd+bwd (6ND) + mixed second-
+        # order (~8ND over the single zeta_0 sample) + K Neumann feature fwd]
+        fl += 2 * (6 * n_act * t_ul + 8 * n_act * t_h + 2 * n_act * t_n)
+        out["flops_per_device"] = fl * m / n_dev
+        # bytes: each pass streams the client's param shard; activation HBM
+        # traffic ~ flops / d_model (each layer reads+writes [tokens, d]
+        # around ~6*d*params worth of MACs -> intensity ~d).
+        passes = 2 + 2 * 3.5
+        state_bytes = 2 * n_tot * 2            # params + STORM w, bf16
+        per_dev_state = state_bytes * m / n_dev
+        out["bytes_per_device"] = (passes * per_dev_state
+                                   + out["flops_per_device"] / cfg.d_model)
+        out["sync_allreduce_bytes"] = 2 * per_dev_state  # x,y,v,w up+down
+    elif shape.kind == "prefill":
+        s = shape.seq_len if cfg.family != "encdec" else shape.seq_len // 4
+        toks = shape.global_batch * s
+        fl = 2 * n_act * toks
+        if cfg.n_heads:
+            hd = cfg.resolved_head_dim
+            win = rec["steps"]["prefill"].get("window") or s
+            eff = min(win, s)
+            fl += 4 * cfg.n_layers * shape.global_batch * s * eff * \
+                cfg.n_heads * hd
+        out["flops_per_device"] = fl / n_dev
+        out["bytes_per_device"] = (n_tot * 2 / min(n_dev, 16)
+                                   + 2 * toks * cfg.d_model * 2
+                                   * cfg.n_layers / n_dev)
+    else:  # decode: one token vs cache
+        toks = shape.global_batch
+        fl = 2 * n_act * toks
+        cache_b = _cache_bytes(cfg, shape, rec)
+        out["flops_per_device"] = fl / n_dev
+        # weights + the whole cache are streamed once per token step
+        out["bytes_per_device"] = (n_tot * 2 + cache_b) / n_dev
+    return out
+
+
+def _cache_bytes(cfg, shape, rec):
+    win = rec["steps"][shape.kind].get("window")
+    s = min(win or shape.seq_len, shape.seq_len)
+    b = shape.global_batch
+    total = 0
+    if cfg.n_heads:
+        n_attn = (cfg.n_layers if cfg.family != "hybrid"
+                  else cfg.n_layers // cfg.shared_attn_every)
+        total += 2 * n_attn * b * s * cfg.n_kv_heads * cfg.resolved_head_dim * 2
+    if cfg.family == "encdec":
+        total += 2 * cfg.n_layers * b * shape.seq_len * cfg.n_kv_heads * \
+            cfg.resolved_head_dim * 2
+    if cfg.ssm is not None:
+        di = cfg.ssm.expand * cfg.d_model
+        total += cfg.n_layers * b * di * cfg.ssm.state_dim * 4
+    return total
+
+
+def roofline_row(rec: Dict) -> Dict:
+    from repro.configs import get_arch
+    cfg = get_arch(rec["arch"])
+    step_key = ("local" if "local" in rec["steps"] else
+                list(rec["steps"].keys())[0])
+    step = rec["steps"][step_key]
+    ana = analytic_terms(rec)
+    # collectives: ops inside while(scan-over-layers) bodies appear once in
+    # the HLO text; scale them by the layer count (dominant trip count).
+    coll = step.get("collectives", {})
+    wire = sum(v.get("wire_bytes", 0) for v in coll.values()
+               if isinstance(v, dict))
+    wire_loop = coll.get("_in_loops_wire_bytes")
+    if wire_loop is not None:
+        wire = (wire - wire_loop) + wire_loop * cfg.n_layers
+    t_compute = ana["flops_per_device"] / PEAK_FLOPS
+    t_memory = ana["bytes_per_device"] / HBM_BW
+    t_coll = wire / LINK_BW
+    # sync collectives amortized over q (the paper's communication saving)
+    if step_key == "local" and "sync" in rec["steps"]:
+        from repro.configs import FedConfig
+        q = FedConfig().q
+        sync_coll = rec["steps"]["sync"].get("collectives", {})
+        sync_wire = sum(v.get("wire_bytes", 0) for v in sync_coll.values()
+                        if isinstance(v, dict))
+        t_coll += (sync_wire + ana.get("sync_allreduce_bytes", 0)) / LINK_BW / q
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    total = max(terms.values())
+    model_flops = 6 * cfg.active_param_count() * 4096  # per-device-ish ref
+    hlo_flops = step.get("cost", {}).get("flops", float("nan"))
+    mem = step.get("memory", {})
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "hlo_flops_raw": hlo_flops,
+        "flops_analytic": ana["flops_per_device"],
+        "bytes_analytic": ana["bytes_per_device"],
+        "arg_gib": mem.get("argument_bytes", 0) / 2 ** 30,
+        "temp_gib": mem.get("temp_bytes", 0) / 2 ** 30,
+        "temp_tpu_adj_gib": mem.get("temp_bytes_tpu_adj",
+                                    mem.get("temp_bytes", 0)) / 2 ** 30,
+        # fit uses the TPU-adjusted temp (CPU f32-upcast copies removed)
+        "fits_16g": (mem.get("argument_bytes", 0)
+                     + mem.get("temp_bytes_tpu_adj", mem.get("temp_bytes", 0))
+                     ) / 2 ** 30 <= 16.0,
+    }
+
+
+def load_rows(dryrun_dir="results/dryrun", mesh="single"):
+    rows = []
+    for f in sorted(Path(dryrun_dir).glob(f"*__{mesh}.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("ok"):
+            rows.append(roofline_row(rec))
+    return rows
+
+
+def main():
+    rows = load_rows()
+    hdr = ("arch", "shape", "dominant", "t_compute_s", "t_memory_s",
+           "t_collective_s", "arg_gib", "temp_gib", "fits_16g")
+    print(",".join(hdr))
+    for r in rows:
+        print(",".join(
+            f"{r[h]:.4g}" if isinstance(r[h], float) else str(r[h])
+            for h in hdr))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Federated data hyper-cleaning (paper Section 6.2, Problem (4)).
+
+Trains per-sample weights x so the shared classifier y ignores corrupted
+labels; reports the paper's exact stationarity metric E‖∇F(x̄)‖ and shows the
+learned weights separating clean from corrupted samples.
+
+    PYTHONPATH=src python examples/hypercleaning.py [algorithm]
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_tasks import HyperCleanConfig
+from repro.core.tree_util import tree_mean_axis0
+from repro.tasks.driver import FedDriver
+from repro.tasks.hyperclean import build_hyperclean
+
+
+def main(algorithm="adafbio", steps=120):
+    cfg = HyperCleanConfig(n_clients=8)
+    hc = build_hyperclean(cfg)
+    driver = FedDriver(hc["problem"], cfg.fed, cfg.n_clients, hc["batch_fn"],
+                       hc["init_xy"], metric_fn=hc["val_loss"],
+                       grad_norm_fn=hc["true_grad_norm"], algorithm=algorithm)
+    r = driver.run(steps, eval_every=20)
+    print(f"algorithm={algorithm}")
+    print(f"{'step':>6} {'comms':>6} {'val_loss':>9} {'|∇F|':>9}")
+    for s, cm, v, g in zip(r.steps, r.comms, r.metric, r.grad_norm):
+        print(f"{s:6d} {cm:6d} {v:9.4f} {g:9.4f}")
+
+    # do the learned weights down-rank the corrupted samples?
+    x_bar = np.asarray(r.final_avg_state["x"])         # [M, n_train] logits
+    weights = 1.0 / (1.0 + np.exp(-x_bar))             # sigma(x_i)
+    corrupted = np.asarray(hc["data"]["corrupted"])    # [M, n_train] bool
+    w_clean = weights[~corrupted].mean()
+    w_bad = weights[corrupted].mean()
+    print(f"\nmean sigma(x_i): clean={w_clean:.3f}  corrupted={w_bad:.3f}  "
+          f"({'OK: corrupted down-weighted' if w_bad < w_clean else 'no separation yet'})")
+
+
+if __name__ == "__main__":
+    main(*(sys.argv[1:2] or ["adafbio"]))

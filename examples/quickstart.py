@@ -1,0 +1,51 @@
+"""Quickstart: AdaFBiO (paper Algorithm 1) on the analytic quadratic bilevel
+problem, where the true hypergradient is available in closed form.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import FedConfig
+from repro.core.bilevel import quadratic_bilevel_problem, quadratic_true_grad
+from repro.tasks.driver import FedDriver
+
+
+def main():
+    d, p, m = 8, 6, 4
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    A = jax.random.normal(k1, (p, p))
+    H = A @ A.T / p + 0.5 * jnp.eye(p)          # LL strongly convex (Assm. 1)
+    Bm = jax.random.normal(k2, (p, d)) * 0.3
+    c = jax.random.normal(k3, (p,))
+    Q = jnp.eye(d) * 0.2
+    problem = quadratic_bilevel_problem(H, Bm, c, Q)
+
+    fed = FedConfig(q=4, neumann_k=8, lr_x=0.3, lr_y=0.3,
+                    theta=float(1.0 / jnp.linalg.eigvalsh(H)[-1]))
+
+    driver = FedDriver(
+        problem, fed, n_clients=m,
+        batch_fn=lambda client, step: {"f": 0.0, "g": 0.0, "g0": 0.0,
+                                       "gi": jnp.zeros((fed.neumann_k,))},
+        init_xy=lambda k: (jnp.ones((d,)) * 2.0, jnp.zeros((p,))),
+        grad_norm_fn=lambda x, y: jnp.linalg.norm(
+            quadratic_true_grad(H, Bm, c, Q, x)),
+        algorithm="adafbio")
+
+    r = driver.run(120, eval_every=20)
+    print(f"{'step':>6} {'samples':>8} {'comms':>6} {'|∇F(x̄)|':>10}")
+    for s, smp, cm, g in zip(r.steps, r.samples, r.comms, r.grad_norm):
+        print(f"{s:6d} {smp:8d} {cm:6d} {g:10.4f}")
+    print(f"\nAdaFBiO: q={fed.q} local steps per communication round, "
+          f"K={fed.neumann_k} Neumann terms; "
+          f"grad norm {r.grad_norm[0]:.3f} -> {r.grad_norm[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Dev tool: dump the biggest HLO buffers of one dry-run cell.
+
+PYTHONPATH=src python scripts/probe_cell.py <arch> <shape> [minMB]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import re
+import sys
+from collections import Counter
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import FedConfig, INPUT_SHAPES, get_arch
+from repro.fed.runtime import FederatedTrainer, client_batch_specs
+from repro.fed.serve import build_serve_fns
+from repro.launch.mesh import make_production_mesh
+
+arch, shape_id = sys.argv[1], sys.argv[2]
+min_mb = float(sys.argv[3]) if len(sys.argv) > 3 else 256
+cfg = get_arch(arch)
+shape = INPUT_SHAPES[shape_id]
+mesh = make_production_mesh()
+with mesh:
+    if shape.kind == "train":
+        tr = FederatedTrainer(cfg, FedConfig(), shape, mesh=mesh)
+        bspecs, baxes = client_batch_specs(cfg, shape, tr.m, FedConfig())
+        fn = tr.jitted("local", bspecs, baxes, donate=False)
+        compiled = fn.lower(tr.abstract_client_states(),
+                            tr.abstract_server_state(), bspecs,
+                            jax.ShapeDtypeStruct((2,), jnp.uint32)).compile()
+    else:
+        fns = build_serve_fns(cfg, shape, mesh)
+        fn = fns["prefill"] if shape.kind == "prefill" else fns["decode"]
+        compiled = fn.lower(*fns["in_abs"]).compile()
+
+ma = compiled.memory_analysis()
+print(f"arg {ma.argument_size_in_bytes/2**30:.2f} temp "
+      f"{ma.temp_size_in_bytes/2**30:.2f} out {ma.output_size_in_bytes/2**30:.2f} "
+      f"alias {ma.alias_size_in_bytes/2**30:.2f} GiB")
+DT = {"bf16": 2, "f16": 2, "f32": 4, "s32": 4, "u32": 4, "pred": 1, "s8": 1}
+pat = re.compile(r"= ([a-z0-9]+)\[([0-9,]+)\]")
+sizes = Counter()
+for line in compiled.as_text().splitlines():
+    m = pat.search(line)
+    if not m:
+        continue
+    dt, dims = m.groups()
+    n = DT.get(dt, 4)
+    for d in dims.split(","):
+        n *= int(d)
+    if n > min_mb * 2**20:
+        op = line.split("=", 2)[1].strip().split("(")[0]
+        sizes[(round(n / 2**30, 2), dt, dims, op[:40])] += 1
+for k, c in sorted(sizes.items(), reverse=True)[:15]:
+    print(c, "x", k)

@@ -1,0 +1,62 @@
+"""Generate results/dryrun_summary.md + the §Roofline table from the per-cell
+dry-run JSONs. Pure file-munging (no jax)."""
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+
+def gib(x):
+    return x / 2**30
+
+
+def main(dirpath="results/dryrun", out="results/dryrun_summary.md"):
+    from benchmarks.roofline import roofline_row
+    lines = ["# Dry-run + roofline summary", ""]
+    for mesh in ("single", "multi"):
+        files = sorted(Path(dirpath).glob(f"*__{mesh}.json"))
+        if not files:
+            continue
+        lines += [f"## mesh = {'16x16 (256 chips)' if mesh=='single' else '2x16x16 (512 chips)'}",
+                  "",
+                  "| arch | shape | step | arg GiB | temp GiB | temp(TPU-adj) | fits16G | dominant | t_comp s | t_mem s | t_coll s |",
+                  "|---|---|---|---|---|---|---|---|---|---|---|"]
+        n_ok = n_fail = 0
+        for f in files:
+            r = json.loads(f.read_text())
+            if not r.get("ok"):
+                n_fail += 1
+                lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                             f"FAILED: {r.get('error','')[:60]} | | | | |")
+                continue
+            n_ok += 1
+            try:
+                rr = roofline_row(r)
+            except Exception:
+                rr = None
+            for step, v in r["steps"].items():
+                m = v["memory"]
+                arg = gib(m.get("argument_bytes", 0))
+                temp = gib(m.get("temp_bytes", 0))
+                adj = gib(m.get("temp_bytes_tpu_adj", m.get("temp_bytes", 0)))
+                fits = "✓" if arg + adj <= 16.0 else "OVER"
+                if rr and step in ("local", r["shape"].split("_")[0], "prefill",
+                                   "decode"):
+                    dom, tc, tm, tx = (rr["dominant"], rr["t_compute_s"],
+                                       rr["t_memory_s"], rr["t_collective_s"])
+                else:
+                    dom, tc, tm, tx = "", float("nan"), float("nan"), float("nan")
+                lines.append(
+                    f"| {r['arch']} | {r['shape']} | {step} | {arg:.2f} | "
+                    f"{temp:.2f} | {adj:.2f} | {fits} | {dom} | "
+                    f"{tc:.2e} | {tm:.2e} | {tx:.2e} |")
+        lines += ["", f"cells ok={n_ok} failed={n_fail}", ""]
+    Path(out).write_text("\n".join(lines))
+    print(f"wrote {out}")
+    print("\n".join(lines[:60]))
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -1,0 +1,55 @@
+"""Minimal dependency-free pytree checkpointing (npz + json treedef).
+
+Saves client states / server state / step for the training loop. Leaves are
+gathered to host (fine at the scales this container trains; a production TPU
+deployment would swap in per-shard async writes behind the same interface).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _to_np(x) -> np.ndarray:
+    # numpy has no native bfloat16: store as f32 (lossless widening); the
+    # loader casts back to the reference dtype.
+    if hasattr(x, "dtype") and x.dtype == jnp.bfloat16:
+        return np.asarray(x.astype(jnp.float32))
+    return np.asarray(x)
+
+
+def _flatten(tree) -> Tuple[Dict[str, np.ndarray], Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    arrays = {f"leaf_{i}": _to_np(x) for i, x in enumerate(leaves)}
+    return arrays, treedef
+
+
+def save_checkpoint(path, tree, step: int = 0) -> None:
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    arrays, treedef = _flatten(tree)
+    np.savez(str(path) + ".npz", **arrays)
+    meta = {"step": step, "treedef": str(treedef),
+            "n_leaves": len(arrays),
+            "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+            "shapes": {k: list(v.shape) for k, v in arrays.items()}}
+    Path(str(path) + ".json").write_text(json.dumps(meta))
+
+
+def load_checkpoint(path, like_tree) -> Tuple[Any, int]:
+    """Restore into the structure of ``like_tree`` (dtype/shape-checked)."""
+    data = np.load(str(path) + ".npz")
+    meta = json.loads(Path(str(path) + ".json").read_text())
+    leaves, treedef = jax.tree.flatten(like_tree)
+    assert len(leaves) == meta["n_leaves"], (len(leaves), meta["n_leaves"])
+    new = []
+    for i, ref in enumerate(leaves):
+        arr = data[f"leaf_{i}"]
+        assert tuple(arr.shape) == tuple(ref.shape), (i, arr.shape, ref.shape)
+        new.append(jnp.asarray(arr, dtype=ref.dtype))
+    return jax.tree.unflatten(treedef, new), meta["step"]

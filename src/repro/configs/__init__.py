@@ -1,0 +1,18 @@
+from repro.configs.base import (
+    ArchConfig,
+    EncoderConfig,
+    FedConfig,
+    INPUT_SHAPES,
+    MoEConfig,
+    ShapeConfig,
+    SSMConfig,
+    get_arch,
+    get_shape,
+    list_arch_ids,
+    reduced,
+)
+
+__all__ = [
+    "ArchConfig", "EncoderConfig", "FedConfig", "INPUT_SHAPES", "MoEConfig",
+    "ShapeConfig", "SSMConfig", "get_arch", "get_shape", "list_arch_ids", "reduced",
+]

@@ -1,0 +1,236 @@
+"""Config dataclasses + registry for architectures, input shapes, and federation.
+
+Every assigned architecture gets one module ``src/repro/configs/<id>.py`` (dashes
+mapped to underscores) exporting ``CONFIG: ArchConfig``. The registry below resolves
+``--arch <id>`` strings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+    # if >0, a shared (always-on) dense ffn of this width runs alongside experts
+    d_ff_shared: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int
+    expand: int = 2            # d_inner = expand * d_model
+    conv_width: int = 4
+    # mamba2 multi-head state layout
+    head_dim: int = 64
+    version: int = 1           # 1 = mamba1 (falcon-mamba), 2 = mamba2 (zamba2)
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderConfig:
+    """Encoder stack for enc-dec (whisper) architectures."""
+    n_layers: int
+    # frontends (conv/mel, ViT) are stubbed: input_specs provides embeddings.
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                # dense | moe | ssm | hybrid | encdec | vlm
+    source: str                # citation from the assignment
+    n_layers: int
+    d_model: int
+    n_heads: int               # 0 for attention-free
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    qkv_bias: bool = False
+    head_dim: int = 0          # 0 -> d_model // n_heads
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    encoder: Optional[EncoderConfig] = None
+    # hybrid: apply the shared attention block every `shared_attn_every` layers
+    shared_attn_every: int = 0
+    # sliding-window attention width used for the long_500k serve variant; dense
+    # archs fall back to this window there (see DESIGN.md §5).
+    long_context_window: int = 4096
+    # multimodal early-fusion stub: number of prefix positions replaced by
+    # precomputed patch/frame embeddings ([vlm]/[audio]/llama4 early fusion).
+    n_prefix_embeds: int = 0
+    # federated placement: "replica" (M = pods*data clients, full per-client copy)
+    # or "zero" (M = pods clients, state FSDP over data axis).
+    fed_mode: str = "replica"
+    dtype: str = "bfloat16"
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        assert self.n_heads > 0
+        return self.d_model // self.n_heads
+
+    @property
+    def attn_free(self) -> bool:
+        return self.family == "ssm"
+
+    def param_count(self) -> int:
+        """Approximate parameter count (for roofline MODEL_FLOPS)."""
+        d = self.d_model
+        n = 0
+        n += self.vocab * d            # embed
+        n += self.vocab * d + d        # head (untied) + final norm
+        attn = mlp = ssm = 0
+        if self.n_heads:
+            hd = self.resolved_head_dim
+            attn = (d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd
+                    + self.n_heads * hd * d + 2 * d)
+            if self.qkv_bias:
+                attn += (self.n_heads + 2 * self.n_kv_heads) * hd
+        if self.moe is not None:
+            e = self.moe
+            mlp = d * e.n_experts + e.n_experts * 3 * d * e.d_ff_expert
+            if e.d_ff_shared:
+                mlp += 3 * d * e.d_ff_shared
+        elif self.d_ff:
+            mlp = 3 * d * self.d_ff
+        if self.ssm is not None:
+            s = self.ssm
+            di = s.expand * d
+            # in_proj (x,z), conv, dt/B/C projections, out_proj (approx)
+            ssm = (2 * d * di + s.conv_width * di
+                   + di * s.state_dim * 2 + di + di * d)
+        if self.shared_attn_every:
+            # hybrid (zamba2-style): SSM per layer + ONE weight-tied attn+mlp block
+            n += ssm * self.n_layers + attn + mlp
+        elif self.family == "ssm":
+            n += ssm * self.n_layers
+        else:
+            n += (attn + mlp) * self.n_layers
+        if self.encoder is not None:
+            n += (attn + mlp) * self.encoder.n_layers
+        return n
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE discounts inactive experts)."""
+        if self.moe is None:
+            return self.param_count()
+        e = self.moe
+        inactive = (e.n_experts - e.top_k) * 3 * self.d_model * e.d_ff_expert
+        return self.param_count() - inactive * self.n_layers
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                  # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class FedConfig:
+    """AdaFBiO hyper-parameters (Algorithm 1)."""
+    q: int = 8                  # local steps between syncs
+    neumann_k: int = 8          # K in Eq. (15)
+    lr_x: float = 1e-3          # gamma
+    lr_y: float = 1e-2          # lambda
+    eta: float = 0.5            # eta_t (momentum interpolation); schedule in core
+    alpha_c1: float = 4.0       # alpha_{t+1} = c1 * eta_t^2
+    beta_c2: float = 4.0        # beta_{t+1}  = c2 * eta_t^2
+    rho: float = 1e-4           # adaptive-matrix regularizer
+    varrho: float = 0.9         # EMA for adaptive matrices
+    nu: float = 1e-3            # LL strong-convexity regularizer
+    theta: float = 1.0          # Neumann step (vartheta in paper, <= 1/L_g)
+    adaptive: str = "adam"      # adam | adabelief | none
+    eta_k: float = 1.0          # k in eta_t = k M^{1/3} / (n+t)^{1/3}
+    eta_n: float = 64.0         # n in the eta_t schedule
+    # UL (f) batch and Neumann batch sizes as fractions of the LL batch
+    ul_batch_frac: float = 0.125
+    neumann_batch: int = 1
+    # gradient-accumulation bound: sequences per microbatch per data shard
+    microbatch_per_shard: int = 1
+
+
+_ARCH_IDS = [
+    "whisper-tiny",
+    "zamba2-1.2b",
+    "qwen2.5-14b",
+    "internvl2-76b",
+    "qwen3-moe-30b-a3b",
+    "falcon-mamba-7b",
+    "deepseek-67b",
+    "granite-20b",
+    "llama4-scout-17b-a16e",
+    "qwen1.5-4b",
+]
+
+
+def _module_name(arch_id: str) -> str:
+    return arch_id.replace("-", "_").replace(".", "p")
+
+
+def list_arch_ids() -> Tuple[str, ...]:
+    return tuple(_ARCH_IDS)
+
+
+def get_arch(arch_id: str) -> ArchConfig:
+    if arch_id not in _ARCH_IDS:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {_ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{_module_name(arch_id)}")
+    return mod.CONFIG
+
+
+def get_shape(shape_id: str) -> ShapeConfig:
+    return INPUT_SHAPES[shape_id]
+
+
+def reduced(cfg: ArchConfig, **overrides) -> ArchConfig:
+    """A smoke-test-sized variant of the same family (<=2 layers, d_model<=512)."""
+    d = min(cfg.d_model, 256)
+    heads = min(cfg.n_heads, 4) if cfg.n_heads else 0
+    kv = min(cfg.n_kv_heads, heads) if heads else 0
+    if heads and cfg.n_kv_heads == cfg.n_heads:
+        kv = heads                           # keep MHA archs MHA
+    if heads and cfg.n_kv_heads == 1:
+        kv = 1                               # keep MQA archs MQA
+    changes = dict(
+        n_layers=2,
+        d_model=d,
+        n_heads=heads,
+        n_kv_heads=kv,
+        d_ff=min(cfg.d_ff, 512) if cfg.d_ff else 0,
+        vocab=min(cfg.vocab, 512),
+        head_dim=(d // heads if heads else 0),
+    )
+    if cfg.moe is not None:
+        changes["moe"] = dataclasses.replace(
+            cfg.moe, n_experts=4, top_k=min(cfg.moe.top_k, 2),
+            d_ff_expert=min(cfg.moe.d_ff_expert, 128),
+            d_ff_shared=min(cfg.moe.d_ff_shared, 128) if cfg.moe.d_ff_shared else 0)
+    if cfg.ssm is not None:
+        changes["ssm"] = dataclasses.replace(
+            cfg.ssm, state_dim=min(cfg.ssm.state_dim, 16),
+            head_dim=min(cfg.ssm.head_dim, 32))
+    if cfg.encoder is not None:
+        changes["encoder"] = EncoderConfig(n_layers=2)
+    if cfg.shared_attn_every:
+        changes["shared_attn_every"] = 2
+    if cfg.n_prefix_embeds:
+        changes["n_prefix_embeds"] = 8
+    changes.update(overrides)
+    return dataclasses.replace(cfg, **changes)

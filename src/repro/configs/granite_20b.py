@@ -1,0 +1,17 @@
+"""granite-20b [dense]: 52L d_model=6144 48H (GQA kv=1, MQA) d_ff=24576 vocab=49152 —
+llama-arch, code model. [arXiv:2405.04324]
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="granite-20b",
+    family="dense",
+    source="arXiv:2405.04324",
+    n_layers=52,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=1,
+    d_ff=24576,
+    vocab=49152,
+    fed_mode="zero",          # 28-30B + STORM + adaptive state: client = pod,
+)

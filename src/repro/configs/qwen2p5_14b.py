@@ -1,0 +1,18 @@
+"""qwen2.5-14b [dense]: 48L d_model=5120 40H (GQA kv=8) d_ff=13824 vocab=152064 —
+GQA with QKV bias. [hf:Qwen/Qwen2.5-0.5B]
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2.5-14b",
+    family="dense",
+    source="hf:Qwen/Qwen2.5-0.5B",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    d_ff=13824,
+    vocab=152064,
+    qkv_bias=True,
+    fed_mode="zero",  # 14.8B x (params+STORM+adaptive) exceeds a 16-client replica
+)

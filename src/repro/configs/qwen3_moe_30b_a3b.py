@@ -1,0 +1,18 @@
+"""qwen3-moe-30b-a3b [moe]: 48L d_model=2048 32H (GQA kv=4) d_ff=768 vocab=151936,
+MoE 128 experts top-8. [hf:Qwen/Qwen3-30B-A3B]
+"""
+from repro.configs.base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-moe-30b-a3b",
+    family="moe",
+    source="hf:Qwen/Qwen3-30B-A3B",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=4,
+    d_ff=0,                     # all-MoE MLPs
+    vocab=151936,
+    moe=MoEConfig(n_experts=128, top_k=8, d_ff_expert=768),
+    fed_mode="zero",          # 28-30B + STORM + adaptive state: client = pod,
+)

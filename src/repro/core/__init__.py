@@ -1,0 +1,17 @@
+"""The paper's primary contribution: adaptive federated bilevel optimization
+(AdaFBiO) — bilevel problem abstraction, stochastic Neumann hypergradient,
+STORM variance reduction, unified adaptive matrices, Algorithm 1 steps, and
+the Table-1 baselines."""
+from repro.core.bilevel import (BilevelProblem, lm_bilevel_problem,
+                                quadratic_bilevel_problem, quadratic_true_grad,
+                                softmax_xent)
+from repro.core.hypergrad import hypergrad_factored, hypergrad_fn
+from repro.core import adafbio, adaptive, baselines, tree_util
+# NOTE: the bare `hypergrad` function is intentionally NOT re-exported here —
+# it would shadow the `repro.core.hypergrad` submodule attribute.
+
+__all__ = [
+    "BilevelProblem", "lm_bilevel_problem", "quadratic_bilevel_problem",
+    "quadratic_true_grad", "softmax_xent", "hypergrad_factored",
+    "hypergrad_fn", "adafbio", "adaptive", "baselines", "tree_util",
+]

@@ -1,0 +1,145 @@
+"""AdaFBiO — Algorithm 1, as pure per-client/server step functions.
+
+State:
+  ClientState = {"x", "y", "v", "w"}       (per client m; leading M axis added
+                                            by the federated runtime)
+  ServerState = {"adaptive": {...}, "t": int32}  (replicated)
+
+One iteration t:
+  * if t % q != 0 (local step, lines 10-14 + 16-20):
+      x̂ = x − γ A⁻¹ w ; x⁺ = x + η_t (x̂ − x)      (== x − γ η_t A⁻¹ w, Eq. 14)
+      ŷ = y − λ B⁻¹ v ; y⁺ = y + η_t (ŷ − y)
+      draw ζ, ξ̄;  STORM refresh (Eqs. 10-11) with grads at (new, old) params
+  * if t % q == 0 (sync, lines 4-9): the runtime averages states across
+    clients, calls ``sync_update`` (adaptive regeneration + one server update),
+    and broadcasts.
+
+The paper's schedules: η_t = k·M^{1/3}/(n+t)^{1/3}, α_{t+1} = c1 η_t²,
+β_{t+1} = c2 η_t² (both clipped to (0, 1]).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FedConfig
+from repro.core import adaptive as ada
+from repro.core.bilevel import BilevelProblem
+from repro.core.hypergrad import hypergrad_fn
+from repro.core.tree_util import (tree_axpy, tree_match_dtypes, tree_scale,
+                                  tree_sub, tree_update, tree_zeros_like)
+
+
+# ------------------------------------------------------------------ schedules
+
+def eta_t(fed: FedConfig, t, m: int):
+    return fed.eta_k * (m ** (1 / 3)) / (fed.eta_n + t.astype(jnp.float32)) ** (1 / 3)
+
+
+def alpha_beta(fed: FedConfig, eta):
+    a = jnp.clip(fed.alpha_c1 * eta ** 2, 0.0, 1.0)
+    b = jnp.clip(fed.beta_c2 * eta ** 2, 0.0, 1.0)
+    return a, b
+
+
+# ------------------------------------------------------------------ init
+
+def init_client_state(problem: BilevelProblem, fed: FedConfig, xp, yp,
+                      batches, key) -> Dict[str, Any]:
+    """Line 2: initial estimators from a (mini-batched) sample."""
+    hg = hypergrad_fn(problem, fed.neumann_k, fed.theta)
+    grad_g_y = problem.grad_g_y or (
+        lambda xx, yy, bb: jax.grad(problem.g, argnums=1)(xx, yy, bb))
+    v = grad_g_y(xp, yp, batches.get("g", batches["g0"]))
+    w = hg(xp, yp, batches, key)
+    return {"x": xp, "y": yp, "v": v, "w": w}
+
+
+def init_server_state(x_like, fed: FedConfig) -> Dict[str, Any]:
+    return {"adaptive": ada.init_adaptive_state(x_like, fed.adaptive),
+            "t": jnp.int32(0)}
+
+
+def warm_adaptive(server: Dict[str, Any], avg_state: Dict[str, Any],
+                  fed: FedConfig) -> Dict[str, Any]:
+    """Line 2 of Algorithm 1: generate A_1, B_1 from the initial averaged
+    estimators (an a=0 start would make the first local phase take
+    lr/ρ-scale steps)."""
+    new = dict(server)
+    new["adaptive"] = ada.update_adaptive(
+        server["adaptive"], avg_state["w"], avg_state["v"],
+        kind=fed.adaptive, varrho=0.0)
+    return new
+
+
+# ------------------------------------------------------------------ steps
+
+def param_update(fed: FedConfig, adaptive_state, x, y, v, w, eta):
+    """Eqs. (12)-(14): adaptive-preconditioned interpolated update."""
+    dx = ada.precondition_x(adaptive_state, w, kind=fed.adaptive, rho=fed.rho)
+    dy = ada.precondition_y(adaptive_state, v, kind=fed.adaptive, rho=fed.rho)
+    x_new = tree_update(x, dx, fed.lr_x * eta)
+    y_new = tree_update(y, dy, fed.lr_y * eta)
+    return x_new, y_new
+
+
+def storm_refresh(problem: BilevelProblem, fed: FedConfig, state, x_new, y_new,
+                  batches, key, alpha, beta):
+    """Eqs. (10)-(11): same-sample gradients at new and old params."""
+    hg = hypergrad_fn(problem, fed.neumann_k, fed.theta)
+    k1, k2 = jax.random.split(key)
+    bg = batches.get("g", batches["g0"])        # ζ_{t+1}: the LL minibatch
+    grad_g_y = problem.grad_g_y or (
+        lambda xx, yy, bb: jax.grad(problem.g, argnums=1)(xx, yy, bb))
+    g_new = grad_g_y(x_new, y_new, bg)
+    # sequence the (new, old) evaluations so peak memory is max(), not sum()
+    x_old, y_old = jax.lax.optimization_barrier(
+        (state["x"], state["y"], g_new))[:2]
+    g_old = grad_g_y(x_old, y_old, bg)
+    v_new = tree_axpy(1.0 - alpha, tree_sub(state["v"], g_old), g_new)
+    w_hat_new = hg(x_new, y_new, batches, k1)
+    x_old2, y_old2 = jax.lax.optimization_barrier(
+        (state["x"], state["y"], w_hat_new))[:2]
+    w_hat_old = hg(x_old2, y_old2, batches, k1)   # same sample & same k
+    w_new = tree_axpy(1.0 - beta, tree_sub(state["w"], w_hat_old), w_hat_new)
+    v_new = tree_match_dtypes(v_new, state["v"])
+    w_new = tree_match_dtypes(w_new, state["w"])
+    if problem.constrain_x is not None:
+        w_new = problem.constrain_x(w_new)
+    if problem.constrain_y is not None:
+        v_new = problem.constrain_y(v_new)
+    return v_new, w_new
+
+
+def local_step(problem: BilevelProblem, fed: FedConfig, state: Dict[str, Any],
+               adaptive_state, batches, key, t, m: int) -> Dict[str, Any]:
+    """One asynchronous (no cross-client communication) iteration per client."""
+    eta = eta_t(fed, t, m)
+    alpha, beta = alpha_beta(fed, eta)
+    x_new, y_new = param_update(fed, adaptive_state, state["x"], state["y"],
+                                state["v"], state["w"], eta)
+    v_new, w_new = storm_refresh(problem, fed, state, x_new, y_new, batches,
+                                 key, alpha, beta)
+    return {"x": x_new, "y": y_new, "v": v_new, "w": w_new}
+
+
+def sync_update(fed: FedConfig, server: Dict[str, Any],
+                avg_state: Dict[str, Any], m: int) -> Tuple[Dict, Dict]:
+    """Server part of the sync step (lines 5-8): regenerate (A_t, B_t) from the
+    averaged estimators, then one preconditioned update on the averaged params.
+    Returns (new broadcastable client state, new server state).
+    """
+    t = server["t"]
+    adaptive_state = ada.update_adaptive(
+        server["adaptive"], avg_state["w"], avg_state["v"],
+        kind=fed.adaptive, varrho=fed.varrho)
+    eta = eta_t(fed, t, m)
+    x_new, y_new = param_update(fed, adaptive_state, avg_state["x"],
+                                avg_state["y"], avg_state["v"], avg_state["w"],
+                                eta)
+    new_client = {"x": x_new, "y": y_new, "v": avg_state["v"],
+                  "w": avg_state["w"]}
+    new_server = {"adaptive": adaptive_state, "t": t + 1}
+    return new_client, new_server

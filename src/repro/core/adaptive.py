@@ -1,0 +1,106 @@
+"""Unified adaptive matrices (paper Alg. 1 line 6, Eqs. (8)-(9), Assumption 6).
+
+The server generates, at every sync step, a diagonal matrix A_t for the UL
+variable x and a scalar matrix B_t = b_t·I for the LL variable y, from the
+*averaged* estimators (w̄, v̄). All clients then share (A_t, B_t) for the next
+q local steps. Variants:
+
+  adam      : a_t = ϱ a + (1−ϱ) w̄²,          A = diag(√a + ρ)       (line 6)
+  adabelief : a_t = ϱ a + (1−ϱ)(w̄ − w̄_prev)², A = diag(√a + ρ)     (Eq. 8)
+  amsgrad   : adam's a_t but A uses the running MAX (monotone precond.) —
+              the paper's framework admits any A_t ⪰ ρI; this instantiates
+              the local-AMSGrad-style choice referenced in Remark 3
+  adagrad   : a_t = a + w̄² (no EMA),          A = diag(√a + ρ)
+  none      : A = I, B = I                                      (Theorem 2)
+
+B_t: b_t = ϱ b + (1−ϱ)‖v̄‖ (line 6) / ‖v̄ − v̄_prev‖ (Eq. 9). A_t ⪰ ρI and
+ρ ≤ b_t ≤ b̂ hold by construction (Assumption 6).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tree_util import tree_norm, tree_zeros_like
+
+
+def init_adaptive_state(x_like, kind: str) -> Dict[str, Any]:
+    """``a`` inherits each param's dtype (bf16 accumulators at LLM scale keep
+    per-device state affordable; the paper-validation experiments use f32
+    params and therefore f32 accumulators — see DESIGN.md memory plan)."""
+    st = {"b": jnp.float32(0.0)}
+    if kind != "none":
+        st["a"] = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), x_like)
+    if kind == "adabelief":
+        st["w_prev"] = tree_zeros_like(st["a"])
+        st["v_norm_prev"] = jnp.float32(0.0)
+    if kind == "amsgrad":
+        st["a_max"] = tree_zeros_like(st["a"])
+    return st
+
+
+def update_adaptive(state: Dict[str, Any], w_bar, v_bar, *, kind: str,
+                    varrho: float, b_max: float = 1e3) -> Dict[str, Any]:
+    """Server-side regeneration at a sync step."""
+    new = dict(state)
+    vn = tree_norm(v_bar)
+    if kind == "adam":
+        new["a"] = jax.tree.map(
+            lambda a, w: (varrho * a.astype(jnp.float32)
+                          + (1 - varrho) * w.astype(jnp.float32) ** 2
+                          ).astype(a.dtype),
+            state["a"], w_bar)
+        new["b"] = jnp.minimum(varrho * state["b"] + (1 - varrho) * vn, b_max)
+    elif kind == "adabelief":
+        new["a"] = jax.tree.map(
+            lambda a, w, wp: (varrho * a.astype(jnp.float32)
+                              + (1 - varrho) * (w.astype(jnp.float32)
+                                                - wp.astype(jnp.float32)) ** 2
+                              ).astype(a.dtype),
+            state["a"], w_bar, state["w_prev"])
+        new["b"] = jnp.minimum(
+            varrho * state["b"]
+            + (1 - varrho) * jnp.abs(vn - state["v_norm_prev"]), b_max)
+        new["w_prev"] = jax.tree.map(
+            lambda w, wp: w.astype(wp.dtype), w_bar, state["w_prev"])
+        new["v_norm_prev"] = vn
+    elif kind == "amsgrad":
+        new["a"] = jax.tree.map(
+            lambda a, w: (varrho * a.astype(jnp.float32)
+                          + (1 - varrho) * w.astype(jnp.float32) ** 2
+                          ).astype(a.dtype),
+            state["a"], w_bar)
+        new["a_max"] = jax.tree.map(jnp.maximum, state["a_max"], new["a"])
+        new["b"] = jnp.minimum(varrho * state["b"] + (1 - varrho) * vn, b_max)
+    elif kind == "adagrad":
+        new["a"] = jax.tree.map(
+            lambda a, w: (a.astype(jnp.float32)
+                          + w.astype(jnp.float32) ** 2).astype(a.dtype),
+            state["a"], w_bar)
+        new["b"] = jnp.minimum(state["b"] + vn, b_max)
+    elif kind == "none":
+        new["b"] = jnp.float32(1.0)
+    else:
+        raise ValueError(kind)
+    return new
+
+
+def precondition_x(state, w, *, kind: str, rho: float):
+    """A_t^{-1} w (diagonal)."""
+    if kind == "none":
+        return w
+    acc = state["a_max"] if kind == "amsgrad" else state["a"]
+    return jax.tree.map(
+        lambda wi, a: (wi.astype(jnp.float32)
+                       / (jnp.sqrt(a.astype(jnp.float32)) + rho)).astype(wi.dtype),
+        w, acc)
+
+
+def precondition_y(state, v, *, kind: str, rho: float):
+    """B_t^{-1} v = v / (b_t + ρ)."""
+    if kind == "none":
+        return v
+    scale = 1.0 / (state["b"] + rho)
+    return jax.tree.map(lambda vi: (vi * scale).astype(vi.dtype), v)

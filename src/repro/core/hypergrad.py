@@ -1,0 +1,114 @@
+"""Stochastic Neumann-series hypergradient estimator (paper Eq. (15)).
+
+  ∇̂f(x,y; ξ̄) = ∇x f(x,y;ξ) − ∇²xy g(x,y;ζ₀) ·
+                 [ K·θ · Π_{i=1..k} (I − θ ∇²yy g(x,y;ζ_i)) ] · ∇y f(x,y;ξ)
+
+with k ~ U{0,…,K−1} drawn independently, θ ∈ (0, 1/L_g]. The bias against the
+true ∇̂f decays as (1−μ/L_g)^K (Lemma 3); tests verify both the closed-form
+K→∞ limit on the quadratic problem and the unbiasedness structure.
+
+Two implementations:
+  * ``hypergrad``           — paper-faithful, generic autodiff (grad-of-grad).
+  * ``hypergrad_factored``  — beyond-paper fast path exploiting the factored
+    LL structure (features cached; Neumann loop touches only the head). Exact
+    same estimator when the problem is factored; asserted equal in tests.
+
+``batches`` layout: {"f": ξ batch, "g0": ζ₀ batch, "gi": ζ_{1..K} batches with a
+leading K axis}.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bilevel import BilevelProblem
+from repro.core.tree_util import tree_axpy, tree_scale, tree_sub, tree_vdot
+
+
+def _hvp_yy(g, xp, yp, batch, u):
+    """(∇²yy g) u via jvp of grad."""
+    grad_y = lambda y: jax.grad(g, argnums=1)(xp, y, batch)
+    return jax.jvp(grad_y, (yp,), (u,))[1]
+
+
+def _mixed_xy(g, xp, yp, batch, u):
+    """(∇²xy g) u = ∇x ⟨∇y g(x,y), u⟩ (maps y-space -> x-space)."""
+    def inner(x):
+        gy = jax.grad(g, argnums=1)(x, yp, batch)
+        return tree_vdot(gy, u)
+    return jax.grad(inner)(xp)
+
+
+def _neumann(hvp, gy, k, K: int, theta: float):
+    """p = K·θ · Π_{i=1..k}(I − θ H_i) ∇y f, loop index selects batch ζ_i."""
+    def body(i, p):
+        return tree_axpy(-theta, hvp(i, p), p)          # p − θ H_i p
+    p = jax.lax.fori_loop(0, k, body, gy)
+    return tree_scale(p, K * theta)
+
+
+def sample_k(key, K: int):
+    return jax.random.randint(key, (), 0, K)
+
+
+def _grad_f_xy(problem, xp, yp, batch):
+    """(∇x f, ∇y f) in ONE backward (the paper computes them separately; the
+    joint VJP halves that cost), optionally microbatched by the problem."""
+    if problem.grad_f_xy is not None:
+        return problem.grad_f_xy(xp, yp, batch)
+    return jax.grad(problem.f, argnums=(0, 1))(xp, yp, batch)
+
+
+def hypergrad(problem: BilevelProblem, xp, yp, batches: Dict[str, Any],
+              key, K: int, theta: float):
+    """Paper-faithful estimator. Returns the x-space pytree w."""
+    k = sample_k(key, K)
+    gx, gy = _grad_f_xy(problem, xp, yp, batches["f"])
+
+    def hvp(i, p):
+        bi = jax.tree.map(lambda a: a[i], batches["gi"])
+        return _hvp_yy(problem.g, xp, yp, bi, p)
+
+    p = _neumann(hvp, gy, k, K, theta)
+    corr = _mixed_xy(problem.g, xp, yp, batches["g0"], p)
+    if problem.constrain_x is not None:
+        corr = problem.constrain_x(corr)
+    return tree_sub(gx, corr)
+
+
+def hypergrad_factored(problem: BilevelProblem, xp, yp, batches: Dict[str, Any],
+                       key, K: int, theta: float):
+    """Fast path: identical estimator; the Neumann ∇²yy products run against
+    cached features (LL depends on x only through features)."""
+    assert problem.factored
+    k = sample_k(key, K)
+    gx, gy = _grad_f_xy(problem, xp, yp, batches["f"])
+
+    # cache features for the K Neumann batches once (stop-grad: the loop is
+    # y-space only). Stored bf16: they are loop-invariant inputs of the
+    # Neumann fori_loop, so their dtype is a live-memory term.
+    feats_i = jax.vmap(lambda b: problem.features(xp, b))(batches["gi"])
+    feats_i = jax.lax.stop_gradient(
+        jax.tree.map(lambda a: a.astype(jnp.bfloat16) if a.dtype
+                     == jnp.float32 else a, feats_i))
+
+    def hvp(i, p):
+        fi = jax.tree.map(lambda a: a[i], feats_i)
+        bi = jax.tree.map(lambda a: a[i], batches["gi"])
+        grad_y = lambda y: jax.grad(problem.g_from_feats)(y, fi, bi)
+        return jax.jvp(grad_y, (yp,), (p,))[1]
+
+    p = _neumann(hvp, gy, k, K, theta)
+    corr = _mixed_xy(problem.g, xp, yp, batches["g0"], p)
+    if problem.constrain_x is not None:
+        corr = problem.constrain_x(corr)
+    return tree_sub(gx, corr)
+
+
+def hypergrad_fn(problem: BilevelProblem, K: int, theta: float,
+                 factored: bool = True):
+    impl = hypergrad_factored if (factored and problem.factored) else hypergrad
+    return lambda xp, yp, batches, key: impl(problem, xp, yp, batches, key,
+                                             K, theta)

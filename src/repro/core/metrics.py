@@ -1,0 +1,82 @@
+"""Analysis-quantity monitoring — the terms the paper's proof tracks.
+
+Theorem 1's Lyapunov function and the consensus lemmas (Lemmas 20-21) bound:
+
+  consensus error   (1/M) Σ_m ‖θ^m − θ̄‖²  for θ ∈ {x, y, v, w}
+                    (resets to 0 at every sync; grows ∝ q between syncs)
+  estimator drift   ‖v̄ − ∇y g(x̄,ȳ)‖, ‖w̄ − ∇̂f(x̄,ȳ)‖ (STORM tracking error)
+  LL optimality gap ‖ȳ − y*(x̄)‖ (when y* is computable)
+
+Watching these during a run is the practical counterpart of the convergence
+proof: if consensus error stops contracting at syncs, q is too large for the
+current learning rates (the (12kλq)³ M^{5/2} condition in Theorem 1).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bilevel import BilevelProblem
+from repro.core.tree_util import tree_mean_axis0, tree_sqnorm, tree_sub
+
+
+def consensus_error(states: Dict[str, Any]) -> Dict[str, jax.Array]:
+    """(1/M) Σ_m ‖θ^m − θ̄‖² per state field. States carry a leading M axis."""
+    avg = tree_mean_axis0(states)
+    out = {}
+    for field in ("x", "y", "v", "w"):
+        if field not in states:
+            continue
+        diffs = jax.tree.map(
+            lambda a, b: jnp.sum((a.astype(jnp.float32)
+                                  - b[None].astype(jnp.float32)) ** 2),
+            states[field], avg[field])
+        out[field] = jax.tree.reduce(jnp.add, diffs) / _m_of(states)
+    return out
+
+
+def _m_of(states) -> int:
+    return jax.tree.leaves(states)[0].shape[0]
+
+
+def estimator_drift(problem: BilevelProblem, states: Dict[str, Any],
+                    batches_avg) -> Dict[str, jax.Array]:
+    """‖v̄ − ∇y g(x̄,ȳ;ζ)‖ and (if cheap) the w̄ analogue on a probe batch."""
+    avg = tree_mean_axis0(states)
+    gy = jax.grad(problem.g, argnums=1)(avg["x"], avg["y"], batches_avg)
+    dv = tree_sub(avg["v"], gy)
+    return {"v_drift": jnp.sqrt(tree_sqnorm(dv)),
+            "v_norm": jnp.sqrt(tree_sqnorm(avg["v"])),
+            "w_norm": jnp.sqrt(tree_sqnorm(avg["w"]))}
+
+
+def lyapunov_terms(problem: BilevelProblem, states: Dict[str, Any],
+                   batches_avg, y_star_fn=None) -> Dict[str, jax.Array]:
+    """The measurable pieces of Theorem 1's Ω_t (F(x̄) + LL gap + drift)."""
+    avg = tree_mean_axis0(states)
+    out = {"F": problem.f(avg["x"], avg["y"], batches_avg)}
+    if y_star_fn is not None:
+        ys = y_star_fn(avg["x"], avg["y"])
+        gap = tree_sub(avg["y"], ys)
+        out["ll_gap_sq"] = tree_sqnorm(gap)
+    return out
+
+
+class MetricsLog:
+    """Tiny append-only metrics recorder used by the drivers."""
+
+    def __init__(self):
+        self.rows = []
+
+    def log(self, step: int, **scalars):
+        row = {"step": step}
+        row.update({k: float(v) for k, v in scalars.items()})
+        self.rows.append(row)
+
+    def column(self, key):
+        return [r.get(key) for r in self.rows]
+
+    def last(self):
+        return self.rows[-1] if self.rows else {}

@@ -1,0 +1,72 @@
+"""Pytree arithmetic helpers (params/gradients live as plain dict pytrees)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_axpy(s, a, b):
+    """s*a + b"""
+    return jax.tree.map(lambda x, y: s * x + y, a, b)
+
+
+def tree_update(params, direction, step):
+    """params - step * direction, computed in f32, cast back to each param's
+    dtype (prevents f32 step sizes from promoting bf16 params)."""
+    return jax.tree.map(
+        lambda p, d: (p.astype(jnp.float32)
+                      - step * d.astype(jnp.float32)).astype(p.dtype),
+        params, direction)
+
+
+def tree_match_dtypes(a, like):
+    return jax.tree.map(lambda x, r: x.astype(r.dtype), a, like)
+
+
+def tree_vdot(a, b):
+    leaves = jax.tree.map(
+        lambda x, y: jnp.vdot(x.astype(jnp.float32), y.astype(jnp.float32)), a, b)
+    return jax.tree.reduce(jnp.add, leaves, jnp.float32(0))
+
+
+def tree_sqnorm(a):
+    return tree_vdot(a, a)
+
+
+def tree_norm(a):
+    return jnp.sqrt(tree_sqnorm(a))
+
+
+def tree_zeros_like(a):
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_cast(a, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), a)
+
+
+def tree_mean_axis0(a):
+    """Mean over a leading (client) axis on every leaf."""
+    return jax.tree.map(lambda x: jnp.mean(x, axis=0), a)
+
+
+def tree_bcast_axis0(a, m: int):
+    """Broadcast every leaf to a leading axis of size m."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (m,) + x.shape), a)
+
+
+def tree_size(a) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(a))

@@ -1,0 +1,4 @@
+from repro.data.synthetic import FederatedLMData, make_client_batch
+from repro.data.hyperclean import HyperCleanData
+
+__all__ = ["FederatedLMData", "make_client_batch", "HyperCleanData"]

@@ -1,0 +1,6 @@
+from repro.fed.runtime import (FederatedTrainer, build_lm_problem_ctx,
+                               split_client_batch)
+from repro.fed.serve import build_serve_fns
+
+__all__ = ["FederatedTrainer", "build_lm_problem_ctx", "split_client_batch",
+           "build_serve_fns"]

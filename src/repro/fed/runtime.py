@@ -1,0 +1,299 @@
+"""Federated runtime: client state with a leading M axis mapped onto the mesh.
+
+Replica mode: M = pods x data rows; each client's tensors shard over `model`
+only. Zero mode: M = pods; client tensors additionally FSDP-shard over `data`.
+Local steps are vmapped per client with ``spmd_axis_name`` = the client mesh
+axes, so the compiled local step contains NO collectives over client axes (the
+paper's communication saving is structural, not scheduled). The sync step's
+client-mean lowers to all-reduces over the client axes — once per q steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, FedConfig, ShapeConfig
+from repro.core.baselines import Algorithm, make_algorithm
+from repro.core.bilevel import BilevelProblem, lm_bilevel_problem
+from repro.core.tree_util import tree_bcast_axis0, tree_mean_axis0
+from repro.models.model import ModelCtx, model_specs
+from repro.models.params import abstract_params, axes_tree, init_params
+from repro import sharding as shlib
+
+
+# ------------------------------------------------------------------ batches
+
+def split_client_batch(cfg: ArchConfig, b: Dict[str, jax.Array]) -> Dict[str, Any]:
+    """Per-client runtime inputs -> {'f','g0','gi'} batch dicts for the
+    hypergradient/STORM estimators."""
+    def pack(tokens, stub_key_prefix):
+        d = {"tokens": tokens}
+        if cfg.n_prefix_embeds and stub_key_prefix + "prefix_embeds" in b:
+            d["prefix_embeds"] = b[stub_key_prefix + "prefix_embeds"]
+        if cfg.family == "encdec":
+            d["enc_embeds"] = b[stub_key_prefix + "enc_embeds"]
+        return d
+
+    return {
+        "g": pack(b["tokens"], ""),                 # ζ: LL STORM sample (big)
+        "g0": pack(b["hyper0_tokens"], "hyper0_"),  # ζ₀: mixed ∇²xy term (small)
+        "f": pack(b["val_tokens"], "val_"),         # ξ: UL sample
+        "gi": pack(b["neumann_tokens"], "neumann_"),  # ζ₁..K: Neumann samples
+    }
+
+
+def client_batch_specs(cfg: ArchConfig, shape: ShapeConfig, m: int,
+                       fed: FedConfig) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """ShapeDtypeStructs + logical axes for one training step's inputs
+    (leading M axis included)."""
+    s = shape.seq_len
+    # Neumann / ζ₀ samples are independent draws; shorter sequences keep the
+    # K cached feature buffers and the second-order term cheap (DESIGN.md §3).
+    sn = max(s // 4, 64)
+    bg = max(shape.global_batch // m, 1)
+    bf = max(int(bg * fed.ul_batch_frac), 1)
+    bn = fed.neumann_batch
+    K = fed.neumann_k
+    d = cfg.d_model
+    tok = jnp.int32
+    emb = jnp.bfloat16
+    specs: Dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((m, bg, s), tok),
+        "val_tokens": jax.ShapeDtypeStruct((m, bf, s), tok),
+        "hyper0_tokens": jax.ShapeDtypeStruct((m, bn, sn), tok),
+        "neumann_tokens": jax.ShapeDtypeStruct((m, K, bn, sn), tok),
+    }
+    axes: Dict[str, Any] = {
+        "tokens": ("clients", "batch", None),
+        "val_tokens": ("clients", "batch", None),
+        "hyper0_tokens": ("clients", "batch", None),
+        "neumann_tokens": ("clients", None, "batch", None),
+    }
+    if cfg.n_prefix_embeds:
+        pfe = min(cfg.n_prefix_embeds, sn // 2)
+        specs.update({
+            "prefix_embeds": jax.ShapeDtypeStruct((m, bg, cfg.n_prefix_embeds, d), emb),
+            "val_prefix_embeds": jax.ShapeDtypeStruct((m, bf, cfg.n_prefix_embeds, d), emb),
+            "hyper0_prefix_embeds": jax.ShapeDtypeStruct((m, bn, pfe, d), emb),
+            "neumann_prefix_embeds": jax.ShapeDtypeStruct((m, K, bn, pfe, d), emb),
+        })
+        axes.update({
+            "prefix_embeds": ("clients", "batch", None, "act_embed"),
+            "val_prefix_embeds": ("clients", "batch", None, "act_embed"),
+            "hyper0_prefix_embeds": ("clients", "batch", None, "act_embed"),
+            "neumann_prefix_embeds": ("clients", None, "batch", None, "act_embed"),
+        })
+    if cfg.family == "encdec":
+        senc = s
+        senc_n = sn
+        for k, sd in (("tokens", s // 4), ("val_tokens", s // 4),
+                      ("hyper0_tokens", sn // 4), ("neumann_tokens", sn // 4)):
+            sh = specs[k].shape
+            specs[k] = jax.ShapeDtypeStruct(sh[:-1] + (max(sd, 8),), tok)
+        specs.update({
+            "enc_embeds": jax.ShapeDtypeStruct((m, bg, senc, d), emb),
+            "val_enc_embeds": jax.ShapeDtypeStruct((m, bf, senc, d), emb),
+            "hyper0_enc_embeds": jax.ShapeDtypeStruct((m, bn, senc_n, d), emb),
+            "neumann_enc_embeds": jax.ShapeDtypeStruct((m, K, bn, senc_n, d), emb),
+        })
+        axes.update({
+            "enc_embeds": ("clients", "batch", "seq", "act_embed"),
+            "val_enc_embeds": ("clients", "batch", "seq", "act_embed"),
+            "hyper0_enc_embeds": ("clients", "batch", "seq", "act_embed"),
+            "neumann_enc_embeds": ("clients", None, "batch", "seq", "act_embed"),
+        })
+    return specs, axes
+
+
+def build_lm_problem_ctx(cfg: ArchConfig, fed: FedConfig, rules,
+                         data_shards: int = 1) -> Tuple[BilevelProblem, ModelCtx]:
+    ctx = ModelCtx(rules=rules, kind="train")
+    mb = max(fed.microbatch_per_shard * data_shards, 1)
+    return lm_bilevel_problem(cfg, ctx, fed.nu, microbatch=mb), ctx
+
+
+# ------------------------------------------------------------------ trainer
+
+@dataclasses.dataclass
+class FederatedTrainer:
+    """Builds jitted local/sync/eval step functions for one (arch, mesh)."""
+    cfg: ArchConfig
+    fed: FedConfig
+    shape: ShapeConfig
+    mesh: Optional[Mesh] = None
+    algorithm: str = "adafbio"
+    problem: Optional[BilevelProblem] = None      # default: LM hyper-rep split
+
+    def __post_init__(self):
+        mesh = self.mesh
+        self.rules = shlib.train_rules(self.cfg, mesh) if mesh is not None else None
+        self.m = shlib.n_clients(mesh, self.cfg.fed_mode) if mesh is not None else 1
+        if self.problem is None:
+            # in zero mode the per-client batch is data-sharded: one microbatch
+            # spans data_shards sequences so each device sees microbatch_per_shard
+            data_shards = 1
+            if mesh is not None and self.cfg.fed_mode == "zero":
+                data_shards = dict(zip(mesh.axis_names,
+                                       mesh.devices.shape)).get("data", 1)
+            self.problem, self.ctx = build_lm_problem_ctx(
+                self.cfg, self.fed, self.rules, data_shards)
+        else:
+            self.ctx = ModelCtx(rules=self.rules, kind="train")
+        self.alg: Algorithm = make_algorithm(self.algorithm, self.fed,
+                                             self.problem)
+        self.specs = model_specs(self.cfg)
+        self._axes = axes_tree(self.specs)
+        self.client_axes_names = (shlib.client_axes(mesh, self.cfg.fed_mode)
+                                  if mesh is not None else ())
+
+    # -------------------------------------------------- state structure
+
+    def abstract_client_states(self):
+        p = abstract_params(self.specs, self.cfg.dtype)
+        one = {"x": p["x"], "y": p["y"], "v": p["y"], "w": p["x"]}
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((self.m,) + s.shape, s.dtype), one)
+
+    def client_state_axes(self):
+        ax = self._axes
+        one = {"x": ax["x"], "y": ax["y"], "v": ax["y"], "w": ax["x"]}
+        return jax.tree.map(lambda a: ("clients",) + a, one,
+                            is_leaf=lambda t: isinstance(t, tuple)
+                            and all(u is None or isinstance(u, str) for u in t))
+
+    def abstract_server_state(self):
+        xp = abstract_params(self.specs, self.cfg.dtype)["x"]
+        st = {"adaptive": {"b": jax.ShapeDtypeStruct((), jnp.float32)},
+              "t": jax.ShapeDtypeStruct((), jnp.int32)}
+        if self.fed.adaptive != "none":
+            st["adaptive"]["a"] = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), xp)
+        if self.fed.adaptive == "adabelief":
+            st["adaptive"]["w_prev"] = st["adaptive"]["a"]
+            st["adaptive"]["v_norm_prev"] = jax.ShapeDtypeStruct((), jnp.float32)
+        return st
+
+    def server_state_axes(self):
+        ax = self._axes["x"]
+        st = {"adaptive": {"b": ()}, "t": ()}
+        if self.fed.adaptive != "none":
+            st["adaptive"]["a"] = ax
+        if self.fed.adaptive == "adabelief":
+            st["adaptive"]["w_prev"] = ax
+            st["adaptive"]["v_norm_prev"] = ()
+        return st
+
+    # -------------------------------------------------- shardings
+
+    def _shardings(self, axes_pytree, shapes_pytree=None, fallback=()):
+        if self.mesh is None:
+            return None
+        return shlib.tree_shardings(axes_pytree, self.rules, self.mesh,
+                                    shapes_pytree, fallback)
+
+    def state_shardings(self):
+        return self._shardings(self.client_state_axes(),
+                               self.abstract_client_states(),
+                               fallback=("model",))
+
+    def server_shardings(self):
+        return self._shardings(self.server_state_axes(),
+                               self.abstract_server_state(),
+                               fallback=("model",))
+
+    def batch_shardings(self, batch_specs, batch_axes):
+        return self._shardings(batch_axes, batch_specs)
+
+    # -------------------------------------------------- step functions
+
+    def _vmap_clients(self, fn):
+        if self.client_axes_names:
+            name = (self.client_axes_names if len(self.client_axes_names) > 1
+                    else self.client_axes_names[0])
+            return jax.vmap(fn, spmd_axis_name=name)
+        return jax.vmap(fn)
+
+    def init_states(self, key, batch):
+        """Materialized init (CPU-scale usage)."""
+        def one_client(k, b):
+            params = init_params(self.specs, k, self.cfg.dtype)
+            batches = split_client_batch(self.cfg, b)
+            return self.alg.init_client_state(params["x"], params["y"],
+                                              batches, k)
+        keys = jax.random.split(key, self.m)
+        # all clients start from the same params (paper line 2): use key 0 for
+        # params, per-client keys for estimator samples
+        def one(k, b):
+            params = init_params(self.specs, jax.random.PRNGKey(0), self.cfg.dtype)
+            batches = split_client_batch(self.cfg, b)
+            return self.alg.init_client_state(params["x"], params["y"], batches, k)
+        states = self._vmap_clients(one)(keys, batch)
+        xp_like = jax.tree.map(lambda a: a[0], states["x"])
+        server = self.alg.init_server_state(xp_like)
+        if self.fed.adaptive != "none":
+            from repro.core.adafbio import warm_adaptive
+            server = warm_adaptive(server, tree_mean_axis0(states), self.fed)
+        return states, server
+
+    def local_step_fn(self) -> Callable:
+        def step(states, server, batch, key):
+            t = server["t"]
+            def one(state, b, i):
+                batches = split_client_batch(self.cfg, b)
+                k = jax.random.fold_in(jax.random.fold_in(key, i), t)
+                return self.alg.local_step(state, server["adaptive"], batches,
+                                           k, t, self.m)
+            ids = jnp.arange(self.m)
+            new_states = self._vmap_clients(one)(states, batch, ids)
+            new_server = dict(server)
+            new_server["t"] = t + 1
+            return new_states, new_server
+        return step
+
+    def sync_step_fn(self) -> Callable:
+        def step(states, server):
+            avg = tree_mean_axis0(states)
+            new_client, new_server = self.alg.sync_update(server, avg, self.m)
+            return tree_bcast_axis0(new_client, self.m), new_server
+        return step
+
+    def eval_fn(self) -> Callable:
+        """Mean UL loss f(x̄, ȳ) over the clients' val batches."""
+        def ev(states, batch):
+            avg = tree_mean_axis0(states)
+            def one(b):
+                batches = split_client_batch(self.cfg, b)
+                return self.problem.f(avg["x"], avg["y"], batches["f"])
+            return jnp.mean(jax.vmap(one)(batch))
+        return ev
+
+    # -------------------------------------------------- jit plumbing
+
+    def jitted(self, which: str, batch_specs=None, batch_axes=None,
+               donate: bool = True):
+        """jit with shardings; returns the (lowerable) compiled callable."""
+        ss = self.state_shardings()
+        sv = self.server_shardings()
+        if which == "local":
+            fn = self.local_step_fn()
+            in_sh = (ss, sv, self.batch_shardings(batch_specs, batch_axes),
+                     NamedSharding(self.mesh, P()) if self.mesh else None)
+            out_sh = (ss, sv)
+            dn = (0,) if donate else ()
+        elif which == "sync":
+            fn = self.sync_step_fn()
+            in_sh = (ss, sv)
+            out_sh = (ss, sv)
+            dn = (0,) if donate else ()
+        else:
+            raise ValueError(which)
+        if self.mesh is None:
+            return jax.jit(fn, donate_argnums=dn)
+        return jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                       donate_argnums=dn)

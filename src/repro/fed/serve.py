@@ -1,0 +1,113 @@
+"""Serving path: prefill + single-token decode for the (post-training) global
+model x̄, ȳ — no client axis. Used by the decode/prefill dry-run shapes and the
+serving example."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models.decode import cache_spec, decode_step, prefill
+from repro.models.model import ModelCtx, model_specs
+from repro.models.params import abstract_params, axes_tree
+from repro import sharding as shlib
+
+
+def serve_window(cfg: ArchConfig, shape: ShapeConfig) -> Optional[int]:
+    """long_500k: attention archs fall back to their sliding-window variant
+    (SSM/hybrid state is already O(1); hybrid's shared attention also windows)."""
+    if shape.seq_len > 65536 and cfg.family != "ssm":
+        return cfg.long_context_window
+    return None
+
+
+def serve_batch_specs(cfg: ArchConfig, shape: ShapeConfig,
+                      kind: str) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    b = shape.global_batch
+    s = shape.seq_len
+    d = cfg.d_model
+    specs: Dict[str, Any] = {}
+    axes: Dict[str, Any] = {}
+    if kind == "prefill":
+        sdec = max(s // 4, 8) if cfg.family == "encdec" else s
+        specs["tokens"] = jax.ShapeDtypeStruct((b, sdec), jnp.int32)
+        axes["tokens"] = ("batch", None)
+        if cfg.n_prefix_embeds:
+            specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_prefix_embeds, d), jnp.bfloat16)
+            axes["prefix_embeds"] = ("batch", None, "act_embed")
+        if cfg.family == "encdec":
+            specs["enc_embeds"] = jax.ShapeDtypeStruct((b, s, d), jnp.bfloat16)
+            axes["enc_embeds"] = ("batch", "seq", "act_embed")
+    else:
+        specs["token"] = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        axes["token"] = ("batch", None)
+    return specs, axes
+
+
+def serve_cache(cfg: ArchConfig, shape: ShapeConfig, kv_quant: bool = False):
+    window = serve_window(cfg, shape)
+    enc_len = shape.seq_len if cfg.family == "encdec" else 0
+    spec, axes = cache_spec(cfg, shape.global_batch, shape.seq_len,
+                            window=window, enc_len=enc_len, quant=kv_quant)
+    return spec, axes, window
+
+
+def build_serve_fns(cfg: ArchConfig, shape: ShapeConfig, mesh: Optional[Mesh],
+                    kv_quant: bool = False):
+    """Returns dict with jitted prefill_fn/decode_fn + abstract inputs for
+    lowering. Params are a single (client-free) model pytree."""
+    specs = model_specs(cfg)
+    p_axes = axes_tree(specs)
+    p_abs = abstract_params(specs, cfg.dtype)
+    cache_abs, cache_axes, window = serve_cache(cfg, shape, kv_quant)
+
+    kind = "prefill" if shape.kind == "prefill" else "decode"
+    rules = shlib.rules_for(cfg, mesh, kind) if mesh is not None else None
+    if rules is not None and shape.global_batch == 1:
+        rules = dict(rules)
+        rules["batch"] = None            # long_500k: nothing to shard on batch
+    ctx = ModelCtx(rules=rules, kind=kind, window=window)
+
+    def prefill_fn(params, batch, cache):
+        return prefill(cfg, params, batch, cache, ctx)
+
+    def decode_fn(params, cache, token, pos):
+        return decode_step(cfg, params, cache, token, pos, ctx)
+
+    out: Dict[str, Any] = {
+        "params_abs": p_abs,
+        "cache_abs": cache_abs,
+        "window": window,
+        "ctx": ctx,
+    }
+    batch_specs, batch_axes = serve_batch_specs(cfg, shape, kind)
+    out["batch_specs"] = batch_specs
+    if mesh is None:
+        out["prefill"] = jax.jit(prefill_fn)
+        out["decode"] = jax.jit(decode_fn)
+        return out
+
+    p_sh = shlib.tree_shardings(p_axes, rules, mesh, p_abs,
+                            fallback=("model",))
+    c_sh = shlib.tree_shardings(cache_axes, rules, mesh, cache_abs)
+    b_sh = shlib.tree_shardings(batch_axes, rules, mesh, batch_specs)
+    rep = NamedSharding(mesh, P())
+    if kind == "prefill":
+        out["prefill"] = jax.jit(
+            prefill_fn, in_shardings=(p_sh, b_sh, c_sh),
+            out_shardings=(NamedSharding(mesh, P()), c_sh))
+        out["in_abs"] = (p_abs, batch_specs, cache_abs)
+    else:
+        out["decode"] = jax.jit(
+            decode_fn, in_shardings=(p_sh, c_sh, b_sh["token"], rep),
+            out_shardings=(NamedSharding(mesh, P()), c_sh),
+            donate_argnums=(1,))
+        out["in_abs"] = (p_abs, cache_abs, batch_specs["token"],
+                         jax.ShapeDtypeStruct((), jnp.int32))
+    out["params_shardings"] = p_sh
+    out["cache_shardings"] = c_sh
+    return out

@@ -1,0 +1,51 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``use_pallas`` selects the kernel; on this CPU-only container kernels run in
+interpret mode (TPU is the compile target), so the default everywhere else in
+the framework is the jnp reference path — the kernels are validated
+against the oracles in tests/test_kernels.py and intended for the TPU build.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.mamba_scan import mamba_scan as _mamba
+from repro.kernels.storm_update import adafbio_update as _upd
+from repro.kernels.storm_update import storm_update as _storm
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "use_pallas",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=None, use_pallas=False,
+                    interpret=True):
+    if use_pallas:
+        return _flash(q, k, v, causal=causal, window=window,
+                      interpret=interpret)
+    return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def storm_update(g_new, g_old, est, beta, *, use_pallas=False, interpret=True):
+    if use_pallas:
+        return _storm(g_new, g_old, est, beta, interpret=interpret)
+    return ref.storm_update_ref(g_new, g_old, est, beta)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def adafbio_update(p, w, a, lr_eta, rho, *, use_pallas=False, interpret=True):
+    if use_pallas:
+        return _upd(p, w, a, lr_eta, rho, interpret=interpret)
+    return ref.adafbio_update_ref(p, w, a, lr_eta, rho)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def mamba_scan(x, dt, A, Bm, Cm, *, use_pallas=False, interpret=True):
+    if use_pallas:
+        return _mamba(x, dt, A, Bm, Cm, interpret=interpret)
+    return ref.mamba_scan_ref(x, dt, A, Bm, Cm)

@@ -1,0 +1,92 @@
+"""Pallas TPU fused-dequant decode attention (int8 KV cache).
+
+The memory-bound decode roofline term is HBM cache traffic; an int8 cache
+halves it — but only if dequantization happens HBM->VMEM inside the kernel
+(an XLA-level dequant materializes a bf16 copy and wins nothing). This kernel
+reads int8 K/V tiles + per-token scales into VMEM, dequantizes in-register,
+and runs the usual streaming-softmax decode attention.
+
+Grid = (B, KV); the sequence is tiled with a fori loop over VMEM blocks.
+Validated against ``ref.quant_decode_ref`` in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def quantize_kv(k: jax.Array):
+    """[...] bf16 -> (int8, f32 scale over the last dim)."""
+    kf = k.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(kf), axis=-1, keepdims=True) / 127.0 + 1e-8
+    q = jnp.clip(jnp.round(kf / scale), -127, 127).astype(jnp.int8)
+    return q, scale[..., 0]
+
+
+def _kernel(q_ref, k_ref, ks_ref, v_ref, vs_ref, pos_ref, o_ref, *,
+            smax: int, bs: int, g: int, dh: int):
+    # blocks: q [G,D]; k/v [S,D] int8; ks/vs [S]; o [G,D]
+    qv = q_ref[...].astype(jnp.float32) * dh ** -0.5       # [G, D]
+    pos = pos_ref[0]
+    m0 = jnp.full((g,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((g,), jnp.float32)
+    a0 = jnp.zeros((g, dh), jnp.float32)
+
+    def body(j, carry):
+        m, l, acc = carry
+        sl = pl.dslice(j * bs, bs)
+        k8 = pl.load(k_ref, (sl, slice(None))).astype(jnp.float32)
+        ks = pl.load(ks_ref, (sl,)).astype(jnp.float32)
+        kb = k8 * ks[:, None]                              # dequant in VMEM
+        s = jax.lax.dot_general(qv, kb, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # [G,bs]
+        slots = j * bs + jax.lax.iota(jnp.int32, bs)
+        s = jnp.where((slots < pos)[None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        v8 = pl.load(v_ref, (sl, slice(None))).astype(jnp.float32)
+        vs = pl.load(vs_ref, (sl,)).astype(jnp.float32)
+        vb = v8 * vs[:, None]
+        acc_new = acc * corr[:, None] + jax.lax.dot_general(
+            p, vb, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        return m_new, l * corr + p.sum(axis=1), acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, smax // bs, body, (m0, l0, a0))
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def quant_decode_attention(q: jax.Array, k8: jax.Array, k_scale: jax.Array,
+                           v8: jax.Array, v_scale: jax.Array, pos, *,
+                           block_s: int = 512, interpret: bool = False):
+    """q: [B,H,Dh] (one token); k8/v8: [B,KV,S,Dh] int8;
+    scales: [B,KV,S] f32; pos: scalar valid length. Returns [B,H,Dh]."""
+    b, h, dh = q.shape
+    kv, smax = k8.shape[1], k8.shape[2]
+    g = h // kv
+    bs = min(block_s, smax)
+    assert smax % bs == 0
+    q4 = q.reshape(b, kv, g, dh)
+    pos_arr = jnp.asarray([pos], jnp.int32)
+    kernel = functools.partial(_kernel, smax=smax, bs=bs, g=g, dh=dh)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, kv),
+        in_specs=[
+            pl.BlockSpec((None, None, g, dh), lambda bi, ki: (bi, ki, 0, 0)),
+            pl.BlockSpec((None, None, smax, dh), lambda bi, ki: (bi, ki, 0, 0)),
+            pl.BlockSpec((None, None, smax), lambda bi, ki: (bi, ki, 0)),
+            pl.BlockSpec((None, None, smax, dh), lambda bi, ki: (bi, ki, 0, 0)),
+            pl.BlockSpec((None, None, smax), lambda bi, ki: (bi, ki, 0)),
+            pl.BlockSpec((1,), lambda bi, ki: (0,)),
+        ],
+        out_specs=pl.BlockSpec((None, None, g, dh), lambda bi, ki: (bi, ki, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, dh), q.dtype),
+        interpret=interpret,
+    )(q4, k8, k_scale, v8, v_scale, pos_arr)
+    return out.reshape(b, h, dh)

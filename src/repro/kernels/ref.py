@@ -1,0 +1,89 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        window: Optional[int] = None) -> jax.Array:
+    """q: [B,H,Sq,D]; k,v: [B,KV,Sk,D] (unexpanded GQA). Returns [B,H,Sq,D]."""
+    b, h, sq, d = q.shape
+    kv = k.shape[1]
+    g = h // kv
+    q5 = q.reshape(b, kv, g, sq, d).astype(jnp.float32) * d ** -0.5
+    logits = jnp.einsum("bkgqd,bksd->bkgqs", q5, k.astype(jnp.float32))
+    sk = k.shape[2]
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    m = jnp.ones((sq, sk), bool)
+    if causal:
+        m &= kpos <= qpos
+    if window is not None:
+        m &= kpos > qpos - window
+    logits = jnp.where(m, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(b, h, sq, d).astype(q.dtype)
+
+
+def storm_update_ref(g_new: jax.Array, g_old: jax.Array, est: jax.Array,
+                     beta) -> jax.Array:
+    """STORM (Eqs. 10-11): est' = g_new + (1-beta) * (est - g_old)."""
+    f = jnp.float32
+    out = g_new.astype(f) + (1.0 - beta) * (est.astype(f) - g_old.astype(f))
+    return out.astype(est.dtype)
+
+
+def adafbio_update_ref(p: jax.Array, w: jax.Array, a: jax.Array,
+                       lr_eta, rho) -> jax.Array:
+    """Fused adaptive step (Eq. 14): p' = p - lr_eta * w / (sqrt(a) + rho)."""
+    f = jnp.float32
+    upd = w.astype(f) / (jnp.sqrt(a.astype(f)) + rho)
+    return (p.astype(f) - lr_eta * upd).astype(p.dtype)
+
+
+def quant_decode_ref(q: jax.Array, k8: jax.Array, k_scale: jax.Array,
+                     v8: jax.Array, v_scale: jax.Array, pos) -> jax.Array:
+    """Oracle for the fused-dequant decode kernel. q: [B,H,Dh];
+    k8/v8: [B,KV,S,Dh] int8; scales [B,KV,S]."""
+    b, h, dh = q.shape
+    kv, smax = k8.shape[1], k8.shape[2]
+    g = h // kv
+    kf = k8.astype(jnp.float32) * k_scale[..., None]
+    vf = v8.astype(jnp.float32) * v_scale[..., None]
+    q4 = q.reshape(b, kv, g, dh).astype(jnp.float32) * dh ** -0.5
+    logits = jnp.einsum("bkgd,bksd->bkgs", q4, kf)
+    valid = jnp.arange(smax) < pos
+    logits = jnp.where(valid[None, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgs,bksd->bkgd", p, vf)
+    return o.reshape(b, h, dh).astype(q.dtype)
+
+
+def mamba_scan_ref(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                   Cm: jax.Array, h0: Optional[jax.Array] = None):
+    """Selective scan (mamba1 core). x, dt: [B,S,Di]; A: [Di,N];
+    Bm, Cm: [B,S,N]. Returns (y [B,S,Di], h_last [B,Di,N]). All f32 math."""
+    b, s, di = x.shape
+    n = A.shape[-1]
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    Bf, Cf = Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((b, di, n), jnp.float32)
+
+    def step(h, t):
+        a = jnp.exp(dtf[:, t, :, None] * Af)                  # [B,Di,N]
+        bx = (dtf[:, t] * xf[:, t])[..., None] * Bf[:, t, None, :]
+        h = a * h + bx
+        y = jnp.einsum("bdn,bn->bd", h, Cf[:, t])
+        return h, y
+
+    h, ys = jax.lax.scan(step, h0, jnp.arange(s))
+    return ys.swapaxes(0, 1).astype(x.dtype), h

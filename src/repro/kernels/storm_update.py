@@ -1,0 +1,75 @@
+"""Pallas TPU fused elementwise kernels for the paper's update rules.
+
+These are the memory-bound hot spots of AdaFBiO: every local step touches
+every parameter 3x (STORM refresh Eqs. 10-11, adaptive precondition + param
+update Eq. 14). Fusing them into single-pass kernels halves HBM traffic vs
+the unfused jnp ops. 1-D blocking over the flattened parameter vector with
+VMEM tiles; lane-aligned (128) block sizes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _storm_kernel(gn_ref, go_ref, est_ref, beta_ref, out_ref):
+    beta = beta_ref[0]
+    gn = gn_ref[...].astype(jnp.float32)
+    go = go_ref[...].astype(jnp.float32)
+    est = est_ref[...].astype(jnp.float32)
+    out_ref[...] = (gn + (1.0 - beta) * (est - go)).astype(out_ref.dtype)
+
+
+def storm_update(g_new: jax.Array, g_old: jax.Array, est: jax.Array, beta,
+                 *, block: int = 65536, interpret: bool = False) -> jax.Array:
+    """est' = g_new + (1-beta)(est - g_old), single pass. 1-D inputs."""
+    (n,) = est.shape
+    blk = min(block, n)
+    assert n % blk == 0, (n, blk)
+    beta_arr = jnp.asarray([beta], jnp.float32)
+    return pl.pallas_call(
+        _storm_kernel,
+        grid=(n // blk,),
+        in_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), est.dtype),
+        interpret=interpret,
+    )(g_new, g_old, est, beta_arr)
+
+
+def _update_kernel(p_ref, w_ref, a_ref, s_ref, out_ref):
+    lr_eta, rho = s_ref[0], s_ref[1]
+    p = p_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    a = a_ref[...].astype(jnp.float32)
+    out_ref[...] = (p - lr_eta * w / (jnp.sqrt(a) + rho)).astype(out_ref.dtype)
+
+
+def adafbio_update(p: jax.Array, w: jax.Array, a: jax.Array, lr_eta, rho,
+                   *, block: int = 65536, interpret: bool = False) -> jax.Array:
+    """Fused Eq. (14): p' = p - lr_eta * A_t^{-1} w with A = diag(sqrt(a)+rho)."""
+    (n,) = p.shape
+    blk = min(block, n)
+    assert n % blk == 0, (n, blk)
+    s = jnp.asarray([lr_eta, rho], jnp.float32)
+    return pl.pallas_call(
+        _update_kernel,
+        grid=(n // blk,),
+        in_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), p.dtype),
+        interpret=interpret,
+    )(p, w, a, s)

@@ -1,0 +1,264 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count on first init). This module is the ONLY place the 512 placeholder
+# devices exist; tests/benchmarks see the real single CPU device.
+
+"""Multi-pod dry-run: .lower().compile() every (arch x input-shape x mesh)
+combination on the production meshes, record memory/cost/collective stats.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun [--arch a] [--shape s]
+      [--mesh single|multi|both] [--force] [--out results/dryrun]
+
+Results are cached per-cell as JSON; reruns skip finished cells.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import FedConfig, INPUT_SHAPES, get_arch, list_arch_ids
+from repro.fed.runtime import FederatedTrainer, client_batch_specs
+from repro.fed.serve import build_serve_fns
+from repro.launch.mesh import make_production_mesh
+
+COLLECTIVE_RE = re.compile(
+    r"^\s*%?\S+\s*=\s*\(?([a-z0-9]+)\[([0-9,]*)\][^ ]*\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)",
+)
+GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "bf16": 2, "f16": 2, "s16": 2,
+               "u16": 2, "f32": 4, "s32": 4, "u32": 4, "f64": 8, "s64": 8,
+               "u64": 8, "c64": 8}
+
+
+BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\([^)]*\)\s*->")
+
+
+def parse_collectives(hlo_text: str):
+    """Sum result bytes per collective type (+ approximate group sizes).
+
+    Also reports ``_in_loops_wire_bytes``: collectives that live inside
+    while-loop body computations (our scans over layers / microbatches) — the
+    roofline multiplies those by the trip count since the text shows one
+    iteration.
+    """
+    loop_bodies = set(BODY_RE.findall(hlo_text))
+    current = None
+    in_loop_wire = 0.0
+    out = {}
+    for line in hlo_text.splitlines():
+        comp = COMP_RE.match(line)
+        if comp and "=" not in line.split("(")[0]:
+            current = comp.group(1)
+        m = COLLECTIVE_RE.match(line)
+        if not m or "-done" in line.split("=", 1)[0]:
+            continue
+        dt, dims, op = m.groups()
+        nbytes = DTYPE_BYTES.get(dt, 4)
+        for d in dims.split(","):
+            if d.strip():
+                nbytes *= int(d)
+        g = GROUPS_RE.search(line)
+        gi = GROUPS_IOTA_RE.search(line)
+        if g:
+            gsize = len(g.group(1).split(","))
+        elif gi:
+            gsize = int(gi.group(2))
+        else:
+            gsize = 2
+        rec = out.setdefault(op, {"count": 0, "bytes": 0, "wire_bytes": 0})
+        rec["count"] += 1
+        rec["bytes"] += nbytes
+        in_body = current is not None and current in loop_bodies
+        # ring-model bytes on the wire per participating device
+        if op == "all-reduce":
+            wire = 2 * nbytes * (gsize - 1) / max(gsize, 1)
+        elif op == "all-gather":
+            wire = nbytes * (gsize - 1) / max(gsize, 1)
+        elif op == "reduce-scatter":
+            wire = nbytes * (gsize - 1)
+        elif op == "all-to-all":
+            wire = nbytes * (gsize - 1) / max(gsize, 1)
+        else:  # collective-permute
+            wire = nbytes
+        rec["wire_bytes"] += wire
+        if in_body:
+            in_loop_wire += wire
+    out["_in_loops_wire_bytes"] = in_loop_wire
+    return out
+
+
+UPCAST_RE = re.compile(
+    r"= f32\[([0-9,]+)\][^ ]*\s+convert\("
+    r"%(?:param|Arg|arg|get-tuple-element)[^,)]*\)")
+
+
+def cpu_f32_upcast_bytes(hlo_text: str) -> int:
+    """CPU-backend artifact: bf16 dot operands are upcast to f32 and the
+    converts of whole (loop-invariant) weight/cache stacks get hoisted,
+    creating f32 copies that a TPU build (native bf16 MXU) does not have.
+
+    Estimate: each DISTINCT converted shape is counted once (the same weight
+    stack re-converted in several loop bodies shares liveness in practice);
+    this is the number subtracted for "temp_bytes_tpu_adj" — a best-effort
+    TPU-equivalent reading, reported alongside the raw CPU number.
+    """
+    from collections import Counter
+    seen = Counter()
+    total = 0
+    for line in hlo_text.splitlines():
+        m = UPCAST_RE.search(line)
+        if not m:
+            continue
+        dims = m.group(1)
+        # liveness cap: at most TWO simultaneous f32 copies per shape (e.g.
+        # the K and V caches, or one fwd+bwd weight pair) — repeated converts
+        # of the same source across loop bodies share liveness.
+        if seen[dims] >= 2:
+            continue
+        n = 4
+        for d in dims.split(","):
+            n *= int(d)
+        if n >= 64 * 2**20:
+            seen[dims] += 1
+            total += n
+    return total
+
+
+def _mem_stats(compiled, hlo_text=None):
+    try:
+        ma = compiled.memory_analysis()
+        out = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "generated_code_bytes": int(ma.generated_code_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+        }
+        if hlo_text is not None:
+            upc = cpu_f32_upcast_bytes(hlo_text)
+            out["cpu_f32_upcast_bytes"] = upc
+            out["temp_bytes_tpu_adj"] = max(out["temp_bytes"] - upc, 0)
+        return out
+    except Exception as e:  # backend-dependent
+        return {"error": repr(e)}
+
+
+def _cost_stats(compiled):
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float)) and (
+                    "flops" in k or "bytes" in k or "utilization" not in k)}
+    except Exception as e:
+        return {"error": repr(e)}
+
+
+def lower_cell(arch_id: str, shape_id: str, multi_pod: bool):
+    cfg = get_arch(arch_id)
+    shape = INPUT_SHAPES[shape_id]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    fed = FedConfig()
+    rec = {"arch": arch_id, "shape": shape_id,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "fed_mode": cfg.fed_mode, "params": cfg.param_count(),
+           "active_params": cfg.active_param_count()}
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            tr = FederatedTrainer(cfg, fed, shape, mesh=mesh)
+            rec["n_clients"] = tr.m
+            bspecs, baxes = client_batch_specs(cfg, shape, tr.m, fed)
+            key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+            parts = {}
+            for which in ("local", "sync"):
+                fn = tr.jitted(which, bspecs, baxes, donate=False)
+                if which == "local":
+                    lowered = fn.lower(tr.abstract_client_states(),
+                                       tr.abstract_server_state(), bspecs, key)
+                else:
+                    lowered = fn.lower(tr.abstract_client_states(),
+                                       tr.abstract_server_state())
+                compiled = lowered.compile()
+                txt = compiled.as_text()
+                parts[which] = {
+                    "memory": _mem_stats(compiled, txt),
+                    "cost": _cost_stats(compiled),
+                    "collectives": parse_collectives(txt),
+                }
+            rec["steps"] = parts
+        else:
+            fns = build_serve_fns(cfg, shape, mesh)
+            fn = fns["prefill"] if shape.kind == "prefill" else fns["decode"]
+            lowered = fn.lower(*fns["in_abs"])
+            compiled = lowered.compile()
+            txt = compiled.as_text()
+            rec["steps"] = {shape.kind: {
+                "memory": _mem_stats(compiled, txt),
+                "cost": _cost_stats(compiled),
+                "collectives": parse_collectives(txt),
+                "window": fns["window"],
+            }}
+    rec["compile_seconds"] = round(time.time() - t0, 1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    archs = [args.arch] if args.arch else list(list_arch_ids())
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    n_ok = n_fail = n_skip = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                name = f"{arch}__{shape}__{'multi' if mp else 'single'}.json"
+                path = out / name
+                if path.exists() and not args.force:
+                    n_skip += 1
+                    continue
+                print(f"[dryrun] {name} ...", flush=True)
+                try:
+                    rec = lower_cell(arch, shape, mp)
+                    rec["ok"] = True
+                    n_ok += 1
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "multi" if mp else "single", "ok": False,
+                           "error": repr(e),
+                           "traceback": traceback.format_exc()[-4000:]}
+                    n_fail += 1
+                    print(f"  FAILED: {e!r}", flush=True)
+                path.write_text(json.dumps(rec, indent=1))
+                if rec.get("ok"):
+                    mems = {k: (v["memory"].get("argument_bytes", -1)
+                                + v["memory"].get("temp_bytes", 0)) / 2**30
+                            for k, v in rec["steps"].items()}
+                    print(f"  ok in {rec['compile_seconds']}s; arg-GiB/dev "
+                          f"{ {k: round(v,2) for k,v in mems.items()} }", flush=True)
+    print(f"[dryrun] done: ok={n_ok} fail={n_fail} skip={n_skip}")
+
+
+if __name__ == "__main__":
+    main()

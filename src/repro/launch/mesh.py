@@ -1,0 +1,18 @@
+"""Production mesh builders (functions, not module constants, so importing
+never touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """v5e: 16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """Whatever this host has (CPU smoke runs): data x model = (n, 1)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

@@ -1,0 +1,87 @@
+"""Training launcher: AdaFBiO (or any baseline) on an assigned architecture.
+
+CPU usage (this container):
+  PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-4b --reduced \
+      --steps 50 --seq 64 --batch 8
+
+On a real cluster the same entry point takes --mesh prod / prod-multi, which
+builds the 16x16 / 2x16x16 mesh and the full-size config.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.configs import FedConfig, get_arch, reduced
+from repro.configs.base import ShapeConfig
+from repro.data.synthetic import FederatedLMData, make_client_batch
+from repro.fed.runtime import FederatedTrainer, client_batch_specs
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--algorithm", default="adafbio")
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-size variant of the same family")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8, help="global batch")
+    ap.add_argument("--q", type=int, default=4)
+    ap.add_argument("--neumann-k", type=int, default=2)
+    ap.add_argument("--mesh", default="none", choices=["none", "local", "prod",
+                                                       "prod-multi"])
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--eval-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    mesh = {"none": None, "local": make_local_mesh,
+            "prod": make_production_mesh,
+            "prod-multi": lambda: make_production_mesh(multi_pod=True)}[args.mesh]
+    mesh = mesh() if callable(mesh) else mesh
+
+    fed = FedConfig(q=args.q, neumann_k=args.neumann_k, lr_x=1e-2, lr_y=1e-1)
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    tr = FederatedTrainer(cfg, fed, shape, mesh=mesh,
+                          algorithm=args.algorithm)
+    specs, axes = client_batch_specs(cfg, shape, tr.m, fed)
+    data = FederatedLMData(vocab=cfg.vocab, n_clients=tr.m)
+
+    key = jax.random.PRNGKey(0)
+    batch = make_client_batch(data, cfg, specs, 0)
+    states, server = tr.init_states(key, batch)
+    start = 0
+    if args.resume and args.ckpt:
+        (states, server), start = load_checkpoint(args.ckpt, (states, server))
+        print(f"resumed from step {start}")
+
+    local = jax.jit(tr.local_step_fn())
+    sync = jax.jit(tr.sync_step_fn())
+    ev = jax.jit(tr.eval_fn())
+
+    t0 = time.time()
+    for t in range(start, args.steps):
+        if t > 0 and t % fed.q == 0:
+            states, server = sync(states, server)
+        batch = make_client_batch(data, cfg, specs, t)
+        states, server = local(states, server, batch, key)
+        if t % args.eval_every == 0 or t == args.steps - 1:
+            loss = float(ev(states, batch))
+            print(f"step {t:5d}  f(x̄,ȳ) = {loss:.4f}  "
+                  f"({time.time()-t0:.1f}s)", flush=True)
+    if args.ckpt:
+        save_checkpoint(args.ckpt, (states, server), args.steps)
+        print(f"saved checkpoint to {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+from repro.models.model import (ModelCtx, features, forward, head_logits,
+                                model_specs)
+from repro.models.decode import cache_spec, decode_step, init_cache, prefill
+from repro.models.params import (abstract_params, axes_tree, init_params,
+                                 param_count)
+
+__all__ = [
+    "ModelCtx", "features", "forward", "head_logits", "model_specs",
+    "cache_spec", "decode_step", "init_cache", "prefill",
+    "abstract_params", "axes_tree", "init_params", "param_count",
+]

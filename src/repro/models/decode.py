@@ -1,0 +1,391 @@
+"""Serving paths: prefill (build cache) + single-token decode against a cache.
+
+Cache layouts (leading dim scans over layers):
+  dense/moe/vlm : {"k","v": [L,B,W,KV,Dh]}            W = window (ring) or max_len
+  ssm           : {"h": [L,B,di,N] f32, "conv": [L,B,cw-1,di]}
+  hybrid        : mamba2 state + shared-attn KV [nseg,B,W,KV,Dh]
+  encdec        : self KV [L,...] + cross KV [L,B,Senc,KV,Dh] (built at prefill)
+
+``pos`` is the number of tokens already in the cache; RoPE uses absolute
+positions, so ring buffers (sliding window) stay correct without rotation.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_lib
+from repro.models import ssm as ssm_lib
+from repro.models.model import (ModelCtx, _mlp_block, embed_tokens,
+                                encoder_forward, head_logits, rmsnorm)
+
+
+# ------------------------------------------------------------------ cache init
+
+def cache_spec(cfg: ArchConfig, batch: int, max_len: int,
+               window: Optional[int] = None, enc_len: int = 0,
+               dtype=jnp.bfloat16,
+               quant: bool = False) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """Returns (ShapeDtypeStruct pytree, logical-axes pytree).
+
+    ``quant=True``: int8 K/V with per-(token, head) f32 scales — halves the
+    cache's HBM footprint/traffic; dequantization is fused HBM->VMEM by
+    ``kernels.quant_decode`` on TPU (the XLA reference path dequantizes one
+    layer slice at a time inside the scan)."""
+    L = cfg.n_layers
+    hd = cfg.resolved_head_dim if cfg.n_heads else 0
+    w = min(window or max_len, max_len)
+    spec: Dict[str, Any] = {}
+    axes: Dict[str, Any] = {}
+    kv_ax = ("layers", "batch", "cache_seq", "kv_heads", "head_dim")
+    kv_dtype = jnp.int8 if quant else dtype
+
+    def sds(shape, dt=dtype):
+        return jax.ShapeDtypeStruct(shape, dt)
+
+    fam = cfg.family
+    if fam in ("dense", "vlm", "moe", "encdec"):
+        kvs = (L, batch, w, cfg.n_kv_heads, hd)
+        spec["k"], spec["v"] = sds(kvs, kv_dtype), sds(kvs, kv_dtype)
+        axes["k"] = axes["v"] = kv_ax
+        if quant:
+            scs = (L, batch, w, cfg.n_kv_heads)
+            spec["k_scale"] = sds(scs, jnp.float32)
+            spec["v_scale"] = sds(scs, jnp.float32)
+            axes["k_scale"] = axes["v_scale"] = kv_ax[:-1]
+    if fam == "encdec":
+        ckvs = (L, batch, enc_len, cfg.n_kv_heads, hd)
+        spec["ck"], spec["cv"] = sds(ckvs), sds(ckvs)
+        axes["ck"] = axes["cv"] = kv_ax
+    if fam in ("ssm", "hybrid"):
+        s = cfg.ssm
+        di = s.expand * cfg.d_model
+        if s.version == 1:
+            spec["h"] = sds((L, batch, di, s.state_dim), jnp.float32)
+            axes["h"] = ("layers", "batch", "ssm_inner", "ssm_state")
+            conv_ch = di
+        else:
+            nh = di // s.head_dim
+            spec["h"] = sds((L, batch, nh, s.head_dim, s.state_dim), jnp.float32)
+            axes["h"] = ("layers", "batch", "ssm_inner", None, "ssm_state")
+            conv_ch = di + 2 * s.state_dim
+        spec["conv"] = sds((L, batch, s.conv_width - 1, conv_ch))
+        axes["conv"] = ("layers", "batch", None, "ssm_inner")
+    if fam == "hybrid":
+        nseg = cfg.n_layers // cfg.shared_attn_every
+        kvs = (max(nseg, 1), batch, w, cfg.n_kv_heads, hd)
+        spec["k"], spec["v"] = sds(kvs), sds(kvs)
+        axes["k"] = axes["v"] = kv_ax
+    return spec, axes
+
+
+def init_cache(cfg, batch, max_len, window=None, enc_len=0, dtype=jnp.bfloat16,
+               quant=False):
+    spec, _ = cache_spec(cfg, batch, max_len, window, enc_len, dtype, quant)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+
+
+# ------------------------------------------------------------------ helpers
+
+def _qkv(cfg, p, hn, prefix=""):
+    q = jnp.einsum("bsd,dhk->bshk", hn, p[prefix + "wq"])
+    k = jnp.einsum("bsd,dhk->bshk", hn, p[prefix + "wk"])
+    v = jnp.einsum("bsd,dhk->bshk", hn, p[prefix + "wv"])
+    if cfg.qkv_bias and (prefix + "bq") in p:
+        q, k, v = q + p[prefix + "bq"], k + p[prefix + "bk"], v + p[prefix + "bv"]
+    return q, k, v
+
+
+def _attn_decode_block(cfg, p, h, ck, cv, pos, window, prefix="",
+                       scales=None):
+    """One-token self-attention vs cache. h: [B,1,d]. Returns h', new (ck, cv)
+    [, new scales]. ``scales``: (k_scale, v_scale) when the cache is int8."""
+    from repro.kernels.quant_decode import quantize_kv
+    w = ck.shape[1]
+    hn = rmsnorm(h, p[prefix + "ln_attn"], cfg.norm_eps)
+    q, k, v = _qkv(cfg, p, hn, prefix)
+    posv = jnp.full((1,), pos, jnp.int32)
+    q = attn_lib.rope(q, posv[None], cfg.rope_theta)
+    k = attn_lib.rope(k, posv[None], cfg.rope_theta)
+    slot = pos % w if window else jnp.minimum(pos, w - 1)
+    if scales is not None:
+        ks, vs = scales
+        k8, ksc = quantize_kv(k)
+        v8, vsc = quantize_kv(v)
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k8, slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v8, slot, axis=1)
+        ks = jax.lax.dynamic_update_slice_in_dim(ks, ksc, slot, axis=1)
+        vs = jax.lax.dynamic_update_slice_in_dim(vs, vsc, slot, axis=1)
+        # XLA path: dequantize this layer's slice (transient); the TPU build
+        # fuses dequant HBM->VMEM via kernels.quant_decode.
+        kd = (ck.astype(jnp.float32) * ks[..., None]).astype(k.dtype)
+        vd = (cv.astype(jnp.float32) * vs[..., None]).astype(v.dtype)
+        o = attn_lib.attend_decode(q, kd, vd, pos=pos + 1,
+                                   ring=window is not None)
+        out = jnp.einsum("bshk,hkd->bsd", o, p[prefix + "wo"])
+        return h + out, ck, cv, (ks, vs)
+    ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), slot, axis=1)
+    o = attn_lib.attend_decode(q, ck, cv, pos=pos + 1, ring=window is not None)
+    out = jnp.einsum("bshk,hkd->bsd", o, p[prefix + "wo"])
+    return h + out, ck, cv
+
+
+def _cross_decode_block(cfg, p, h, ck, cv, enc_len):
+    hn = rmsnorm(h, p["cln_attn"], cfg.norm_eps)
+    q, _, _ = _qkv(cfg, p, hn, "c")
+    o = attn_lib.attend_decode(q, ck, cv, pos=enc_len)
+    return h + jnp.einsum("bshk,hkd->bsd", o, p["cwo"])
+
+
+def _fill_ring(k_seq, w, window):
+    """[B,S,KV,Dh] -> ring buffer [B,w,KV,Dh] holding the last w positions at
+    slot = pos % w (window) or the first w positions (full cache)."""
+    s = k_seq.shape[1]
+    if not window or s <= w:
+        pad = w - min(s, w)
+        out = k_seq[:, :w]
+        if pad:
+            out = jnp.pad(out, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return out
+    tail = k_seq[:, -w:]                             # positions s-w .. s-1
+    slots = (jnp.arange(s - w, s)) % w
+    buf = jnp.zeros((k_seq.shape[0], w) + k_seq.shape[2:], k_seq.dtype)
+    return buf.at[:, slots].set(tail)
+
+
+# ------------------------------------------------------------------ prefill
+
+def prefill(cfg: ArchConfig, params, batch, cache, ctx: ModelCtx):
+    """Run the prompt, fill the cache. Returns (last-position logits, cache)."""
+    xp, yp = params["x"], params["y"]
+    tokens = batch["tokens"]
+    b, S = tokens.shape
+    pos = jnp.arange(S)
+    h = embed_tokens(cfg, xp, tokens, batch.get("prefix_embeds"))
+    fam = cfg.family
+    w = cache["k"].shape[2] if "k" in cache else 0
+    window = ctx.window
+
+    if fam in ("dense", "vlm", "moe", "encdec"):
+        enc_out = None
+        if fam == "encdec":
+            enc_out = encoder_forward(cfg, xp, batch["enc_embeds"], ctx)
+
+        def body(carry, lp):
+            hh = carry
+            lp = jax.lax.optimization_barrier(lp)   # see model._scan_layers
+            hn = rmsnorm(hh, lp["ln_attn"], cfg.norm_eps)
+            q, k, v = _qkv(cfg, lp, hn)
+            q = attn_lib.rope(q, pos, cfg.rope_theta)
+            k = attn_lib.rope(k, pos, cfg.rope_theta)
+            if ctx.kind == "prefill" and S > 4096:
+                o = attn_lib.attend_flash(q, k, v, causal=True, window=window,
+                                          chunk=ctx.attn_chunk)
+            else:
+                o = attn_lib.attend_full(q, k, v, causal=True, window=window)
+            hh = hh + jnp.einsum("bshk,hkd->bsd", o, lp["wo"])
+            ys = {"k": _fill_ring(k, w, window), "v": _fill_ring(v, w, window)}
+            if fam == "encdec":
+                hn2 = rmsnorm(hh, lp["cln_attn"], cfg.norm_eps)
+                cq = jnp.einsum("bsd,dhk->bshk", hn2, lp["cwq"])
+                ck = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cwk"])
+                cv = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cwv"])
+                if ck.shape[1] > ctx.attn_chunk:
+                    o2 = attn_lib.attend_flash(cq, ck, cv, causal=False,
+                                               chunk=ctx.attn_chunk)
+                else:
+                    o2 = attn_lib.attend_full(cq, ck, cv, causal=False)
+                hh = hh + jnp.einsum("bshk,hkd->bsd", o2, lp["cwo"])
+                ys["ck"], ys["cv"] = ck.astype(cache["ck"].dtype), \
+                    cv.astype(cache["cv"].dtype)
+            hh = _mlp_block(cfg, lp, hh, ctx)
+            return hh, jax.tree.map(lambda a: a, ys)
+
+        h, ys = jax.lax.scan(body, h, xp["layers"])
+        cache = dict(cache)
+        cache["k"] = ys["k"].astype(cache["k"].dtype)
+        cache["v"] = ys["v"].astype(cache["v"].dtype)
+        if fam == "encdec":
+            cache["ck"], cache["cv"] = ys["ck"], ys["cv"]
+
+    elif fam == "ssm":
+        def body(carry, lp):
+            lp = jax.lax.optimization_barrier(lp)   # see model._scan_layers
+            hn = rmsnorm(carry, lp["ln"], cfg.norm_eps)
+            y, (hst, conv) = ssm_lib.mamba1_seq(cfg, lp, hn, chunk=ctx.ssm_chunk)
+            return carry + y, {"h": hst, "conv": conv}
+        h, ys = jax.lax.scan(body, h, xp["layers"])
+        cache = {"h": ys["h"], "conv": ys["conv"].astype(cache["conv"].dtype)}
+
+    elif fam == "hybrid":
+        h, cache = _hybrid_prefill(cfg, xp, h, cache, ctx, pos, w, window)
+    else:
+        raise ValueError(fam)
+
+    logits = head_logits(cfg, yp, h[:, -1:])
+    return logits, cache
+
+
+def _hybrid_prefill(cfg, xp, h, cache, ctx, pos, w, window):
+    every = cfg.shared_attn_every
+    nseg, rem = divmod(cfg.n_layers, every)
+    layers = xp["layers"]
+
+    def mamba_body(carry, lp):
+        hn = rmsnorm(carry, lp["ln"], cfg.norm_eps)
+        y, (hst, conv) = ssm_lib.mamba2_seq(cfg, lp, hn, chunk=ctx.ssm_chunk)
+        return carry + y, {"h": hst, "conv": conv}
+
+    def seg_body(carry, seg_params):
+        hh, ys = jax.lax.scan(mamba_body, carry, seg_params)
+        hn = rmsnorm(hh, xp["shared"]["ln_attn"], cfg.norm_eps)
+        q, k, v = _qkv(cfg, xp["shared"], hn)
+        q = attn_lib.rope(q, pos, cfg.rope_theta)
+        k = attn_lib.rope(k, pos, cfg.rope_theta)
+        if k.shape[1] > ctx.attn_chunk:
+            o = attn_lib.attend_flash(q, k, v, causal=True, window=window,
+                                      chunk=ctx.attn_chunk)
+        else:
+            o = attn_lib.attend_full(q, k, v, causal=True, window=window)
+        hh = hh + jnp.einsum("bshk,hkd->bsd", o, xp["shared"]["wo"])
+        hh = _mlp_block(cfg, xp["shared"], hh, ctx)
+        ys.update({"k": _fill_ring(k, w, window), "v": _fill_ring(v, w, window)})
+        return hh, ys
+
+    states_h, states_c = [], []
+    ks, vs = [], []
+    if nseg:
+        seg_stack = jax.tree.map(
+            lambda a: a[: nseg * every].reshape((nseg, every) + a.shape[1:]),
+            layers)
+        h, ys = jax.lax.scan(seg_body, h, seg_stack)
+        states_h.append(ys["h"].reshape((-1,) + ys["h"].shape[2:]))
+        states_c.append(ys["conv"].reshape((-1,) + ys["conv"].shape[2:]))
+        ks.append(ys["k"])
+        vs.append(ys["v"])
+    if rem:
+        tail = jax.tree.map(lambda a: a[nseg * every:], layers)
+        h, ys = jax.lax.scan(mamba_body, h, tail)
+        states_h.append(ys["h"])
+        states_c.append(ys["conv"])
+    new = dict(cache)
+    new["h"] = jnp.concatenate(states_h, 0)
+    new["conv"] = jnp.concatenate(states_c, 0).astype(cache["conv"].dtype)
+    if ks:
+        new["k"] = ks[0].astype(cache["k"].dtype)
+        new["v"] = vs[0].astype(cache["v"].dtype)
+    return h, new
+
+
+# ------------------------------------------------------------------ decode
+
+def decode_step(cfg: ArchConfig, params, cache, token, pos, ctx: ModelCtx):
+    """token: [B,1] int32; pos: scalar int32 (tokens already cached).
+    Returns (logits [B,1,V], new cache)."""
+    xp, yp = params["x"], params["y"]
+    h = jnp.take(xp["embed"], token, axis=0)
+    fam = cfg.family
+    window = ctx.window
+    new = dict(cache)
+
+    if fam in ("dense", "vlm", "moe", "encdec"):
+        enc_len = cache["ck"].shape[2] if fam == "encdec" else 0
+
+        quant = "k_scale" in cache
+
+        def body(carry, xs):
+            xs = jax.lax.optimization_barrier(xs)   # see model._scan_layers
+            lp = xs["p"]
+            if quant:
+                hh, ck, cv, (ks, vs) = _attn_decode_block(
+                    cfg, lp, carry, xs["k"], xs["v"], pos, window,
+                    scales=(xs["ks"], xs["vs"]))
+                ys = {"k": ck, "v": cv, "ks": ks, "vs": vs}
+            else:
+                hh, ck, cv = _attn_decode_block(cfg, lp, carry, xs["k"],
+                                                xs["v"], pos, window)
+                ys = {"k": ck, "v": cv}
+            if fam == "encdec":
+                hh = _cross_decode_block(cfg, lp, hh, xs["ck"], xs["cv"], enc_len)
+            hh = _mlp_block(cfg, lp, hh, ctx)
+            return hh, ys
+
+        xs = {"p": xp["layers"], "k": cache["k"], "v": cache["v"]}
+        if quant:
+            xs["ks"], xs["vs"] = cache["k_scale"], cache["v_scale"]
+        if fam == "encdec":
+            xs["ck"], xs["cv"] = cache["ck"], cache["cv"]
+        h, ys = jax.lax.scan(body, h, xs)
+        new["k"], new["v"] = ys["k"], ys["v"]
+        if quant:
+            new["k_scale"], new["v_scale"] = ys["ks"], ys["vs"]
+
+    elif fam == "ssm":
+        def body(carry, xs):
+            xs = jax.lax.optimization_barrier(xs)   # see model._scan_layers
+            hn = rmsnorm(carry, xs["p"]["ln"], cfg.norm_eps)
+            y, (hst, conv) = ssm_lib.mamba1_decode(cfg, xs["p"], hn, xs["h"],
+                                                   xs["conv"])
+            return carry + y, {"h": hst, "conv": conv}
+        h, ys = jax.lax.scan(body, h, {"p": xp["layers"], "h": cache["h"],
+                                       "conv": cache["conv"]})
+        new["h"], new["conv"] = ys["h"], ys["conv"]
+
+    elif fam == "hybrid":
+        h, new = _hybrid_decode(cfg, xp, h, cache, pos, window, ctx)
+    else:
+        raise ValueError(fam)
+
+    return head_logits(cfg, yp, h), new
+
+
+def _hybrid_decode(cfg, xp, h, cache, pos, window, ctx):
+    every = cfg.shared_attn_every
+    nseg, rem = divmod(cfg.n_layers, every)
+
+    def mamba_body(carry, xs):
+        hn = rmsnorm(carry, xs["p"]["ln"], cfg.norm_eps)
+        y, (hst, conv) = ssm_lib.mamba2_decode(cfg, xs["p"], hn, xs["h"],
+                                               xs["conv"])
+        return carry + y, {"h": hst, "conv": conv}
+
+    def seg_body(carry, xs):
+        hh, ys = jax.lax.scan(mamba_body, carry, xs["m"])
+        hh, ck, cv = _attn_decode_block(cfg, xp["shared"], hh, xs["k"], xs["v"],
+                                        pos, window)
+        hh = _mlp_block(cfg, xp["shared"], hh, ctx)
+        ys.update({"k": ck, "v": cv})
+        return hh, ys
+
+    layers = xp["layers"]
+    new = dict(cache)
+    hs, cs = [], []
+    if nseg:
+        seg_m = jax.tree.map(
+            lambda a: a[: nseg * every].reshape((nseg, every) + a.shape[1:]),
+            layers)
+        mstate = {
+            "p": seg_m,
+            "h": cache["h"][: nseg * every].reshape(
+                (nseg, every) + cache["h"].shape[1:]),
+            "conv": cache["conv"][: nseg * every].reshape(
+                (nseg, every) + cache["conv"].shape[1:]),
+        }
+        h, ys = jax.lax.scan(seg_body, h,
+                             {"m": mstate, "k": cache["k"], "v": cache["v"]})
+        hs.append(ys["h"].reshape((-1,) + ys["h"].shape[2:]))
+        cs.append(ys["conv"].reshape((-1,) + ys["conv"].shape[2:]))
+        new["k"], new["v"] = ys["k"], ys["v"]
+    if rem:
+        tail = {"p": jax.tree.map(lambda a: a[nseg * every:], layers),
+                "h": cache["h"][nseg * every:], "conv": cache["conv"][nseg * every:]}
+        h, ys = jax.lax.scan(mamba_body, h, tail)
+        hs.append(ys["h"])
+        cs.append(ys["conv"])
+    new["h"] = jnp.concatenate(hs, 0)
+    new["conv"] = jnp.concatenate(cs, 0)
+    return h, new

@@ -1,0 +1,245 @@
+"""Logical-axis -> mesh-axis rules and sharding helpers.
+
+Logical axes used by the models:
+  vocab, embed, mlp, heads, kv_heads, head_dim, experts, expert_mlp,
+  ssm_inner, ssm_state, conv, layers
+Activation axes:
+  clients, batch, seq, act_embed, act_heads, cache_seq
+
+Modes:
+  train (fed_mode replica|zero), prefill, decode.
+
+Replica-train: each client is one ``data`` row (x16 ``model`` chips); client state
+carries a leading ``clients`` axis sharded over ("pod","data"). Zero-train: client =
+pod; params additionally FSDP-sharded over ``data`` via the ``embed`` rule.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+Rules = Dict[str, Axis]
+
+
+def _mesh_axis_size(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def _fits(mesh: Mesh, axis: Axis, dim: int) -> bool:
+    if axis is None:
+        return True
+    names = (axis,) if isinstance(axis, str) else axis
+    total = 1
+    for n in names:
+        total *= _mesh_axis_size(mesh, n)
+    return dim % total == 0 and dim >= total
+
+
+def client_axes(mesh: Mesh, fed_mode: str) -> Tuple[str, ...]:
+    names = mesh.axis_names
+    if fed_mode == "zero":
+        return ("pod",) if "pod" in names else ()
+    return tuple(n for n in ("pod", "data") if n in names)
+
+
+def n_clients(mesh: Mesh, fed_mode: str) -> int:
+    m = 1
+    for a in client_axes(mesh, fed_mode):
+        m *= _mesh_axis_size(mesh, a)
+    return max(m, 1)
+
+
+def _sizes_of(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def train_rules(cfg, mesh: Mesh) -> Rules:
+    zero = cfg.fed_mode == "zero"
+    r: Rules = {
+        "_sizes": _sizes_of(mesh),
+        "clients": client_axes(mesh, cfg.fed_mode) or None,
+        "vocab": "model",
+        "vocab_in": None,
+        "embed": "data" if zero else None,
+        "mlp": "model",
+        "heads": "model",
+        "kv_heads": None,
+        "head_dim": None,
+        "experts": "model",
+        "expert_mlp": "data" if zero else None,
+        "ssm_inner": "model",
+        "ssm_state": None,
+        "conv": None,
+        "layers": None,
+        # activations (per-client view: no client dim here)
+        "batch": "data" if zero else None,
+        "seq": "model",
+        "act_embed": None,
+        "cache_seq": None,
+    }
+    return r
+
+
+def prefill_rules(cfg, mesh: Mesh) -> Rules:
+    zero = cfg.fed_mode == "zero"
+    return {
+        "_sizes": _sizes_of(mesh),
+        "clients": None,
+        "vocab": "model",
+        "vocab_in": None,
+        # huge archs FSDP their weights over `data` for prefill too (per-layer
+        # all-gathers overlap with the large per-layer compute)
+        "embed": "data" if zero else None,
+        "mlp": "model",
+        "heads": "model",
+        "kv_heads": None,
+        "head_dim": None,
+        "experts": "model",
+        # prefill keeps expert FFN weights 1-D sharded (experts over `model`):
+        # 2-D (data) sharding makes the expert dots all-reduce [E,C,d]-sized
+        # f32 activation partials over `data` EVERY layer (measured 5.1 GiB
+        # wire/layer); gathering the ~1.3 GiB/layer weights is far cheaper.
+        "expert_mlp": None,
+        "ssm_inner": "model",
+        "ssm_state": None,
+        "conv": None,
+        "layers": None,
+        "batch": tuple(n for n in ("pod", "data") if n in mesh.axis_names),
+        # 32k-token prompts: flash-score blocks scale with the local Sq, so
+        # activations are sequence-sharded over `model` (weights win their own
+        # model sharding per-tensor; GSPMD gathers the cheaper operand).
+        "seq": "model",
+        "act_embed": None,
+        "cache_seq": "model",
+    }
+
+
+def decode_rules(cfg, mesh: Mesh) -> Rules:
+    zero = cfg.fed_mode == "zero"
+    return {
+        "_sizes": _sizes_of(mesh),
+        "clients": None,
+        "vocab": "model",
+        "vocab_in": None,
+        # huge archs: 2D-shard weights (embed over data) so weights+cache fit;
+        # GSPMD inserts activation reductions (cheap at 1 token/step).
+        "embed": "data" if zero else None,
+        "mlp": "model",
+        "heads": "model",
+        "kv_heads": None,
+        # KV cache shards along head_dim (128 on every assigned arch), NOT
+        # along the sequence: the per-token dynamic-update-slice then touches
+        # only unsharded dims (a seq-sharded cache makes GSPMD gather the
+        # whole cache per written token). Attention contracts head_dim ->
+        # small psum over `model` per layer.
+        "head_dim": "model",
+        "experts": "model",
+        "expert_mlp": "data" if zero else None,
+        "ssm_inner": "model",
+        "ssm_state": None,
+        "conv": None,
+        "layers": None,
+        "batch": tuple(n for n in ("pod", "data") if n in mesh.axis_names),
+        "seq": None,
+        "cache_seq": None,
+    }
+
+
+def rules_for(cfg, mesh: Mesh, kind: str) -> Rules:
+    if kind == "train":
+        return train_rules(cfg, mesh)
+    if kind == "prefill":
+        return prefill_rules(cfg, mesh)
+    if kind == "decode":
+        return decode_rules(cfg, mesh)
+    raise ValueError(kind)
+
+
+def spec_for_axes(axes: Tuple[Optional[str], ...], rules: Rules,
+                  mesh: Optional[Mesh] = None,
+                  shape: Optional[Tuple[int, ...]] = None,
+                  fallback: Tuple[str, ...] = ()) -> P:
+    """PartitionSpec from logical axes; drops assignments that don't divide.
+
+    ``fallback``: mesh axes to place on the largest still-unassigned divisible
+    dim when the rule-based pass left them unused (weights whose natural axis
+    doesn't divide — e.g. 40 heads on a 16-way model axis — get row/column
+    parallelism instead of replication). Requires ``shape`` and axis sizes
+    (either a real ``mesh`` or a ``_sizes`` entry in ``rules``).
+    """
+    sizes = dict(rules.get("_sizes", {}))
+    if mesh is not None:
+        sizes.update(dict(zip(mesh.axis_names, mesh.devices.shape)))
+
+    def fits(names, dim):
+        total = 1
+        for n in names:
+            total *= sizes.get(n, 1)
+        return dim % total == 0 and dim >= total
+
+    out = []
+    used = set()
+    for i, a in enumerate(axes):
+        m = rules.get(a) if a is not None else None
+        if m is not None:
+            names = (m,) if isinstance(m, str) else tuple(m)
+            if any(n in used for n in names):
+                m = None
+            elif shape is not None and sizes and not fits(names, shape[i]):
+                m = None
+            else:
+                used.update(names)
+                out.append(names[0] if len(names) == 1 else names)
+                continue
+        out.append(None)
+    if shape is not None and sizes:
+        big_enough = 1
+        for d in shape:
+            big_enough *= d
+        if big_enough >= (1 << 20):
+            for fb in fallback:
+                if fb in used or sizes.get(fb, 1) <= 1:
+                    continue
+                # vocab_in is deliberately unsharded (embedding gathers must
+                # stay collective-free) — never a fallback target.
+                cands = [i for i in range(len(axes))
+                         if out[i] is None and axes[i] != "vocab_in"
+                         and fits((fb,), shape[i])]
+                if cands:
+                    i = max(cands, key=lambda j: shape[j])
+                    out[i] = fb
+                    used.add(fb)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def tree_shardings(axes_pytree, rules: Rules, mesh: Mesh, shapes_pytree=None,
+                   fallback: Tuple[str, ...] = ()):
+    """NamedSharding pytree from a logical-axes pytree (+ optional shapes)."""
+    def is_axes(x):
+        return isinstance(x, tuple) and all(y is None or isinstance(y, str) for y in x)
+    if shapes_pytree is None:
+        return jax.tree.map(
+            lambda ax: NamedSharding(mesh, spec_for_axes(ax, rules, mesh)),
+            axes_pytree, is_leaf=is_axes)
+    return jax.tree.map(
+        lambda ax, sh: NamedSharding(
+            mesh, spec_for_axes(ax, rules, mesh, tuple(sh.shape), fallback)),
+        axes_pytree, shapes_pytree, is_leaf=is_axes)
+
+
+def shard_act(x: jax.Array, axes: Tuple[Optional[str], ...], rules: Optional[Rules],
+              fallback: Tuple[str, ...] = ()) -> jax.Array:
+    """with_sharding_constraint via logical axes (bare PartitionSpec, so it is
+    vmap(spmd_axis_name)-safe); no-op when rules is None."""
+    if rules is None:
+        return x
+    spec = spec_for_axes(axes, rules, None, tuple(x.shape), fallback)
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x

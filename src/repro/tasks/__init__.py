@@ -1,0 +1,5 @@
+from repro.tasks.driver import FedDriver, RunResult
+from repro.tasks.hyperclean import build_hyperclean
+from repro.tasks.hyperrep import build_hyperrep
+
+__all__ = ["FedDriver", "RunResult", "build_hyperclean", "build_hyperrep"]

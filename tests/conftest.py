@@ -1,0 +1,9 @@
+import os
+
+# Tests see the real single CPU device (the 512-device override lives ONLY in
+# repro.launch.dryrun). Force deterministic, quiet JAX.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,123 @@
+"""Algorithm 1 mechanics: adaptive matrices, schedules, STORM, sync."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import FedConfig
+from repro.core import adafbio, adaptive as ada
+from repro.core.bilevel import quadratic_bilevel_problem
+from repro.core.tree_util import (tree_bcast_axis0, tree_mean_axis0, tree_sub,
+                                  tree_vdot)
+
+
+def _rand_tree(key, shapes):
+    ks = jax.random.split(key, len(shapes))
+    return {f"p{i}": jax.random.normal(k, s)
+            for i, (k, s) in enumerate(zip(ks, shapes))}
+
+
+def test_adaptive_matrices_assumption6():
+    """A_t >= rho I and rho <= b_t <= b_max by construction."""
+    key = jax.random.PRNGKey(0)
+    x = _rand_tree(key, [(8, 4), (16,)])
+    for kind in ("adam", "adabelief"):
+        st = ada.init_adaptive_state(x, kind)
+        for i in range(5):
+            w = _rand_tree(jax.random.fold_in(key, i), [(8, 4), (16,)])
+            v = _rand_tree(jax.random.fold_in(key, 100 + i), [(3,)])
+            st = ada.update_adaptive(st, w, v, kind=kind, varrho=0.9)
+        for a in jax.tree.leaves(st["a"]):
+            assert (a >= 0).all()
+        assert 0 <= float(st["b"]) <= 1e3
+        # preconditioning never amplifies by more than 1/rho
+        rho = 0.1
+        out = ada.precondition_x(st, w, kind=kind, rho=rho)
+        for o, wi in zip(jax.tree.leaves(out), jax.tree.leaves(w)):
+            assert (jnp.abs(o) <= jnp.abs(wi) / rho + 1e-5).all()
+
+
+def test_nonadaptive_is_identity():
+    key = jax.random.PRNGKey(0)
+    w = _rand_tree(key, [(4, 4)])
+    st = ada.init_adaptive_state(w, "none")
+    out = ada.precondition_x(st, w, kind="none", rho=1.0)
+    np.testing.assert_allclose(np.asarray(out["p0"]), np.asarray(w["p0"]))
+
+
+def test_eta_alpha_beta_schedules():
+    fed = FedConfig(eta_k=1.0, eta_n=64.0, alpha_c1=4.0, beta_c2=4.0)
+    for t in (0, 10, 1000):
+        eta = adafbio.eta_t(fed, jnp.int32(t), m=8)
+        a, b = adafbio.alpha_beta(fed, eta)
+        assert 0 < float(eta) <= 1.0
+        assert 0 < float(a) <= 1.0 and 0 < float(b) <= 1.0
+    # eta decreasing in t
+    e1 = adafbio.eta_t(fed, jnp.int32(1), 8)
+    e2 = adafbio.eta_t(fed, jnp.int32(100), 8)
+    assert float(e2) < float(e1)
+
+
+def test_param_update_eq14():
+    """Interpolated two-stage update (Eqs. 12-13) == direct Eq. 14."""
+    fed = FedConfig(adaptive="none", lr_x=0.1, lr_y=0.2)
+    key = jax.random.PRNGKey(1)
+    x = _rand_tree(key, [(5, 3)])
+    y = _rand_tree(jax.random.fold_in(key, 1), [(4,)])
+    w = _rand_tree(jax.random.fold_in(key, 2), [(5, 3)])
+    v = _rand_tree(jax.random.fold_in(key, 3), [(4,)])
+    st = ada.init_adaptive_state(x, "none")
+    eta = 0.37
+    x2, y2 = adafbio.param_update(fed, st, x, y, v, w, eta)
+    # two-stage: x_hat = x - lr*w ; x' = x + eta (x_hat - x)
+    x_ref = jax.tree.map(lambda p, d: p - eta * fed.lr_x * d, x, w)
+    y_ref = jax.tree.map(lambda p, d: p - eta * fed.lr_y * d, y, v)
+    np.testing.assert_allclose(np.asarray(x2["p0"]), np.asarray(x_ref["p0"]),
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(y2["p0"]), np.asarray(y_ref["p0"]),
+                               rtol=1e-5)
+
+
+def test_storm_alpha1_is_sgd():
+    """alpha = beta = 1 -> the estimator equals the fresh gradient (no VR)."""
+    d, p = 4, 3
+    key = jax.random.PRNGKey(0)
+    H = jnp.eye(p) * 2.0
+    Bm = jax.random.normal(key, (p, d)) * 0.3
+    prob = quadratic_bilevel_problem(H, Bm, jnp.ones(p), jnp.eye(d))
+    fed = FedConfig(adaptive="none", neumann_k=4, theta=0.5)
+    x = jnp.ones(d)
+    y = jnp.ones(p)
+    state = {"x": x, "y": y, "v": 100 * jnp.ones(p), "w": 100 * jnp.ones(d)}
+    batches = {"f": 0, "g": 0, "g0": 0, "gi": jnp.zeros((4,))}
+    v_new, w_new = adafbio.storm_refresh(prob, fed, state, x, y, batches,
+                                         jax.random.PRNGKey(1), alpha=1.0,
+                                         beta=1.0)
+    g_fresh = jax.grad(prob.g, argnums=1)(x, y, 0)
+    np.testing.assert_allclose(np.asarray(v_new), np.asarray(g_fresh),
+                               rtol=1e-5)
+    assert float(jnp.abs(w_new).max()) < 50  # old '100' estimate fully dropped
+
+
+def test_sync_broadcast_consistency():
+    """After a sync step all clients hold identical state == server update of
+    the client mean."""
+    fed = FedConfig(adaptive="adam", lr_x=0.1, lr_y=0.1)
+    key = jax.random.PRNGKey(0)
+    m = 4
+    one = {"x": _rand_tree(key, [(6,)]), "y": _rand_tree(key, [(3,)]),
+           "v": _rand_tree(jax.random.fold_in(key, 1), [(3,)]),
+           "w": _rand_tree(jax.random.fold_in(key, 2), [(6,)])}
+    states = jax.tree.map(
+        lambda a: a[None] + 0.1 * jax.random.normal(key, (m,) + a.shape), one)
+    server = adafbio.init_server_state(one["x"], fed)
+    avg = tree_mean_axis0(states)
+    new_client, new_server = adafbio.sync_update(fed, server, avg, m)
+    bcast = tree_bcast_axis0(new_client, m)
+    for leaf in jax.tree.leaves(bcast):
+        for i in range(1, m):
+            np.testing.assert_allclose(np.asarray(leaf[0]),
+                                       np.asarray(leaf[i]))
+    assert int(new_server["t"]) == int(server["t"]) + 1
+    # estimators pass through the average untouched (analysis base case)
+    np.testing.assert_allclose(np.asarray(new_client["v"]["p0"]),
+                               np.asarray(avg["v"]["p0"]), rtol=1e-6)

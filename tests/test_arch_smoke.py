@@ -1,0 +1,58 @@
+"""Per-assigned-architecture smoke tests: REDUCED variant of the same family
+(2 layers, d_model<=256, <=4 experts) — forward + one AdaFBiO train step on
+CPU, asserting output shapes and finiteness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import FedConfig, get_arch, list_arch_ids, reduced
+from repro.configs.base import ShapeConfig
+from repro.fed.runtime import FederatedTrainer, client_batch_specs
+from repro.models import ModelCtx, forward, init_params, model_specs
+
+B, S = 2, 32
+
+
+def _batch_for(cfg, key):
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab)}
+    if cfg.n_prefix_embeds:
+        batch["prefix_embeds"] = jnp.zeros(
+            (B, cfg.n_prefix_embeds, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "encdec":
+        batch["enc_embeds"] = (jax.random.normal(key, (B, S, cfg.d_model))
+                               .astype(jnp.bfloat16))
+    return batch
+
+
+@pytest.mark.parametrize("arch_id", list_arch_ids())
+def test_reduced_forward(arch_id):
+    cfg = reduced(get_arch(arch_id))
+    assert cfg.n_layers <= 2 and cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.n_experts <= 4
+    params = init_params(model_specs(cfg), jax.random.PRNGKey(0), cfg.dtype)
+    logits = forward(cfg, params, _batch_for(cfg, jax.random.PRNGKey(1)),
+                     ModelCtx(kind="train"))
+    assert logits.shape == (B, S, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, dtype=np.float32)).all()
+
+
+@pytest.mark.parametrize("arch_id", list_arch_ids())
+def test_reduced_train_step(arch_id):
+    cfg = reduced(get_arch(arch_id))
+    fed = FedConfig(q=2, neumann_k=2, lr_x=1e-2, lr_y=1e-1)
+    shape = ShapeConfig("t", S, B, "train")
+    tr = FederatedTrainer(cfg, fed, shape, mesh=None)
+    specs, _ = client_batch_specs(cfg, shape, tr.m, fed)
+    key = jax.random.PRNGKey(0)
+    batch = {k: (jax.random.randint(key, v.shape, 0, cfg.vocab)
+                 if v.dtype == jnp.int32 else jnp.zeros(v.shape, v.dtype))
+             for k, v in specs.items()}
+    states, server = tr.init_states(key, batch)
+    states, server = jax.jit(tr.local_step_fn())(states, server, batch, key)
+    states, server = jax.jit(tr.sync_step_fn())(states, server)
+    for path, leaf in jax.tree_util.tree_leaves_with_path(states):
+        arr = np.asarray(leaf, dtype=np.float32)
+        assert np.isfinite(arr).all(), (arch_id, path)
+    assert int(server["t"]) == 2

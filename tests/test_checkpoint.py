@@ -1,0 +1,19 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+
+
+def test_roundtrip(tmp_path):
+    key = jax.random.PRNGKey(0)
+    tree = {"a": jax.random.normal(key, (4, 3)).astype(jnp.bfloat16),
+            "b": {"c": jnp.arange(5), "d": jnp.float32(3.5)}}
+    save_checkpoint(tmp_path / "ck", tree, step=17)
+    like = jax.tree.map(jnp.zeros_like, tree)
+    restored, step = load_checkpoint(tmp_path / "ck", like)
+    assert step == 17
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype

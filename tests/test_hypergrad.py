@@ -1,0 +1,91 @@
+"""Neumann hypergradient (Eq. 15): closed-form checks on the quadratic
+problem + factored/generic equivalence on the LM problem."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.hypergrad as hgm
+from repro.core.bilevel import (lm_bilevel_problem, quadratic_bilevel_problem,
+                                quadratic_true_grad)
+from repro.models.model import ModelCtx, model_specs
+from repro.models.params import init_params
+from repro.configs import get_arch, reduced
+
+
+def _quad(seed=0, d=6, p=5):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    A = jax.random.normal(k1, (p, p))
+    H = A @ A.T / p + 0.5 * jnp.eye(p)
+    Bm = jax.random.normal(k2, (p, d)) * 0.3
+    c = jax.random.normal(k3, (p,))
+    Q = jnp.eye(d) * 0.2
+    x = jax.random.normal(k4, (d,))
+    return H, Bm, c, Q, x
+
+
+def _exact_expectation(prob, x, y, K, theta):
+    """Average the estimator over every value of k (U{0..K-1})."""
+    batches = {"f": 0, "g0": 0, "g": 0, "gi": jnp.zeros((K,))}
+    orig = hgm.sample_k
+    try:
+        ws = []
+        for kk in range(K):
+            hgm.sample_k = lambda key, K_, _k=kk: jnp.int32(_k)
+            ws.append(hgm.hypergrad(prob, x, y, batches,
+                                    jax.random.PRNGKey(0), K, theta))
+        return jnp.mean(jnp.stack(ws), 0)
+    finally:
+        hgm.sample_k = orig
+
+
+def test_quadratic_closed_form():
+    H, Bm, c, Q, x = _quad()
+    prob = quadratic_bilevel_problem(H, Bm, c, Q)
+    L = float(jnp.linalg.eigvalsh(H)[-1])
+    ystar = jnp.linalg.solve(H, Bm @ x)
+    w = _exact_expectation(prob, x, ystar, K=64, theta=1.0 / L)
+    tg = quadratic_true_grad(H, Bm, c, Q, x)
+    np.testing.assert_allclose(np.asarray(w), np.asarray(tg), rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_bias_decays_with_K():
+    """Lemma 3: ||E[estimator] - true|| decays geometrically in K."""
+    H, Bm, c, Q, x = _quad(seed=1)
+    prob = quadratic_bilevel_problem(H, Bm, c, Q)
+    L = float(jnp.linalg.eigvalsh(H)[-1])
+    ystar = jnp.linalg.solve(H, Bm @ x)
+    tg = np.asarray(quadratic_true_grad(H, Bm, c, Q, x))
+    errs = []
+    for K in (2, 8, 32):
+        w = _exact_expectation(prob, x, ystar, K=K, theta=1.0 / L)
+        errs.append(np.linalg.norm(np.asarray(w) - tg))
+    assert errs[0] > errs[1] > errs[2]
+    assert errs[2] < 1e-2 * max(errs[0], 1e-12) + 1e-5
+
+
+def test_factored_matches_generic_on_lm():
+    cfg = reduced(get_arch("qwen1.5-4b"), n_layers=1, d_model=64, n_heads=2,
+                  n_kv_heads=2, d_ff=128, vocab=97, head_dim=32,
+                  dtype="float32")
+    ctx = ModelCtx(rules=None, kind="train")
+    prob = lm_bilevel_problem(cfg, ctx, nu=1e-2)
+    params = init_params(model_specs(cfg), jax.random.PRNGKey(0), "float32")
+    key = jax.random.PRNGKey(3)
+    B, S, K = 2, 16, 3
+    toks = lambda k: jax.random.randint(k, (B, S), 0, cfg.vocab)
+    ks = jax.random.split(key, K + 3)
+    batches = {"f": {"tokens": toks(ks[0])},
+               "g": {"tokens": toks(ks[1])},
+               "g0": {"tokens": toks(ks[2])},
+               "gi": {"tokens": jnp.stack([toks(k) for k in ks[3:]])}}
+    kk = jax.random.PRNGKey(9)
+    w1 = hgm.hypergrad(prob, params["x"], params["y"], batches, kk, K, 0.5)
+    w2 = hgm.hypergrad_factored(prob, params["x"], params["y"], batches, kk,
+                                K, 0.5)
+    flat1 = jnp.concatenate([a.reshape(-1) for a in jax.tree.leaves(w1)])
+    flat2 = jnp.concatenate([a.reshape(-1) for a in jax.tree.leaves(w2)])
+    np.testing.assert_allclose(np.asarray(flat1), np.asarray(flat2),
+                               rtol=2e-4, atol=2e-5)

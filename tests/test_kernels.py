@@ -1,0 +1,100 @@
+"""Pallas kernels (interpret mode) vs pure-jnp oracles: shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mamba_scan import mamba_scan
+from repro.kernels.storm_update import adafbio_update, storm_update
+
+
+@pytest.mark.parametrize("b,h,kv,s,d", [
+    (1, 4, 4, 128, 64),     # MHA
+    (2, 8, 2, 256, 64),     # GQA
+    (1, 8, 1, 256, 128),    # MQA
+])
+@pytest.mark.parametrize("causal,window", [(True, None), (False, None),
+                                           (True, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(b, h, kv, s, d, causal, window, dtype):
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (b, h, s, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(k2, (b, kv, s, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(k3, (b, kv, s, d), jnp.float32).astype(dtype)
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=64, block_k=64, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("n", [1024, 65536 * 2])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("beta", [0.0, 0.3, 1.0])
+def test_storm_update(n, dtype, beta):
+    key = jax.random.PRNGKey(1)
+    gn, go, est = (jax.random.normal(k, (n,), jnp.float32).astype(dtype)
+                   for k in jax.random.split(key, 3))
+    got = storm_update(gn, go, est, beta, interpret=True)
+    want = ref.storm_update_ref(gn, go, est, beta)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-6
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("n", [512, 65536])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_adafbio_update(n, dtype):
+    key = jax.random.PRNGKey(2)
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = jax.random.normal(k1, (n,), jnp.float32).astype(dtype)
+    w = jax.random.normal(k2, (n,), jnp.float32).astype(dtype)
+    a = jnp.abs(jax.random.normal(k3, (n,), jnp.float32))
+    got = adafbio_update(p, w, a, 0.01, 1e-4, interpret=True)
+    want = ref.adafbio_update_ref(p, w, a, 0.01, 1e-4)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-6
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("b,s,di,n", [(1, 32, 256, 8), (2, 64, 1024, 16)])
+def test_mamba_scan(b, s, di, n):
+    key = jax.random.PRNGKey(3)
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, s, di)) * 0.1
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, di)))
+    A = -jnp.abs(jax.random.normal(ks[2], (di, n)))
+    Bm = jax.random.normal(ks[3], (b, s, n)) * 0.1
+    Cm = jax.random.normal(ks[4], (b, s, n)) * 0.1
+    y1, h1 = mamba_scan(x, dt, A, Bm, Cm, block_d=min(256, di),
+                        interpret=True)
+    y2, h2 = ref.mamba_scan_ref(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5,
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-5,
+                               rtol=1e-5)
+
+
+def test_mamba_scan_matches_model_layer():
+    """The kernel's recurrence equals the model's chunked associative scan."""
+    from repro.models import ssm as ssm_lib
+    b, s, di, n = 1, 64, 128, 8
+    key = jax.random.PRNGKey(4)
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, s, di)) * 0.1
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, di)))
+    A = -jnp.abs(jax.random.normal(ks[2], (di, n)))
+    Bm = jax.random.normal(ks[3], (b, s, n)) * 0.1
+    Cm = jax.random.normal(ks[4], (b, s, n)) * 0.1
+    # model-internal chunked scan
+    a = jnp.exp(dt[..., None] * A)
+    bx = (dt * x)[..., None] * Bm[:, :, None, :]
+    hs, _ = ssm_lib._selective_scan_chunk(a, bx, jnp.zeros((b, di, n)))
+    y_model = jnp.einsum("bcdn,bcn->bcd", hs, Cm)
+    y_kernel, _ = mamba_scan(x, dt, A, Bm, Cm, block_d=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_kernel), np.asarray(y_model),
+                               atol=1e-4, rtol=1e-4)

@@ -1,0 +1,113 @@
+"""Hypothesis property tests on system invariants."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core.bilevel import softmax_xent
+from repro.core.tree_util import (tree_axpy, tree_mean_axis0, tree_sub,
+                                  tree_update, tree_vdot)
+from repro.data.synthetic import FederatedLMData
+from repro.kernels import ref
+from repro.sharding import spec_for_axes
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=20,
+    suppress_health_check=list(hypothesis.HealthCheck))
+hypothesis.settings.load_profile("ci")
+
+floats = st.floats(-3, 3, allow_nan=False, width=32)
+
+
+@given(st.integers(2, 64), st.integers(2, 17), st.integers(0, 2 ** 30))
+def test_xent_matches_naive(n, v, seed):
+    key = jax.random.PRNGKey(seed)
+    logits = jax.random.normal(key, (n, v))
+    labels = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, v)
+    got = softmax_xent(logits, labels)
+    probs = jax.nn.log_softmax(logits, -1)
+    want = -jnp.mean(jnp.take_along_axis(probs, labels[:, None], 1))
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5, atol=1e-6)
+
+
+@given(st.integers(1, 64), st.floats(0, 1), st.integers(0, 2 ** 30))
+def test_storm_telescoping(n, beta, seed):
+    """If est == g_old (perfect tracking) then est' == g_new exactly."""
+    key = jax.random.PRNGKey(seed)
+    g_new = jax.random.normal(key, (n,))
+    g_old = jax.random.normal(jax.random.fold_in(key, 1), (n,))
+    out = ref.storm_update_ref(g_new, g_old, g_old, beta)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(g_new), atol=1e-6)
+
+
+@given(st.integers(1, 32), st.floats(1e-4, 1.0), st.integers(0, 2 ** 30))
+def test_tree_update_direction(n, step, seed):
+    """tree_update moves opposite to the direction, proportionally to step."""
+    key = jax.random.PRNGKey(seed)
+    p = {"a": jax.random.normal(key, (n,))}
+    d = {"a": jax.random.normal(jax.random.fold_in(key, 1), (n,))}
+    out = tree_update(p, d, step)
+    np.testing.assert_allclose(np.asarray(out["a"]),
+                               np.asarray(p["a"] - step * d["a"]), rtol=1e-5,
+                               atol=1e-6)
+    # inner product with direction decreased
+    assert float(tree_vdot(tree_sub(out, p), d)) <= 1e-6
+
+
+@given(st.integers(2, 8), st.integers(2, 16), st.integers(0, 2 ** 20))
+def test_client_mean_is_linear(m, n, seed):
+    key = jax.random.PRNGKey(seed)
+    tree = {"x": jax.random.normal(key, (m, n))}
+    avg = tree_mean_axis0(tree)
+    np.testing.assert_allclose(np.asarray(avg["x"]),
+                               np.asarray(tree["x"].mean(0)), rtol=1e-5,
+                               atol=1e-6)
+
+
+@given(st.integers(0, 5), st.integers(0, 1000), st.integers(0, 3))
+def test_data_deterministic_and_heterogeneous(client, step, slot):
+    data = FederatedLMData(vocab=257, n_clients=8)
+    a = data.sample(client, step, slot, (16,))
+    b = data.sample(client, step, slot, (16,))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    c = data.sample(client + 1, step, slot, (16,))
+    # different clients see different (non-iid) streams
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+
+@given(st.integers(1, 4), st.integers(1, 4))
+def test_spec_never_reuses_mesh_axis(i, j):
+    rules = {"_sizes": {"model": 4, "data": 2}, "a": "model", "b": "model",
+             "c": "data"}
+    spec = spec_for_axes(("a", "b", "c"), rules, None, (4 * i, 4 * j, 2))
+    flat = [s for s in spec if s is not None]
+    names = []
+    for s in flat:
+        names.extend([s] if isinstance(s, str) else list(s))
+    assert len(names) == len(set(names))
+
+
+@given(st.integers(1, 64))
+def test_spec_respects_divisibility(n):
+    rules = {"_sizes": {"model": 16}, "mlp": "model"}
+    spec = spec_for_axes(("mlp",), rules, None, (n,))
+    if n % 16 == 0 and n >= 16:
+        assert spec and spec[0] == "model"
+    else:
+        assert len(spec) == 0 or spec[0] is None
+
+
+@given(st.integers(2, 6), st.floats(0.01, 0.99), st.integers(0, 2 ** 20))
+def test_ring_buffer_holds_last_window(w_pow, frac, seed):
+    from repro.models.decode import _fill_ring
+    w = 2 ** w_pow
+    s = w + max(1, int(frac * w))
+    key = jax.random.PRNGKey(seed)
+    k_seq = jax.random.normal(key, (1, s, 2, 4))
+    buf = _fill_ring(k_seq, w, window=True)
+    # every of the last w positions is present at slot pos % w
+    for pos in range(s - w, s):
+        np.testing.assert_allclose(np.asarray(buf[0, pos % w]),
+                                   np.asarray(k_seq[0, pos]), atol=0)

@@ -1,0 +1,61 @@
+"""int8 KV cache: kernel-vs-oracle + quantized decode path vs bf16 decode."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.kernels import ref
+from repro.kernels.quant_decode import quant_decode_attention, quantize_kv
+from repro.models import (ModelCtx, decode_step, init_cache, init_params,
+                          model_specs, prefill)
+
+
+@pytest.mark.parametrize("b,h,kv,s,d", [(1, 4, 4, 256, 64), (2, 8, 2, 512, 64)])
+def test_kernel_matches_oracle(b, h, kv, s, d):
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (b, h, d), jnp.bfloat16)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, kv, s, d), jnp.bfloat16)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, kv, s, d), jnp.bfloat16)
+    k8, ks = quantize_kv(k)
+    v8, vs = quantize_kv(v)
+    got = quant_decode_attention(q, k8, ks, v8, vs, s - 7, block_s=128,
+                                 interpret=True)
+    want = ref.quant_decode_ref(q, k8, ks, v8, vs, s - 7)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=2e-2,
+                               rtol=2e-2)
+
+
+def test_quantization_error_small():
+    key = jax.random.PRNGKey(1)
+    k = jax.random.normal(key, (2, 2, 128, 64), jnp.float32)
+    k8, ks = quantize_kv(k)
+    back = k8.astype(jnp.float32) * ks[..., None]
+    err = np.abs(np.asarray(back - k)).max()
+    assert err < np.abs(np.asarray(k)).max() / 100   # <1% of range
+
+
+def test_quantized_decode_close_to_bf16():
+    cfg = reduced(get_arch("granite-20b"), dtype="float32")
+    params = init_params(model_specs(cfg), jax.random.PRNGKey(0), "float32")
+    B, S = 1, 16
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab)
+    cache0 = init_cache(cfg, B, S + 4, dtype=jnp.float32)
+    _, cache0 = prefill(cfg, params, {"tokens": tokens[:, :S - 1]}, cache0,
+                        ModelCtx(kind="prefill"))
+    outs = {}
+    for quant in (False, True):
+        cache = cache0
+        if quant:   # quantize the prefilled bf16 cache (prod: prefill writes q8)
+            ck8, cks = quantize_kv(cache0["k"])
+            cv8, cvs = quantize_kv(cache0["v"])
+            cache = {"k": ck8, "v": cv8, "k_scale": cks, "v_scale": cvs}
+        lg, _ = decode_step(cfg, params, cache, tokens[:, S - 1:],
+                            jnp.int32(S - 1), ModelCtx(kind="decode"))
+        outs[quant] = np.asarray(lg, np.float32)
+    # int8 cache changes logits only at quantization-noise level
+    scale = np.abs(outs[False]).max()
+    assert np.abs(outs[True] - outs[False]).max() < 0.05 * scale
