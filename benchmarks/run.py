@@ -18,6 +18,7 @@
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import time
 
@@ -26,6 +27,8 @@ sys.path.insert(0, "src")
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+ENGINE = "eager"        # set by --engine; drivers below inherit it
 
 
 def _row(name, us, derived=""):
@@ -39,6 +42,7 @@ def table1_complexity(eps=0.35, max_steps=400):
     for alg in ("adafbio", "adafbio_na", "fedbioacc", "localbsgvrm",
                 "fednest", "fedavg_sgd"):
         d = _quad_driver(alg)
+        d.engine = ENGINE
         t0 = time.time()
         r = d.run(max_steps, eval_every=10)
         us = (time.time() - t0) / max(r.steps[-1], 1) * 1e6
@@ -64,7 +68,8 @@ def fig1_hyperrep(steps=150):
     for alg in ("adafbio", "fedbioacc", "localbsgvrm", "fednest",
                 "fedavg_sgd"):
         d = FedDriver(hr["problem"], cfg.fed, cfg.n_clients, hr["batch_fn"],
-                      hr["init_xy"], metric_fn=hr["val_loss"], algorithm=alg)
+                      hr["init_xy"], metric_fn=hr["val_loss"], algorithm=alg,
+                      engine=ENGINE)
         t0 = time.time()
         r = d.run(steps, eval_every=max(steps - 1, 1))
         us = (time.time() - t0) / steps * 1e6
@@ -85,7 +90,8 @@ def fig2_hyperclean(steps=150):
                 "fedavg_sgd"):
         d = FedDriver(hc["problem"], cfg.fed, cfg.n_clients, hc["batch_fn"],
                       hc["init_xy"], metric_fn=hc["val_loss"],
-                      grad_norm_fn=hc["true_grad_norm"], algorithm=alg)
+                      grad_norm_fn=hc["true_grad_norm"], algorithm=alg,
+                      engine=ENGINE)
         t0 = time.time()
         r = d.run(steps, eval_every=max(steps - 1, 1))
         us = (time.time() - t0) / steps * 1e6
@@ -108,12 +114,44 @@ def ablation_adaptive(steps=150):
         hr = build_hyperrep(cfg)
         d = FedDriver(hr["problem"], cfg.fed, cfg.n_clients, hr["batch_fn"],
                       hr["init_xy"], metric_fn=hr["val_loss"],
-                      algorithm="adafbio")
+                      algorithm="adafbio", engine=ENGINE)
         t0 = time.time()
         r = d.run(steps, eval_every=max(steps - 1, 1))
         us = (time.time() - t0) / steps * 1e6
         _row(f"ablation_adaptive/{kind}", us,
              f"valT={r.metric[-1]:.4f}")
+
+
+# ---------------------------------------------------------------- engines
+
+def engine_wallclock(rounds=12):
+    """Eager vs fused-scan round engine: per-round wall-clock on the analytic
+    quadratic problem (dispatch overhead is the whole difference — same math,
+    same results; the scan engine compiles q local steps + sync as ONE
+    program). Reported per engine so the win is measurable on any host."""
+    from tests.test_system import _quad_driver
+    q = None
+    stats = {}
+    for engine in ("eager", "scan"):
+        d = _quad_driver("adafbio")
+        d.engine = engine
+        q = d.fed.q
+        steps = rounds * q
+        t0 = time.time()
+        r = d.run(steps, eval_every=steps - 1)
+        total = time.time() - t0
+        # both engines log per-round wall-clock; drop the first two rounds
+        # (local-phase jit compile lands in round 0, the sync variant in
+        # round 1 — for both engines) so the comparison is steady-state
+        timed = d.round_seconds[2:] or d.round_seconds[1:]
+        per_round = sum(timed) / len(timed) if timed else total / rounds
+        stats[engine] = per_round
+        _row(f"engine/{engine}", per_round * 1e6,
+             f"q={q};rounds={rounds};total_s={total:.2f};"
+             f"gnormT={r.grad_norm[-1]:.3f}")
+    if stats.get("scan") and stats.get("eager"):
+        _row("engine/speedup_eager_over_scan", 0.0,
+             f"x{stats['eager'] / max(stats['scan'], 1e-12):.2f}")
 
 
 # ---------------------------------------------------------------- kernels
@@ -159,13 +197,30 @@ def roofline_summary():
 
 
 def main() -> None:
+    global ENGINE
+    benches = {
+        "table1": table1_complexity,
+        "fig_hyperrep": fig1_hyperrep,
+        "fig_hyperclean": fig2_hyperclean,
+        "ablation_adaptive": ablation_adaptive,
+        "engine": engine_wallclock,
+        "kernel": kernel_micro,
+        "roofline": roofline_summary,
+    }
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--engine", default="eager", choices=["eager", "scan"],
+                    help="local-step engine for the driver-based benchmarks "
+                         "(engine_wallclock always measures both)")
+    ap.add_argument("--only", default=None, choices=sorted(benches),
+                    help="run a single benchmark by name (e.g. engine)")
+    args = ap.parse_args()
+    ENGINE = args.engine
     print("name,us_per_call,derived")
-    table1_complexity()
-    fig1_hyperrep()
-    fig2_hyperclean()
-    ablation_adaptive()
-    kernel_micro()
-    roofline_summary()
+    if args.only:
+        benches[args.only]()
+        return
+    for fn in benches.values():
+        fn()
 
 
 if __name__ == "__main__":

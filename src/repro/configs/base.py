@@ -164,6 +164,10 @@ class FedConfig:
     neumann_batch: int = 1
     # gradient-accumulation bound: sequences per microbatch per data shard
     microbatch_per_shard: int = 1
+    # fused flat-buffer update path (STORM refresh + Eq. 14) — "auto" uses the
+    # Pallas kernels on TPU and the per-leaf jnp path elsewhere; "on" forces
+    # the flat-buffer path (jnp reference math off-TPU); "off" disables it.
+    fused: str = "auto"
 
 
 _ARCH_IDS = [

@@ -28,8 +28,9 @@ from repro.configs.base import FedConfig
 from repro.core import adaptive as ada
 from repro.core.bilevel import BilevelProblem
 from repro.core.hypergrad import hypergrad_fn
-from repro.core.tree_util import (tree_axpy, tree_match_dtypes, tree_scale,
-                                  tree_sub, tree_update, tree_zeros_like)
+from repro.core.tree_util import (tree_axpy, tree_barrier, tree_match_dtypes,
+                                  tree_scale, tree_sub, tree_update,
+                                  tree_zeros_like)
 
 
 # ------------------------------------------------------------------ schedules
@@ -76,11 +77,29 @@ def warm_adaptive(server: Dict[str, Any], avg_state: Dict[str, Any],
 
 # ------------------------------------------------------------------ steps
 
+def use_fused(fed: FedConfig) -> bool:
+    """Whether the flat-buffer fused update path is active for this config."""
+    mode = getattr(fed, "fused", "auto")
+    if mode == "on":
+        return True
+    if mode == "off":
+        return False
+    return jax.default_backend() == "tpu"
+
+
 def param_update(fed: FedConfig, adaptive_state, x, y, v, w, eta):
     """Eqs. (12)-(14): adaptive-preconditioned interpolated update."""
-    dx = ada.precondition_x(adaptive_state, w, kind=fed.adaptive, rho=fed.rho)
+    if use_fused(fed) and fed.adaptive != "none":
+        from repro.kernels import ops
+        acc = (adaptive_state["a_max"] if fed.adaptive == "amsgrad"
+               else adaptive_state["a"])
+        x_new = ops.adafbio_update_tree(x, w, acc, fed.lr_x * eta, fed.rho)
+    else:
+        dx = ada.precondition_x(adaptive_state, w, kind=fed.adaptive,
+                                rho=fed.rho)
+        x_new = tree_update(x, dx, fed.lr_x * eta)
+    # B_t is scalar (b·I): the y update is one cheap broadcast either way
     dy = ada.precondition_y(adaptive_state, v, kind=fed.adaptive, rho=fed.rho)
-    x_new = tree_update(x, dx, fed.lr_x * eta)
     y_new = tree_update(y, dy, fed.lr_y * eta)
     return x_new, y_new
 
@@ -94,16 +113,26 @@ def storm_refresh(problem: BilevelProblem, fed: FedConfig, state, x_new, y_new,
     grad_g_y = problem.grad_g_y or (
         lambda xx, yy, bb: jax.grad(problem.g, argnums=1)(xx, yy, bb))
     g_new = grad_g_y(x_new, y_new, bg)
-    # sequence the (new, old) evaluations so peak memory is max(), not sum()
-    x_old, y_old = jax.lax.optimization_barrier(
-        (state["x"], state["y"], g_new))[:2]
+    # sequence the (new, old) evaluations so peak memory is max(), not sum();
+    # tree_barrier (not lax.optimization_barrier directly) so client-vmapped
+    # steps batch on jax 0.4.x, which lacks the primitive's batching rule
+    x_old, y_old = tree_barrier((state["x"], state["y"], g_new))[:2]
     g_old = grad_g_y(x_old, y_old, bg)
-    v_new = tree_axpy(1.0 - alpha, tree_sub(state["v"], g_old), g_new)
+    fused = use_fused(fed)
+    if fused:
+        from repro.kernels import ops
+        v_new = ops.storm_update_tree(g_new, g_old, state["v"], alpha)
+    else:
+        v_new = tree_axpy(1.0 - alpha, tree_sub(state["v"], g_old), g_new)
     w_hat_new = hg(x_new, y_new, batches, k1)
-    x_old2, y_old2 = jax.lax.optimization_barrier(
-        (state["x"], state["y"], w_hat_new))[:2]
+    x_old2, y_old2 = tree_barrier((state["x"], state["y"], w_hat_new))[:2]
     w_hat_old = hg(x_old2, y_old2, batches, k1)   # same sample & same k
-    w_new = tree_axpy(1.0 - beta, tree_sub(state["w"], w_hat_old), w_hat_new)
+    if fused:
+        from repro.kernels import ops
+        w_new = ops.storm_update_tree(w_hat_new, w_hat_old, state["w"], beta)
+    else:
+        w_new = tree_axpy(1.0 - beta, tree_sub(state["w"], w_hat_old),
+                          w_hat_new)
     v_new = tree_match_dtypes(v_new, state["v"])
     w_new = tree_match_dtypes(w_new, state["w"])
     if problem.constrain_x is not None:

@@ -1,6 +1,9 @@
 """Pytree arithmetic helpers (params/gradients live as plain dict pytrees)."""
 from __future__ import annotations
 
+import dataclasses
+from typing import Any, Tuple
+
 import jax
 import jax.numpy as jnp
 
@@ -70,3 +73,110 @@ def tree_bcast_axis0(a, m: int):
 
 def tree_size(a) -> int:
     return sum(int(x.size) for x in jax.tree.leaves(a))
+
+
+def tree_stack(trees):
+    """Stack a list of identically-structured pytrees along a new axis 0."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+# ------------------------------------------------------------------ barrier
+#
+# jax 0.4.x ships `lax.optimization_barrier` with NO batching, JVP, or
+# transpose rules, so any barrier under vmap (client-batched steps) or grad
+# (the model's layer scan puts one on the loss path) raises
+# NotImplementedError. The barrier is the identity on values — batching keeps
+# the batch dims, tangents/cotangents pass through (each behind its own
+# barrier, matching the rules later jax versions added upstream). Register
+# them once here; every call site then works under any transform.
+
+def _register_barrier_rules():
+    prim = getattr(jax.lax, "optimization_barrier_p", None)
+    if prim is None:      # newer jax: rules ship with the primitive
+        return
+    from jax.interpreters import ad, batching
+
+    if prim not in batching.primitive_batchers:
+        def _batcher(batched_args, batch_dims, **params):
+            return prim.bind(*batched_args, **params), batch_dims
+        batching.primitive_batchers[prim] = _batcher
+
+    if prim not in ad.primitive_jvps:
+        def _jvp(primals, tangents):
+            tangents = [ad.instantiate_zeros(t) for t in tangents]
+            return prim.bind(*primals), prim.bind(*tangents)
+        ad.primitive_jvps[prim] = _jvp
+
+    if prim not in ad.primitive_transposes:
+        def _transpose(cts, *primals):
+            return cts
+        ad.primitive_transposes[prim] = _transpose
+
+
+_register_barrier_rules()
+
+
+def tree_barrier(tree):
+    """``jax.lax.optimization_barrier`` over a pytree, safe under ``vmap``,
+    ``grad``/``jvp``, and ``remat`` (rules registered above).
+
+    Use to sequence two evaluations sharing inputs so peak memory is max()
+    rather than sum(): pass the values the second evaluation reads plus the
+    first evaluation's outputs, and unpack the values you need.
+    """
+    return jax.lax.optimization_barrier(tree)
+
+
+# ------------------------------------------------------------ flat buffers
+
+@dataclasses.dataclass(frozen=True)
+class TreeBufferSpec:
+    """Static recipe for round-tripping a pytree through one flat buffer."""
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[Any, ...]
+    size: int                  # valid (unpadded) element count
+    padded_size: int
+
+
+def tree_buffer_spec(tree, *, align: int = 128) -> TreeBufferSpec:
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes = tuple(tuple(l.shape) for l in leaves)
+    dtypes = tuple(jnp.asarray(l).dtype for l in leaves)
+    size = sum(int(l.size) for l in leaves)
+    padded = size + (-size) % align if size else align
+    return TreeBufferSpec(treedef, shapes, dtypes, size, padded)
+
+
+def tree_pack(tree, spec: TreeBufferSpec = None, *, dtype=jnp.float32,
+              align: int = 128):
+    """Flatten a pytree into ONE 1-D buffer (zero-padded to ``align``).
+
+    Returns ``(flat, spec)``; feed ``spec`` to :func:`tree_unpack` to invert.
+    All leaves are cast to ``dtype`` (f32 by default — the fused kernels do
+    their math in f32 and cast back per leaf on unpack).
+    """
+    if spec is None:
+        spec = tree_buffer_spec(tree, align=align)
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        return jnp.zeros((spec.padded_size,), dtype), spec
+    flat = jnp.concatenate([jnp.ravel(l).astype(dtype) for l in leaves])
+    pad = spec.padded_size - spec.size
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), dtype)])
+    return flat, spec
+
+
+def tree_unpack(flat, spec: TreeBufferSpec):
+    """Invert :func:`tree_pack`: split, reshape and cast back per leaf."""
+    leaves = []
+    off = 0
+    for shape, dt in zip(spec.shapes, spec.dtypes):
+        n = 1
+        for s in shape:
+            n *= s
+        leaves.append(jax.lax.slice_in_dim(flat, off, off + n)
+                      .reshape(shape).astype(dt))
+        off += n
+    return jax.tree.unflatten(spec.treedef, leaves)

@@ -1,6 +1,7 @@
+from repro.fed.round import make_round_step, stack_round_batches
 from repro.fed.runtime import (FederatedTrainer, build_lm_problem_ctx,
                                split_client_batch)
 from repro.fed.serve import build_serve_fns
 
 __all__ = ["FederatedTrainer", "build_lm_problem_ctx", "split_client_batch",
-           "build_serve_fns"]
+           "build_serve_fns", "make_round_step", "stack_round_batches"]

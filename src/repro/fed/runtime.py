@@ -263,6 +263,19 @@ class FederatedTrainer:
             return tree_bcast_axis0(new_client, self.m), new_server
         return step
 
+    def round_step_fn(self, q: Optional[int] = None) -> Callable:
+        """One fused communication round: q local steps rolled into a single
+        ``lax.scan`` + the sync step, as one jit-able program.
+
+        Signature: ``round(states, server, batches_q, key)`` where
+        ``batches_q`` is the per-step batch pytree stacked on a leading axis
+        of size q (see ``repro.fed.round.stack_round_batches``). Numerics
+        match q eager ``local_step_fn()`` calls + one ``sync_step_fn()``.
+        """
+        from repro.fed.round import make_round_step
+        return make_round_step(self.local_step_fn(), self.sync_step_fn(),
+                               q if q is not None else self.fed.q)
+
     def eval_fn(self) -> Callable:
         """Mean UL loss f(x̄, ȳ) over the clients' val batches."""
         def ev(states, batch):
@@ -289,6 +302,23 @@ class FederatedTrainer:
         elif which == "sync":
             fn = self.sync_step_fn()
             in_sh = (ss, sv)
+            out_sh = (ss, sv)
+            dn = (0,) if donate else ()
+        elif which == "round":
+            fn = self.round_step_fn()
+            # scanned batches carry a leading (unsharded) q axis
+            is_axes = lambda t: (isinstance(t, tuple) and
+                                 all(u is None or isinstance(u, str)
+                                     for u in t))
+            round_axes = (jax.tree.map(lambda a: (None,) + a, batch_axes,
+                                       is_leaf=is_axes)
+                          if batch_axes is not None else None)
+            round_specs = (jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((self.fed.q,) + s.shape,
+                                               s.dtype), batch_specs)
+                if batch_specs is not None else None)
+            in_sh = (ss, sv, self.batch_shardings(round_specs, round_axes),
+                     NamedSharding(self.mesh, P()) if self.mesh else None)
             out_sh = (ss, sv)
             dn = (0,) if donate else ()
         else:

@@ -13,11 +13,18 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.tree_util import tree_pack, tree_unpack
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.mamba_scan import mamba_scan as _mamba
 from repro.kernels.storm_update import adafbio_update as _upd
 from repro.kernels.storm_update import storm_update as _storm
+
+
+def default_use_pallas() -> bool:
+    """Pallas compiles for TPU; everywhere else the jnp reference path wins
+    (interpret mode is an emulator, not a fast path)."""
+    return jax.default_backend() == "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "use_pallas",
@@ -49,3 +56,47 @@ def mamba_scan(x, dt, A, Bm, Cm, *, use_pallas=False, interpret=True):
     if use_pallas:
         return _mamba(x, dt, A, Bm, Cm, interpret=interpret)
     return ref.mamba_scan_ref(x, dt, A, Bm, Cm)
+
+
+# ------------------------------------------------------------ tree-level ops
+#
+# The flat-buffer path: pack a whole parameter pytree into ONE 1-D f32
+# buffer (repro.core.tree_util.tree_pack) and run the fused elementwise
+# kernel once over it, instead of one fused call per leaf. On TPU that is a
+# single-pass single-launch update of the entire parameter vector; on CPU
+# (and any non-TPU backend) the same math runs through the jnp reference on
+# the packed buffer. Unpack casts back to each leaf's dtype.
+
+def storm_update_tree(g_new, g_old, est, beta, *, use_pallas=None,
+                      interpret=False, block: int = 65536):
+    """STORM refresh (Eqs. 10-11) over a pytree via one flat buffer.
+
+    Output leaves take ``est``'s dtypes (the estimator being refreshed).
+    """
+    if use_pallas is None:
+        use_pallas = default_use_pallas()
+    fl_est, spec = tree_pack(est)
+    fl_new, _ = tree_pack(g_new, spec)
+    fl_old, _ = tree_pack(g_old, spec)
+    if use_pallas:
+        out = _storm(fl_new, fl_old, fl_est, beta, block=block,
+                     interpret=interpret)
+    else:
+        out = ref.storm_update_ref(fl_new, fl_old, fl_est, beta)
+    return tree_unpack(out, spec)
+
+
+def adafbio_update_tree(p, w, a, lr_eta, rho, *, use_pallas=None,
+                        interpret=False, block: int = 65536):
+    """Adaptive update (Eq. 14) over a pytree via one flat buffer."""
+    if use_pallas is None:
+        use_pallas = default_use_pallas()
+    fl_p, spec = tree_pack(p)
+    fl_w, _ = tree_pack(w, spec)
+    fl_a, _ = tree_pack(a, spec)
+    if use_pallas:
+        out = _upd(fl_p, fl_w, fl_a, lr_eta, rho, block=block,
+                   interpret=interpret)
+    else:
+        out = ref.adafbio_update_ref(fl_p, fl_w, fl_a, lr_eta, rho)
+    return tree_unpack(out, spec)

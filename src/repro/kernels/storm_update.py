@@ -14,6 +14,25 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+LANE = 128
+
+
+def _pad_to_block(n: int, block: int):
+    """Pick a lane-aligned block and the padded length it divides."""
+    blk = max(min(block, n), 1)
+    if n % blk == 0:
+        return blk, n
+    blk = min(block, ((n + LANE - 1) // LANE) * LANE)
+    padded = ((n + blk - 1) // blk) * blk
+    return blk, padded
+
+
+def _padded(x: jax.Array, padded: int) -> jax.Array:
+    n = x.shape[0]
+    if padded == n:
+        return x
+    return jnp.pad(x, (0, padded - n))
+
 
 def _storm_kernel(gn_ref, go_ref, est_ref, beta_ref, out_ref):
     beta = beta_ref[0]
@@ -25,14 +44,17 @@ def _storm_kernel(gn_ref, go_ref, est_ref, beta_ref, out_ref):
 
 def storm_update(g_new: jax.Array, g_old: jax.Array, est: jax.Array, beta,
                  *, block: int = 65536, interpret: bool = False) -> jax.Array:
-    """est' = g_new + (1-beta)(est - g_old), single pass. 1-D inputs."""
+    """est' = g_new + (1-beta)(est - g_old), single pass. 1-D inputs.
+
+    Non-divisible ``n`` is zero-padded up to a lane-aligned block multiple and
+    sliced back, so any flat-buffer length works.
+    """
     (n,) = est.shape
-    blk = min(block, n)
-    assert n % blk == 0, (n, blk)
+    blk, padded = _pad_to_block(n, block)
     beta_arr = jnp.asarray([beta], jnp.float32)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         _storm_kernel,
-        grid=(n // blk,),
+        grid=(padded // blk,),
         in_specs=[
             pl.BlockSpec((blk,), lambda i: (i,)),
             pl.BlockSpec((blk,), lambda i: (i,)),
@@ -40,9 +62,11 @@ def storm_update(g_new: jax.Array, g_old: jax.Array, est: jax.Array, beta,
             pl.BlockSpec((1,), lambda i: (0,)),
         ],
         out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((n,), est.dtype),
+        out_shape=jax.ShapeDtypeStruct((padded,), est.dtype),
         interpret=interpret,
-    )(g_new, g_old, est, beta_arr)
+    )(_padded(g_new, padded), _padded(g_old, padded), _padded(est, padded),
+      beta_arr)
+    return out if padded == n else out[:n]
 
 
 def _update_kernel(p_ref, w_ref, a_ref, s_ref, out_ref):
@@ -57,12 +81,11 @@ def adafbio_update(p: jax.Array, w: jax.Array, a: jax.Array, lr_eta, rho,
                    *, block: int = 65536, interpret: bool = False) -> jax.Array:
     """Fused Eq. (14): p' = p - lr_eta * A_t^{-1} w with A = diag(sqrt(a)+rho)."""
     (n,) = p.shape
-    blk = min(block, n)
-    assert n % blk == 0, (n, blk)
+    blk, padded = _pad_to_block(n, block)
     s = jnp.asarray([lr_eta, rho], jnp.float32)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         _update_kernel,
-        grid=(n // blk,),
+        grid=(padded // blk,),
         in_specs=[
             pl.BlockSpec((blk,), lambda i: (i,)),
             pl.BlockSpec((blk,), lambda i: (i,)),
@@ -70,6 +93,7 @@ def adafbio_update(p: jax.Array, w: jax.Array, a: jax.Array, lr_eta, rho,
             pl.BlockSpec((2,), lambda i: (0,)),
         ],
         out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((n,), p.dtype),
+        out_shape=jax.ShapeDtypeStruct((padded,), p.dtype),
         interpret=interpret,
-    )(p, w, a, s)
+    )(_padded(p, padded), _padded(w, padded), _padded(a, padded), s)
+    return out if padded == n else out[:n]

@@ -19,7 +19,9 @@ from repro.checkpoint import load_checkpoint, save_checkpoint
 from repro.configs import FedConfig, get_arch, reduced
 from repro.configs.base import ShapeConfig
 from repro.data.synthetic import FederatedLMData, make_client_batch
+from repro.fed.round import ENGINES
 from repro.fed.runtime import FederatedTrainer, client_batch_specs
+from repro.core.tree_util import tree_stack
 from repro.launch.mesh import make_local_mesh, make_production_mesh
 
 
@@ -39,6 +41,9 @@ def main():
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--eval-every", type=int, default=10)
+    ap.add_argument("--engine", default="scan", choices=list(ENGINES),
+                    help="scan: each q-step round + sync compiles as ONE "
+                         "program; eager: one jitted call per local step")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -64,23 +69,48 @@ def main():
         (states, server), start = load_checkpoint(args.ckpt, (states, server))
         print(f"resumed from step {start}")
 
-    local = jax.jit(tr.local_step_fn())
-    sync = jax.jit(tr.sync_step_fn())
     ev = jax.jit(tr.eval_fn())
 
     t0 = time.time()
-    for t in range(start, args.steps):
-        if t > 0 and t % fed.q == 0:
-            states, server = sync(states, server)
-        batch = make_client_batch(data, cfg, specs, t)
-        states, server = local(states, server, batch, key)
-        if t % args.eval_every == 0 or t == args.steps - 1:
-            loss = float(ev(states, batch))
-            print(f"step {t:5d}  f(x̄,ȳ) = {loss:.4f}  "
-                  f"({time.time()-t0:.1f}s)", flush=True)
+    steps_done = args.steps
+    if args.engine == "scan":
+        # fused round engine: q local steps + sync in one program per round
+        round_fn = jax.jit(tr.round_step_fn())
+        n_rounds = max((args.steps - start) // fed.q, 1)
+        steps_done = start + n_rounds * fed.q
+        if steps_done != args.steps:
+            print(f"engine=scan runs whole rounds: {steps_done - start} steps "
+                  f"instead of the requested {args.steps - start} "
+                  f"(use --steps divisible by q={fed.q})", flush=True)
+        for r in range(n_rounds):
+            t = start + r * fed.q
+            batch_q = tree_stack([make_client_batch(data, cfg, specs, t + j)
+                                  for j in range(fed.q)])
+            r0 = time.time()
+            states, server = round_fn(states, server, batch_q, key)
+            jax.block_until_ready(states)
+            dt = time.time() - r0
+            if r % max(args.eval_every // fed.q, 1) == 0 or r == n_rounds - 1:
+                last = jax.tree.map(lambda x: x[-1], batch_q)
+                loss = float(ev(states, last))
+                print(f"round {r:4d} (step {t + fed.q - 1:5d})  "
+                      f"f(x̄,ȳ) = {loss:.4f}  round={dt*1e3:.1f}ms  "
+                      f"({time.time()-t0:.1f}s)", flush=True)
+    else:
+        local = jax.jit(tr.local_step_fn())
+        sync = jax.jit(tr.sync_step_fn())
+        for t in range(start, args.steps):
+            if t > 0 and t % fed.q == 0:
+                states, server = sync(states, server)
+            batch = make_client_batch(data, cfg, specs, t)
+            states, server = local(states, server, batch, key)
+            if t % args.eval_every == 0 or t == args.steps - 1:
+                loss = float(ev(states, batch))
+                print(f"step {t:5d}  f(x̄,ȳ) = {loss:.4f}  "
+                      f"({time.time()-t0:.1f}s)", flush=True)
     if args.ckpt:
-        save_checkpoint(args.ckpt, (states, server), args.steps)
-        print(f"saved checkpoint to {args.ckpt}")
+        save_checkpoint(args.ckpt, (states, server), steps_done)
+        print(f"saved checkpoint to {args.ckpt} at step {steps_done}")
 
 
 if __name__ == "__main__":

@@ -7,6 +7,7 @@ K+2 per local step) and #communication rounds (1 per sync)."""
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Any, Callable, Dict, List, Optional
 
@@ -16,7 +17,8 @@ import jax.numpy as jnp
 from repro.configs.base import FedConfig
 from repro.core.baselines import Algorithm, make_algorithm
 from repro.core.bilevel import BilevelProblem
-from repro.core.tree_util import tree_bcast_axis0, tree_mean_axis0
+from repro.core.tree_util import (tree_bcast_axis0, tree_mean_axis0,
+                                  tree_stack)
 
 
 @dataclasses.dataclass
@@ -45,18 +47,28 @@ class FedDriver:
     # syncs); inactive clients hold state and are excluded from the average.
     participation: float = 1.0
     track_consensus: bool = False
+    # "eager": one jitted call per local step (seed behaviour).
+    # "scan":  the fused round engine — q local steps + sync compiled as ONE
+    #          program per communication round (repro.fed.round).
+    engine: str = "eager"
 
     def __post_init__(self):
+        from repro.fed.round import ENGINES
+        if self.engine not in ENGINES:
+            raise ValueError(f"engine must be one of {ENGINES}, "
+                             f"got {self.engine!r}")
         self.alg: Algorithm = make_algorithm(self.algorithm, self.fed,
                                              self.problem)
         self.consensus_log = []
+        self.round_seconds: List[float] = []   # per-round wall-clock (scan)
 
     def _batches(self, step: int):
         per_client = [self.batch_fn(m, step) for m in range(self.n_clients)]
         return jax.tree.map(lambda *xs: jnp.stack(xs), *per_client)
 
-    def run(self, total_steps: int, key=None, eval_every: int = 10) -> RunResult:
-        key = key if key is not None else jax.random.PRNGKey(0)
+    # -------------------------------------------------- shared pieces
+
+    def _init_run(self, key):
         m = self.n_clients
         fed = self.alg.fed
         xp, yp = self.init_xy(key)
@@ -69,70 +81,147 @@ class FedDriver:
         if fed.adaptive != "none":
             from repro.core.adafbio import warm_adaptive
             server = warm_adaptive(server, tree_mean_axis0(states), fed)
+        return states, server
+
+    def _local_body(self, states, server, batches, key, active):
+        m = self.n_clients
+        t = server["t"]
+        def one(st, b, i):
+            kk = jax.random.fold_in(jax.random.fold_in(key, i), t)
+            return self.alg.local_step(st, server["adaptive"], b, kk, t, m)
+        new = jax.vmap(one)(states, batches, jnp.arange(m))
+        # partial participation: inactive clients hold their state
+        new = jax.tree.map(
+            lambda a, b_: jnp.where(
+                active.reshape((m,) + (1,) * (a.ndim - 1)), a, b_),
+            new, states)
+        srv = dict(server)
+        srv["t"] = t + 1
+        return new, srv
+
+    def _sync_body(self, states, server, active):
+        m = self.n_clients
+        w = active.astype(jnp.float32)
+        w = w / jnp.maximum(w.sum(), 1.0)
+        avg = jax.tree.map(
+            lambda a: jnp.tensordot(w, a.astype(jnp.float32),
+                                    axes=1).astype(a.dtype), states)
+        new_client, new_server = self.alg.sync_update(server, avg, m)
+        return tree_bcast_axis0(new_client, m), new_server
+
+    def _active_mask(self, round_id):
+        m = self.n_clients
+        if self.participation >= 1.0:
+            return jnp.ones((m,), bool)
+        k = jax.random.fold_in(jax.random.PRNGKey(23), round_id)
+        n_active = max(int(self.participation * m), 1)
+        perm = jax.random.permutation(k, m)
+        return jnp.zeros((m,), bool).at[perm[:n_active]].set(True)
+
+    def _record(self, res: RunResult, states, step, samples, comms):
+        avg = tree_mean_axis0(states)
+        res.steps.append(step)
+        res.samples.append(samples)
+        res.comms.append(comms)
+        res.metric.append(float(self.metric_fn(avg["x"], avg["y"]))
+                          if self.metric_fn else float("nan"))
+        res.grad_norm.append(float(self.grad_norm_fn(avg["x"], avg["y"]))
+                             if self.grad_norm_fn else float("nan"))
+
+    # -------------------------------------------------- run loops
+
+    def run(self, total_steps: int, key=None, eval_every: int = 10) -> RunResult:
+        key = key if key is not None else jax.random.PRNGKey(0)
+        if self.engine == "scan":
+            return self._run_scan(total_steps, key, eval_every)
+        fed = self.alg.fed
+        states, server = self._init_run(key)
         samples = fed.q * (fed.neumann_k + 2)
         comms = 0
 
-        @jax.jit
-        def local(states, server, batches, key, active):
-            t = server["t"]
-            def one(st, b, i):
-                kk = jax.random.fold_in(jax.random.fold_in(key, i), t)
-                return self.alg.local_step(st, server["adaptive"], b, kk, t, m)
-            new = jax.vmap(one)(states, batches, jnp.arange(m))
-            # partial participation: inactive clients hold their state
-            new = jax.tree.map(
-                lambda a, b_: jnp.where(
-                    active.reshape((m,) + (1,) * (a.ndim - 1)), a, b_),
-                new, states)
-            srv = dict(server)
-            srv["t"] = t + 1
-            return new, srv
-
-        @jax.jit
-        def sync(states, server, active):
-            w = active.astype(jnp.float32)
-            w = w / jnp.maximum(w.sum(), 1.0)
-            avg = jax.tree.map(
-                lambda a: jnp.tensordot(w, a.astype(jnp.float32),
-                                        axes=1).astype(a.dtype), states)
-            new_client, new_server = self.alg.sync_update(server, avg, m)
-            return tree_bcast_axis0(new_client, m), new_server
-
-        def active_mask(round_id):
-            if self.participation >= 1.0:
-                return jnp.ones((m,), bool)
-            k = jax.random.fold_in(jax.random.PRNGKey(23), round_id)
-            n_active = max(int(self.participation * m), 1)
-            perm = jax.random.permutation(k, m)
-            return jnp.zeros((m,), bool).at[perm[:n_active]].set(True)
+        local = jax.jit(self._local_body)
+        sync = jax.jit(self._sync_body)
 
         res = RunResult(self.alg.name, [], [], [], [], [], 0.0)
         t0 = time.time()
+        r0 = time.time()
         for t in range(total_steps):
             rnd = t // fed.q
-            active = active_mask(rnd)
+            active = self._active_mask(rnd)
             if t > 0 and t % fed.q == 0:
                 if self.track_consensus:
                     from repro.core.metrics import consensus_error
                     ce = consensus_error(states)
                     self.consensus_log.append(
                         {"step": t, **{k: float(v) for k, v in ce.items()}})
-                states, server = sync(states, server, active_mask(rnd - 1))
+                states, server = sync(states, server,
+                                      self._active_mask(rnd - 1))
                 comms += 1
             states, server = local(states, server, self._batches(t), key,
                                    active)
             samples += fed.neumann_k + 2
+            if (t + 1) % fed.q == 0:
+                # per-round wall-clock, comparable with the scan engine's
+                jax.block_until_ready(states)
+                self.round_seconds.append(time.time() - r0)
+                r0 = time.time()
             if t % eval_every == 0 or t == total_steps - 1:
-                avg = tree_mean_axis0(states)
-                res.steps.append(t)
-                res.samples.append(samples)
-                res.comms.append(comms)
-                res.metric.append(
-                    float(self.metric_fn(avg["x"], avg["y"]))
-                    if self.metric_fn else float("nan"))
-                res.grad_norm.append(
-                    float(self.grad_norm_fn(avg["x"], avg["y"]))
-                    if self.grad_norm_fn else float("nan"))
+                self._record(res, states, t, samples, comms)
+        res.seconds = time.time() - t0
+        res.final_avg_state = tree_mean_axis0(states)
+        return res
+
+    def _run_scan(self, total_steps: int, key, eval_every: int) -> RunResult:
+        """Fused round engine: each communication round runs as ONE jitted
+        program, shaped exactly like the eager loop — the sync that closes
+        the PREVIOUS round, then this round's local steps as a ``lax.scan``.
+        Same per-step math, same fold_in(t) RNG keys, same step count (a
+        trailing partial round scans the remainder), and every recorded state
+        is post-local/pre-sync like the eager loop's — only the eval
+        granularity is per-round instead of per-step.
+        """
+        from repro.fed.round import make_round_step
+        if self.track_consensus:
+            raise ValueError("track_consensus needs engine='eager' (it reads "
+                             "pre-sync client states mid-round)")
+        fed = self.alg.fed
+        q = fed.q
+        states, server = self._init_run(key)
+        samples = fed.q * (fed.neumann_k + 2)
+        comms = 0
+
+        @functools.partial(jax.jit, static_argnames=("n_steps", "sync_first"))
+        def segment(states, server, batches_q, kk, active_prev, active, *,
+                    n_steps, sync_first):
+            if sync_first:
+                states, server = self._sync_body(states, server, active_prev)
+            local = lambda st, srv, b, k: self._local_body(st, srv, b, k,
+                                                           active)
+            return make_round_step(local, lambda st, srv: (st, srv),
+                                   n_steps)(states, server, batches_q, kk)
+
+        full, rem = divmod(total_steps, q)
+        lengths = [q] * full + ([rem] if rem else [])
+        eval_rounds = max(eval_every // q, 1)
+        res = RunResult(self.alg.name, [], [], [], [], [], 0.0)
+        t0 = time.time()
+        t = 0
+        for r, n_steps in enumerate(lengths):
+            batches_q = tree_stack([self._batches(t + j)
+                                    for j in range(n_steps)])
+            r0 = time.time()
+            states, server = segment(
+                states, server, batches_q, key,
+                self._active_mask(r - 1), self._active_mask(r),
+                n_steps=n_steps, sync_first=r > 0)
+            jax.block_until_ready(states)
+            self.round_seconds.append(time.time() - r0)
+            t += n_steps
+            samples += n_steps * (fed.neumann_k + 2)
+            if r > 0:
+                comms += 1
+            if r % eval_rounds == 0 or r == len(lengths) - 1:
+                self._record(res, states, t - 1, samples, comms)
         res.seconds = time.time() - t0
         res.final_avg_state = tree_mean_axis0(states)
         return res

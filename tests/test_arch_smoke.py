@@ -38,6 +38,7 @@ def test_reduced_forward(arch_id):
     assert np.isfinite(np.asarray(logits, dtype=np.float32)).all()
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch_id", list_arch_ids())
 def test_reduced_train_step(arch_id):
     cfg = reduced(get_arch(arch_id))

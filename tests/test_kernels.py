@@ -4,7 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import ref
+from repro.core.tree_util import tree_pack, tree_unpack
+from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.mamba_scan import mamba_scan
 from repro.kernels.storm_update import adafbio_update, storm_update
@@ -59,6 +60,105 @@ def test_adafbio_update(n, dtype):
     tol = 2e-2 if dtype == jnp.bfloat16 else 1e-6
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+# ----------------------------------------------------- non-divisible blocks
+
+@pytest.mark.parametrize("n,block", [
+    (1000, 256),       # n not a multiple of the block
+    (130, 128),        # barely over one lane
+    (65536 + 7, 65536),  # big buffer + ragged tail
+    (5, 65536),        # smaller than one lane
+])
+def test_storm_update_nondivisible(n, block):
+    key = jax.random.PRNGKey(5)
+    gn, go, est = (jax.random.normal(k, (n,), jnp.float32)
+                   for k in jax.random.split(key, 3))
+    got = storm_update(gn, go, est, 0.3, block=block, interpret=True)
+    want = ref.storm_update_ref(gn, go, est, 0.3)
+    assert got.shape == (n,)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6,
+                               rtol=1e-6)
+
+
+@pytest.mark.parametrize("n,block", [(1000, 256), (131, 128), (77, 65536)])
+def test_adafbio_update_nondivisible(n, block):
+    key = jax.random.PRNGKey(6)
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = jax.random.normal(k1, (n,))
+    w = jax.random.normal(k2, (n,))
+    a = jnp.abs(jax.random.normal(k3, (n,)))
+    got = adafbio_update(p, w, a, 0.01, 1e-4, block=block, interpret=True)
+    want = ref.adafbio_update_ref(p, w, a, 0.01, 1e-4)
+    assert got.shape == (n,)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6,
+                               rtol=1e-6)
+
+
+# ----------------------------------------------------- flat-buffer tree path
+
+def _param_tree(key, dtype_x=jnp.float32):
+    """Odd leaf sizes on purpose: exercises pack padding + unpack slicing."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"emb": jax.random.normal(k1, (13, 7), jnp.float32).astype(dtype_x),
+            "head": {"w": jax.random.normal(k2, (5, 11), jnp.float32)
+                     .astype(dtype_x),
+                     "b": jax.random.normal(k3, (3,), jnp.float32)
+                     .astype(dtype_x)}}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_tree_pack_roundtrip(dtype):
+    tree = _param_tree(jax.random.PRNGKey(0), dtype)
+    flat, spec = tree_pack(tree)
+    assert flat.ndim == 1 and flat.shape[0] % 128 == 0
+    out = tree_unpack(flat, spec)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=1e-2 if dtype == jnp.bfloat16 else 0)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_storm_update_tree(dtype, use_pallas):
+    key = jax.random.PRNGKey(7)
+    g_new = _param_tree(jax.random.fold_in(key, 0), dtype)
+    g_old = _param_tree(jax.random.fold_in(key, 1), dtype)
+    est = _param_tree(jax.random.fold_in(key, 2), dtype)
+    got = ops.storm_update_tree(g_new, g_old, est, 0.25,
+                                use_pallas=use_pallas, interpret=True,
+                                block=128)
+    want = jax.tree.map(lambda n, o, e: ref.storm_update_ref(n, o, e, 0.25),
+                        g_new, g_old, est)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-6
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=tol,
+                                   rtol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_adafbio_update_tree(dtype, use_pallas):
+    key = jax.random.PRNGKey(8)
+    p = _param_tree(jax.random.fold_in(key, 0), dtype)
+    w = _param_tree(jax.random.fold_in(key, 1), dtype)
+    a = jax.tree.map(jnp.abs, _param_tree(jax.random.fold_in(key, 2)))
+    got = ops.adafbio_update_tree(p, w, a, 0.01, 1e-4,
+                                  use_pallas=use_pallas, interpret=True,
+                                  block=128)
+    want = jax.tree.map(
+        lambda pi, wi, ai: ref.adafbio_update_ref(pi, wi, ai, 0.01, 1e-4),
+        p, w, a)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-6
+    for x, y in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        assert x.dtype == y.dtype and x.shape == y.shape
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32), atol=tol,
+                                   rtol=tol)
 
 
 @pytest.mark.parametrize("b,s,di,n", [(1, 32, 256, 8), (2, 64, 1024, 16)])

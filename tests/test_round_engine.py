@@ -1,0 +1,225 @@
+"""Round engine (repro.fed.round): the fused lax.scan round must be
+numerics-identical to q eager local_step calls + one sync_step, and every
+per-client step must batch under jax.vmap (regression for the jax 0.4.x
+optimization_barrier batching-rule gap that broke the whole seed suite)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import FedConfig
+from repro.core import adafbio
+from repro.core.baselines import make_algorithm
+from repro.core.bilevel import quadratic_bilevel_problem, quadratic_true_grad
+from repro.core.tree_util import (tree_bcast_axis0, tree_mean_axis0,
+                                  tree_stack)
+from repro.fed.round import make_round_step, stack_round_batches
+from repro.tasks.driver import FedDriver
+
+
+def _quad_setup(adaptive="adam", seed=0, d=8, p=6, fused="auto"):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    A = jax.random.normal(k1, (p, p))
+    H = A @ A.T / p + 0.5 * jnp.eye(p)
+    Bm = jax.random.normal(k2, (p, d)) * 0.3
+    c = jax.random.normal(k3, (p,))
+    Q = jnp.eye(d) * 0.2
+    prob = quadratic_bilevel_problem(H, Bm, c, Q)
+    fed = FedConfig(q=4, neumann_k=8, lr_x=0.3, lr_y=0.3,
+                    theta=float(1.0 / jnp.linalg.eigvalsh(H)[-1]),
+                    adaptive=adaptive, fused=fused)
+    batches = {"f": 0.0, "g": 0.0, "g0": 0.0,
+               "gi": jnp.zeros((fed.neumann_k,))}
+    return prob, fed, batches, (H, Bm, c, Q)
+
+
+def _init_clients(alg, fed, batches, m, d=8, p=6):
+    xp, yp = jnp.ones((d,)) * 2.0, jnp.zeros((p,))
+    b_m = jax.tree.map(lambda x: jnp.stack([jnp.asarray(x)] * m), batches)
+    states = jax.vmap(lambda k, b: alg.init_client_state(xp, yp, b, k))(
+        jax.random.split(jax.random.PRNGKey(7), m), b_m)
+    server = alg.init_server_state(xp)
+    if fed.adaptive != "none":
+        server = adafbio.warm_adaptive(server, tree_mean_axis0(states), fed)
+    return states, server, b_m
+
+
+# ------------------------------------------------------------ vmap regression
+
+def test_local_step_works_under_vmap():
+    """Seed-breaking bug: lax.optimization_barrier has no batching rule on
+    jax 0.4.x, so a vmapped local_step raised NotImplementedError. The
+    tree_barrier wrapper must keep every client step vmap-able."""
+    prob, fed, batches, _ = _quad_setup()
+    m = 4
+    alg = make_algorithm("adafbio", fed, prob)
+    states, server, b_m = _init_clients(alg, fed, batches, m)
+
+    def one(st, k):
+        return alg.local_step(st, server["adaptive"], batches, k,
+                              jnp.int32(0), m)
+
+    out = jax.vmap(one)(states, jax.random.split(jax.random.PRNGKey(0), m))
+    for leaf in jax.tree.leaves(out):
+        assert leaf.shape[0] == m
+        assert np.isfinite(np.asarray(leaf, np.float32)).all()
+    # and under jit(vmap(...)), the production composition
+    out2 = jax.jit(jax.vmap(one))(states,
+                                  jax.random.split(jax.random.PRNGKey(0), m))
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(out2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+# ------------------------------------------------------------ scan ≡ eager
+
+@pytest.mark.parametrize("adaptive", ["adam", "none"])
+def test_round_step_matches_eager_steps(adaptive):
+    """make_round_step(local, sync, q) ≡ q× local_step + sync_step (1e-5)."""
+    prob, fed, batches, _ = _quad_setup(adaptive=adaptive)
+    m, q = 4, fed.q
+    alg = make_algorithm("adafbio", fed, prob)
+    states, server, b_m = _init_clients(alg, fed, batches, m)
+    key = jax.random.PRNGKey(3)
+
+    def local(states, server, batch, kk):
+        t = server["t"]
+        def one(st, b, i):
+            k2 = jax.random.fold_in(jax.random.fold_in(kk, i), t)
+            return alg.local_step(st, server["adaptive"], b, k2, t, m)
+        new = jax.vmap(one)(states, batch, jnp.arange(m))
+        srv = dict(server)
+        srv["t"] = t + 1
+        return new, srv
+
+    def sync(states, server):
+        new_client, new_server = alg.sync_update(server,
+                                                 tree_mean_axis0(states), m)
+        return tree_bcast_axis0(new_client, m), new_server
+
+    # eager: q explicit jitted local calls + one sync
+    st_e, srv_e = states, server
+    local_j, sync_j = jax.jit(local), jax.jit(sync)
+    for _ in range(q):
+        st_e, srv_e = local_j(st_e, srv_e, b_m, key)
+    st_e, srv_e = sync_j(st_e, srv_e)
+
+    # fused: one jitted scan round
+    round_fn = jax.jit(make_round_step(local, sync, q))
+    batches_q = tree_stack([b_m] * q)
+    st_s, srv_s = round_fn(states, server, batches_q, key)
+
+    for pa, (a, b) in zip(
+            jax.tree_util.tree_leaves_with_path(st_e),
+            zip(jax.tree.leaves(st_e), jax.tree.leaves(st_s))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5,
+                                   rtol=1e-5, err_msg=str(pa[0]))
+    assert int(srv_e["t"]) == int(srv_s["t"])
+    for a, b in zip(jax.tree.leaves(srv_e["adaptive"]),
+                    jax.tree.leaves(srv_s["adaptive"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5,
+                                   rtol=1e-5)
+
+
+@pytest.mark.parametrize("steps", [32, 6, 3])
+def test_driver_scan_engine_matches_eager(steps):
+    """FedDriver(engine='scan') reproduces the eager run end-to-end on the
+    quadratic problem: same final averaged state, gradient norm, step count,
+    and cost accounting — including a trailing partial round (steps % q != 0)
+    and a sub-q run (steps < q)."""
+    runs = {}
+    for engine in ("eager", "scan"):
+        prob, fed, batches, (H, Bm, c, Q) = _quad_setup()
+        d = FedDriver(
+            prob, fed, 4,
+            lambda client, step: dict(batches),
+            lambda k: (jnp.ones((8,)) * 2.0, jnp.zeros((6,))),
+            grad_norm_fn=lambda x, y: jnp.linalg.norm(
+                quadratic_true_grad(H, Bm, c, Q, x)),
+            algorithm="adafbio", engine=engine)
+        runs[engine] = d.run(steps, eval_every=steps)
+    for a, b in zip(jax.tree.leaves(runs["eager"].final_avg_state),
+                    jax.tree.leaves(runs["scan"].final_avg_state)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5,
+                                   rtol=1e-5)
+    np.testing.assert_allclose(runs["eager"].grad_norm[-1],
+                               runs["scan"].grad_norm[-1], atol=1e-5,
+                               rtol=1e-4)
+    # identical step / communication / sample accounting at the final record
+    assert runs["eager"].steps[-1] == runs["scan"].steps[-1] == steps - 1
+    assert runs["eager"].comms[-1] == runs["scan"].comms[-1]
+    assert runs["eager"].samples[-1] == runs["scan"].samples[-1]
+
+
+def test_stack_round_batches_layout():
+    got = stack_round_batches(lambda t: {"a": jnp.full((2,), t)}, t0=3, q=4)
+    assert got["a"].shape == (4, 2)
+    np.testing.assert_array_equal(np.asarray(got["a"][:, 0]),
+                                  np.arange(3, 7))
+
+
+# ------------------------------------------------------------ fused path
+
+def test_fused_flat_buffer_matches_per_leaf():
+    """fed.fused='on' (flat-buffer kernels, jnp fallback on CPU) must match
+    fed.fused='off' (per-leaf jnp) through a whole local step."""
+    outs = {}
+    for mode in ("on", "off"):
+        prob, fed, batches, _ = _quad_setup(fused=mode)
+        alg = make_algorithm("adafbio", fed, prob)
+        states, server, b_m = _init_clients(alg, fed, batches, 4)
+
+        def one(st, k):
+            return alg.local_step(st, server["adaptive"], batches, k,
+                                  jnp.int32(1), 4)
+        outs[mode] = jax.jit(jax.vmap(one))(
+            states, jax.random.split(jax.random.PRNGKey(0), 4))
+    for a, b in zip(jax.tree.leaves(outs["on"]),
+                    jax.tree.leaves(outs["off"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5,
+                                   rtol=1e-5)
+
+
+# ------------------------------------------------------------ trainer level
+
+@pytest.mark.slow
+def test_trainer_round_step_matches_eager_lm():
+    """FederatedTrainer.round_step_fn() ≡ q× local_step_fn() + sync_step_fn()
+    on a reduced LM arch (bf16 params -> bf16-scale tolerance)."""
+    from repro.configs import FedConfig, get_arch, reduced
+    from repro.configs.base import ShapeConfig
+    from repro.fed.runtime import FederatedTrainer, client_batch_specs
+
+    cfg = reduced(get_arch("qwen1.5-4b"))
+    fed = FedConfig(q=2, neumann_k=2, lr_x=1e-2, lr_y=1e-1)
+    shape = ShapeConfig("t", 32, 2, "train")
+    tr = FederatedTrainer(cfg, fed, shape, mesh=None)
+    specs, _ = client_batch_specs(cfg, shape, tr.m, fed)
+    key = jax.random.PRNGKey(0)
+
+    def batch_at(t):
+        kk = jax.random.fold_in(key, t)
+        return {k: (jax.random.randint(kk, v.shape, 0, cfg.vocab)
+                    if v.dtype == jnp.int32 else jnp.zeros(v.shape, v.dtype))
+                for k, v in specs.items()}
+
+    states, server = tr.init_states(key, batch_at(0))
+
+    st_e, srv_e = states, server
+    local = jax.jit(tr.local_step_fn())
+    sync = jax.jit(tr.sync_step_fn())
+    for t in range(fed.q):
+        st_e, srv_e = local(st_e, srv_e, batch_at(t), key)
+    st_e, srv_e = sync(st_e, srv_e)
+
+    round_fn = jax.jit(tr.round_step_fn())
+    batches_q = tree_stack([batch_at(t) for t in range(fed.q)])
+    st_s, srv_s = round_fn(states, server, batches_q, key)
+
+    for a, b in zip(jax.tree.leaves(st_e), jax.tree.leaves(st_s)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=2e-2, rtol=2e-2)
+    assert int(srv_e["t"]) == int(srv_s["t"])

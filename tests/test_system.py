@@ -47,6 +47,7 @@ def test_adafbio_converges_on_quadratic():
     assert r.grad_norm[-1] < 0.25 * r.grad_norm[0]
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("algorithm", ALGORITHMS)
 def test_all_algorithms_run_and_reduce_grad(algorithm):
     d = _quad_driver(algorithm)
@@ -57,6 +58,7 @@ def test_all_algorithms_run_and_reduce_grad(algorithm):
     assert r.comms[-1] == (r.steps[-1]) // d.fed.q
 
 
+@pytest.mark.slow
 def test_hyperclean_learns_to_downweight_corrupted():
     cfg = HyperCleanConfig(n_clients=4, n_train_per_client=64,
                            n_val_per_client=32)
@@ -72,6 +74,7 @@ def test_hyperclean_learns_to_downweight_corrupted():
     assert r.metric[-1] < r.metric[0] * 1.05
 
 
+@pytest.mark.slow
 def test_hyperrep_loss_decreases():
     cfg = HyperRepConfig(n_clients=4)
     hr = build_hyperrep(cfg)
@@ -81,6 +84,7 @@ def test_hyperrep_loss_decreases():
     assert r.metric[-1] < r.metric[0]
 
 
+@pytest.mark.slow
 def test_communication_complexity_scales_with_q():
     """T/q sync rounds (Remark 2): doubling q halves communication."""
     import dataclasses
