@@ -140,10 +140,11 @@ def engine_wallclock(rounds=12):
         t0 = time.time()
         r = d.run(steps, eval_every=steps - 1)
         total = time.time() - t0
-        # both engines log per-round wall-clock; drop the first two rounds
-        # (local-phase jit compile lands in round 0, the sync variant in
-        # round 1 — for both engines) so the comparison is steady-state
-        timed = d.round_seconds[2:] or d.round_seconds[1:]
+        # round_seconds already excludes the first (compile-including) round
+        # — reported as RunResult.compile_seconds — but the sync variant of
+        # the program still compiles in the SECOND round for both engines,
+        # so drop one more for a steady-state comparison
+        timed = d.round_seconds[1:] or d.round_seconds
         per_round = sum(timed) / len(timed) if timed else total / rounds
         stats[engine] = per_round
         _row(f"engine/{engine}", per_round * 1e6,
@@ -152,6 +153,65 @@ def engine_wallclock(rounds=12):
     if stats.get("scan") and stats.get("eager"):
         _row("engine/speedup_eager_over_scan", 0.0,
              f"x{stats['eager'] / max(stats['scan'], 1e-12):.2f}")
+
+
+# ---------------------------------------------------------------- population
+
+def population_scale(n=256, c=16, rounds=8, sampler="uniform"):
+    """Cohort-sampled population vs the same-size plain run: population mode
+    keeps N client states banked and computes only the C sampled clients per
+    round (gather → fused scan round → scatter), so a round costs what a
+    plain M=C round costs — compute and host data-building scale with the
+    cohort, not the population. The legacy masked path at M=N is the
+    pay-O(N)-for-C-clients baseline the subsystem replaces."""
+    import dataclasses
+    from repro.configs.base import PopulationConfig
+    from repro.core.baselines import make_algorithm
+    from tests.test_system import _quad_driver
+
+    def driver(m):
+        # recalibrate the step sizes for the bigger quadratic (the defaults
+        # are tuned for d=8 and diverge at d=96)
+        d = _quad_driver("adafbio", m=m, d=96, p=64)
+        d.fed = dataclasses.replace(d.alg.fed, lr_x=0.05, lr_y=0.2)
+        d.alg = make_algorithm("adafbio", d.fed, d.problem)
+        return d
+
+    def steady(d):
+        timed = d.round_seconds[1:] or d.round_seconds
+        return sum(timed) / max(len(timed), 1)
+
+    stats = {}
+
+    dp = driver(c)
+    dp.engine = "scan"
+    q = dp.fed.q
+    steps = rounds * q
+    rp = dp.run(steps, eval_every=steps - 1)
+    stats["plain"] = steady(dp)
+    _row(f"population/plain_m{c}", stats["plain"] * 1e6,
+         f"q={q};rounds={rounds};gnormT={rp.grad_norm[-1]:.3f}")
+
+    dn = driver(n)
+    dn.population = PopulationConfig(n=n, cohort=c, sampler=sampler)
+    rn = dn.run(steps, eval_every=steps - 1)
+    stats["pop"] = steady(dn)
+    _row(f"population/pop_n{n}_c{c}_{sampler}", stats["pop"] * 1e6,
+         f"q={q};rounds={rounds};gnormT={rn.grad_norm[-1]:.3f};"
+         f"compile_s={rn.compile_seconds:.2f}")
+
+    dm = driver(n)
+    dm.engine = "scan"
+    dm.participation = c / n
+    rm = dm.run(steps, eval_every=steps - 1)
+    stats["masked"] = steady(dm)
+    _row(f"population/masked_m{n}", stats["masked"] * 1e6,
+         f"q={q};rounds={rounds};gnormT={rm.grad_norm[-1]:.3f}")
+
+    _row("population/pop_over_plain", 0.0,
+         f"x{stats['pop'] / max(stats['plain'], 1e-12):.2f}")
+    _row("population/masked_over_pop", 0.0,
+         f"x{stats['masked'] / max(stats['pop'], 1e-12):.2f}")
 
 
 # ---------------------------------------------------------------- kernels
@@ -198,22 +258,35 @@ def roofline_summary():
 
 def main() -> None:
     global ENGINE
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--engine", default="eager", choices=["eager", "scan"],
+                    help="local-step engine for the driver-based benchmarks "
+                         "(engine_wallclock always measures both)")
+    ap.add_argument("--population", type=int, default=256,
+                    help="population size N for the population benchmark")
+    ap.add_argument("--cohort", type=int, default=16,
+                    help="cohort size C for the population benchmark")
+    ap.add_argument("--sampler", default="uniform",
+                    choices=["uniform", "roundrobin", "trace"],
+                    help="cohort sampler for the population benchmark")
+    ap.add_argument("--rounds", type=int, default=8,
+                    help="timed rounds for the population benchmark")
     benches = {
         "table1": table1_complexity,
         "fig_hyperrep": fig1_hyperrep,
         "fig_hyperclean": fig2_hyperclean,
         "ablation_adaptive": ablation_adaptive,
         "engine": engine_wallclock,
+        "population": None,     # bound to CLI args below
         "kernel": kernel_micro,
         "roofline": roofline_summary,
     }
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--engine", default="eager", choices=["eager", "scan"],
-                    help="local-step engine for the driver-based benchmarks "
-                         "(engine_wallclock always measures both)")
     ap.add_argument("--only", default=None, choices=sorted(benches),
                     help="run a single benchmark by name (e.g. engine)")
     args = ap.parse_args()
+    benches["population"] = lambda: population_scale(
+        args.population, args.cohort, rounds=args.rounds,
+        sampler=args.sampler)
     ENGINE = args.engine
     print("name,us_per_call,derived")
     if args.only:

@@ -43,7 +43,9 @@ def main():
     print(f"{'step':>6} {'samples':>8} {'comms':>6} {'|∇F(x̄)|':>10}")
     for s, smp, cm, g in zip(r.steps, r.samples, r.comms, r.grad_norm):
         print(f"{s:6d} {smp:8d} {cm:6d} {g:10.4f}")
-    rounds_timed = driver.round_seconds[1:]    # drop the compile round
+    # round_seconds excludes the compile round (RunResult.compile_seconds);
+    # drop one more entry — the sync variant compiles in round 1
+    rounds_timed = driver.round_seconds[1:]
     per_round = (sum(rounds_timed) / len(rounds_timed) * 1e3
                  if rounds_timed else float("nan"))
     print(f"\nAdaFBiO: q={fed.q} local steps per communication round, "

@@ -4,6 +4,7 @@ from repro.configs.base import (
     FedConfig,
     INPUT_SHAPES,
     MoEConfig,
+    PopulationConfig,
     ShapeConfig,
     SSMConfig,
     get_arch,
@@ -14,5 +15,6 @@ from repro.configs.base import (
 
 __all__ = [
     "ArchConfig", "EncoderConfig", "FedConfig", "INPUT_SHAPES", "MoEConfig",
-    "ShapeConfig", "SSMConfig", "get_arch", "get_shape", "list_arch_ids", "reduced",
+    "PopulationConfig", "ShapeConfig", "SSMConfig", "get_arch", "get_shape",
+    "list_arch_ids", "reduced",
 ]

@@ -170,6 +170,37 @@ class FedConfig:
     fused: str = "auto"
 
 
+@dataclasses.dataclass(frozen=True)
+class PopulationConfig:
+    """Client population ≫ per-round cohort (repro.fed.population).
+
+    ``n`` persistent client states live in a bank; each round a sampler
+    picks a ``cohort`` of C clients, and only those C are computed (gather →
+    fused scan round → scatter), so per-round compute is O(C) not O(n).
+    """
+    n: int                          # population size N
+    cohort: int                     # per-round compute cohort C
+    sampler: str = "uniform"        # uniform | roundrobin | trace
+    sync_mode: str = "broadcast"    # broadcast | participants (fed.population)
+    # staleness-aware aggregation: weight ∝ (1 + rounds_since_sync)^-decay;
+    # 0 = plain uniform cohort average (only meaningful with participants sync)
+    staleness_decay: float = 0.0
+    # availability-trace sampler schedule (sampler == "trace")
+    trace_period: int = 8
+    trace_duty: float = 0.5
+
+    def __post_init__(self):
+        if not 1 <= self.cohort <= self.n:
+            raise ValueError(f"need 1 <= cohort <= n, got cohort="
+                             f"{self.cohort}, n={self.n}")
+        if self.sync_mode not in ("broadcast", "participants"):
+            raise ValueError(f"sync_mode must be 'broadcast' or "
+                             f"'participants', got {self.sync_mode!r}")
+        if self.sampler not in ("uniform", "roundrobin", "trace"):
+            raise ValueError(f"sampler must be one of uniform/roundrobin/"
+                             f"trace, got {self.sampler!r}")
+
+
 _ARCH_IDS = [
     "whisper-tiny",
     "zamba2-1.2b",

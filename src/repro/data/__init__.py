@@ -1,4 +1,9 @@
-from repro.data.synthetic import FederatedLMData, make_client_batch
+from repro.data.synthetic import (FederatedLMData, make_client_batch,
+                                  make_cohort_batch)
 from repro.data.hyperclean import HyperCleanData
+from repro.data.partition import (dirichlet_class_priors, dirichlet_partition,
+                                  label_histogram)
 
-__all__ = ["FederatedLMData", "make_client_batch", "HyperCleanData"]
+__all__ = ["FederatedLMData", "make_client_batch", "make_cohort_batch",
+           "HyperCleanData", "dirichlet_class_priors", "dirichlet_partition",
+           "label_histogram"]

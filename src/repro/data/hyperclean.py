@@ -8,10 +8,21 @@ classifier with an L2 (strongly convex) regularizer.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
+
+
+@functools.lru_cache(maxsize=8)
+def _label_prior_table(seed: int, n_clients: int, n_classes: int,
+                       alpha: float) -> jax.Array:
+    """[n_clients, n_classes] Dirichlet label priors, computed once per
+    (seed, N, K, alpha) rather than per client_data() call."""
+    from repro.data.partition import dirichlet_class_priors
+    return dirichlet_class_priors(jax.random.PRNGKey(seed), n_clients,
+                                  n_classes, alpha)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -23,6 +34,10 @@ class HyperCleanData:
     n_classes: int
     corrupt_frac: float
     seed: int = 0
+    # Dirichlet label skew: client m draws labels from a client-specific
+    # Dir(label_alpha·1_K) prior (data.partition) instead of uniformly —
+    # small alpha concentrates each client on few classes. 0 disables.
+    label_alpha: float = 0.0
 
     def client_data(self, m: int) -> Dict[str, jax.Array]:
         key = jax.random.fold_in(jax.random.PRNGKey(self.seed), m)
@@ -33,10 +48,20 @@ class HyperCleanData:
                                   (self.n_classes, self.feat_dim))
         rot = jnp.eye(self.feat_dim) + 0.1 * jax.random.normal(
             k1, (self.feat_dim, self.feat_dim)) / jnp.sqrt(self.feat_dim)
+        if self.label_alpha > 0:
+            prior = _label_prior_table(self.seed + 2, self.n_clients,
+                                       self.n_classes, self.label_alpha)[m]
+            label_logits = jnp.log(prior + 1e-20)
+        else:
+            label_logits = None    # uniform via randint: keeps the seed's
+                                   # exact draws for label_alpha == 0 runs
 
         def make(split_key, n):
             ka, kb = jax.random.split(split_key)
-            labels = jax.random.randint(ka, (n,), 0, self.n_classes)
+            if label_logits is None:
+                labels = jax.random.randint(ka, (n,), 0, self.n_classes)
+            else:
+                labels = jax.random.categorical(ka, label_logits, shape=(n,))
             feats = proto[labels] @ rot + 0.5 * jax.random.normal(
                 kb, (n, self.feat_dim))
             return feats.astype(jnp.float32), labels

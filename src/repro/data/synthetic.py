@@ -5,15 +5,37 @@ distribution is a client-specific permutation of a Zipf law — clients are
 *statistically heterogeneous* (Assumption 7's δ > 0 is real, not cosmetic),
 while batches are reproducible pure functions of (client, step, slot), so a
 restarted run or a different sharding sees identical data.
+
+Two heterogeneity models:
+
+  * permutation (default): client unigrams are Zipf laws under client-specific
+    vocabulary permutations, mixed by ``heterogeneity`` ∈ [0, 1];
+  * Dirichlet (``dirichlet_alpha``): client unigrams are rows of
+    ``data.partition.dirichlet_class_priors`` over the vocabulary — the
+    standard label-skew knob, small alpha = strong skew. Used by the
+    population-mode runs where per-client skew must be controllable at
+    N ≫ vmap scale.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict
+import functools
+from typing import Any, Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+@functools.lru_cache(maxsize=8)
+def _dirichlet_logits_table(vocab: int, n_clients: int,
+                            alpha: float) -> jax.Array:
+    """[n_clients, vocab] log-priors, computed once per (vocab, N, alpha) —
+    population-mode host batch building stays O(C) per round."""
+    from repro.data.partition import dirichlet_class_priors
+    priors = dirichlet_class_priors(jax.random.PRNGKey(7), n_clients, vocab,
+                                    alpha)
+    return jnp.log(priors + 1e-20)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -22,8 +44,15 @@ class FederatedLMData:
     n_clients: int
     zipf_a: float = 1.2
     heterogeneity: float = 1.0    # 0 = iid clients, 1 = fully permuted unigrams
+    # Dirichlet label-skew unigrams (overrides the permutation model):
+    # client m's unigram ~ Dir(alpha·1_V); small alpha = strong non-IID skew
+    dirichlet_alpha: Optional[float] = None
 
     def _client_logits(self, client: jax.Array) -> jax.Array:
+        if self.dirichlet_alpha is not None:
+            table = _dirichlet_logits_table(self.vocab, self.n_clients,
+                                            self.dirichlet_alpha)
+            return table[client]
         base = -self.zipf_a * jnp.log(jnp.arange(1, self.vocab + 1, dtype=jnp.float32))
         key = jax.random.fold_in(jax.random.PRNGKey(7), client)
         perm = jax.random.permutation(key, self.vocab)
@@ -39,6 +68,25 @@ class FederatedLMData:
         return jax.random.categorical(key, logits, shape=shape).astype(jnp.int32)
 
 
+def _materialize(data: FederatedLMData, specs: Dict[str, Any], step: int,
+                 clients: Sequence[int]) -> Dict[str, jax.Array]:
+    out = {}
+    for slot_id, (name, sds) in enumerate(sorted(specs.items())):
+        if sds.dtype == jnp.int32:
+            toks = [data.sample(int(c), step, slot_id, sds.shape[1:])
+                    for c in clients]
+            out[name] = jnp.stack(toks)
+        else:
+            # modality stubs keyed per GLOBAL client like the token slots, so
+            # cohort row j ≡ full-population row ids[j] for the same step
+            key = jax.random.fold_in(jax.random.PRNGKey(11), slot_id + 100 * step)
+            rows = [jax.random.normal(jax.random.fold_in(key, int(c)),
+                                      sds.shape[1:], jnp.float32) * 0.02
+                    for c in clients]
+            out[name] = jnp.stack(rows).astype(sds.dtype)
+    return out
+
+
 def make_client_batch(data: FederatedLMData, cfg, specs: Dict[str, Any],
                       step: int) -> Dict[str, jax.Array]:
     """Materialize one training-step batch matching ``client_batch_specs``.
@@ -47,16 +95,13 @@ def make_client_batch(data: FederatedLMData, cfg, specs: Dict[str, Any],
     frame/patch embeddings — the allowed frontend carve-out) get unit-scale
     deterministic noise.
     """
-    out = {}
-    for slot_id, (name, sds) in enumerate(sorted(specs.items())):
-        if sds.dtype == jnp.int32:
-            m = sds.shape[0]
-            toks = []
-            for c in range(m):
-                toks.append(data.sample(c, step, slot_id, sds.shape[1:]))
-            out[name] = jnp.stack(toks)
-        else:
-            key = jax.random.fold_in(jax.random.PRNGKey(11), slot_id + 100 * step)
-            out[name] = (jax.random.normal(key, sds.shape, jnp.float32)
-                         * 0.02).astype(sds.dtype)
-    return out
+    m = next(s.shape[0] for s in specs.values())
+    return _materialize(data, specs, step, range(m))
+
+
+def make_cohort_batch(data: FederatedLMData, cfg, specs: Dict[str, Any],
+                      step: int, ids) -> Dict[str, jax.Array]:
+    """Like :func:`make_client_batch` but for a sampled cohort: ``specs``
+    carries a leading [C] axis and row j holds GLOBAL client ``ids[j]``'s
+    data — the O(C) host-side data path of population mode."""
+    return _materialize(data, specs, step, [int(g) for g in np.asarray(ids)])

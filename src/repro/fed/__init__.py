@@ -1,7 +1,15 @@
+from repro.fed.population import (ClientPopulation, make_population_round,
+                                  staleness_weights)
 from repro.fed.round import make_round_step, stack_round_batches
 from repro.fed.runtime import (FederatedTrainer, build_lm_problem_ctx,
                                split_client_batch)
+from repro.fed.sampling import (AvailabilityTraceSampler, CohortSampler,
+                                RoundRobinSampler, SAMPLERS, UniformSampler,
+                                make_sampler)
 from repro.fed.serve import build_serve_fns
 
 __all__ = ["FederatedTrainer", "build_lm_problem_ctx", "split_client_batch",
-           "build_serve_fns", "make_round_step", "stack_round_batches"]
+           "build_serve_fns", "make_round_step", "stack_round_batches",
+           "ClientPopulation", "make_population_round", "staleness_weights",
+           "CohortSampler", "UniformSampler", "RoundRobinSampler",
+           "AvailabilityTraceSampler", "SAMPLERS", "make_sampler"]

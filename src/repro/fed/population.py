@@ -1,0 +1,158 @@
+"""Client population bank: N persistent client states, O(C) per-round compute.
+
+The seed runtime hard-wired "population = the vmapped leading axis": partial
+participation ran ALL M clients and masked the inactive ones, so a
+10%-participation round cost a full round and M was capped by what one
+vmap/jit fits. This module decouples the two scales:
+
+  * a ``ClientPopulation`` bank holds N client states (N in the
+    hundreds/thousands) as ONE stacked pytree plus per-client bookkeeping
+    (``last_sync``: the round at which each client last received the server
+    state);
+  * each round, a ``CohortSampler`` (``repro.fed.sampling``) picks C ids;
+  * the round program is gather → fused-scan-round → scatter: take the C
+    sampled states out of the bank, run the q local steps as one
+    ``lax.scan`` (the same body the round engine uses), and write the
+    results back. The program jits ONCE for cohort shape [C, ...] — compute
+    scales with the cohort, not the population.
+
+Sync modes (who receives the post-aggregation server state):
+
+  broadcast     — every client in the bank (the classic FedAvg simulation
+                  assumption, and exactly the legacy masked-participation
+                  semantics: inactive clients idle at the current server
+                  state). Staleness is identically zero.
+  participants  — only the aggregating cohort. Clients then carry genuinely
+                  stale models between participations — the asynchronous /
+                  intermittent-availability regime (Jiao et al.,
+                  arXiv:2212.10048) — and ``staleness_weights`` can
+                  down-weight long-absent clients at aggregation time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+SYNC_MODES = ("broadcast", "participants")
+
+
+# ------------------------------------------------------------ bank primitives
+
+def gather(bank_states, ids):
+    """Select cohort rows: [N, ...] pytree -> [C, ...] pytree."""
+    return jax.tree.map(lambda a: jnp.take(a, ids, axis=0), bank_states)
+
+
+def scatter(bank_states, ids, values):
+    """Write cohort rows back: bank[ids] = values (later duplicates win)."""
+    return jax.tree.map(lambda a, v: a.at[ids].set(v.astype(a.dtype)),
+                        bank_states, values)
+
+
+def broadcast(bank_states, value):
+    """Overwrite every bank row with one (unbatched) client state."""
+    return jax.tree.map(
+        lambda a, v: jnp.broadcast_to(v[None].astype(a.dtype), a.shape),
+        bank_states, value)
+
+
+def weighted_mean(states, w):
+    """Weighted client mean over the leading axis (w sums to 1)."""
+    return jax.tree.map(
+        lambda a: jnp.tensordot(w, a.astype(jnp.float32),
+                                axes=1).astype(a.dtype), states)
+
+
+def staleness_weights(last_sync, ids, round_id, decay: float):
+    """Aggregation weights for a cohort, down-weighting stale members.
+
+    Client i's staleness is ``round_id - last_sync[i]`` — the number of
+    rounds since it last pulled the server state. Weights are
+    ``(1 + staleness)^-decay``, normalized over the cohort; ``decay = 0``
+    (or an all-fresh cohort, e.g. broadcast sync mode) recovers the plain
+    uniform average.
+    """
+    stale = jnp.maximum(round_id - last_sync[ids], 0).astype(jnp.float32)
+    w = (1.0 + stale) ** (-decay)
+    return w / jnp.maximum(w.sum(), 1e-12)
+
+
+# ------------------------------------------------------------ the population
+
+@dataclasses.dataclass
+class ClientPopulation:
+    """N stacked client states + per-client sync bookkeeping."""
+    states: Any                  # pytree, every leaf with leading axis N
+    last_sync: jax.Array         # int32 [N]: round of last server-state pull
+    n: int
+
+    @classmethod
+    def create(cls, init_one: Callable[[jax.Array, Any], Any], key,
+               batches_n, n: int) -> "ClientPopulation":
+        """vmap ``init_one(client_key, client_batch)`` over N clients."""
+        states = jax.vmap(init_one)(jax.random.split(key, n), batches_n)
+        return cls(states=states, last_sync=jnp.zeros((n,), jnp.int32), n=n)
+
+    def gather(self, ids):
+        return gather(self.states, ids)
+
+    def scatter(self, ids, values):
+        return dataclasses.replace(self, states=scatter(self.states, ids,
+                                                        values))
+
+
+# ------------------------------------------------------------ fused round
+
+def make_population_round(local_step_ids: Callable, sync_update: Callable,
+                          q: int, *, sync_mode: str = "broadcast",
+                          staleness_decay: float = 0.0) -> Callable:
+    """Build the gather → scan-round → aggregate → scatter program.
+
+    ``local_step_ids(states_c, server, batch, key, ids)`` is the per-step
+    function over the COHORT (any client-vmapping is its own; ``ids`` are the
+    global client ids, so per-client RNG folds match the full-population
+    path). ``sync_update(server, avg_state)`` maps the aggregated client
+    state to ``(new_client_state, new_server)`` (unbatched client state).
+
+    Returns ``round_fn(bank_states, last_sync, server, ids, batches_q, key,
+    round_id) -> (bank_states, last_sync, server)`` — jit-compatible, one
+    compile per cohort shape [C, ...]: q local steps on the C gathered
+    states, a (staleness-weighted) cohort aggregate, the server update, and
+    the write-back dictated by ``sync_mode``.
+    """
+    if sync_mode not in SYNC_MODES:
+        raise ValueError(f"sync_mode must be one of {SYNC_MODES}, "
+                         f"got {sync_mode!r}")
+    if q < 1:
+        raise ValueError(f"round needs q >= 1 local steps, got {q}")
+
+    def round_fn(bank_states, last_sync, server, ids, batches_q, key,
+                 round_id):
+        cur = gather(bank_states, ids)
+
+        def body(carry, batch):
+            st, srv = carry
+            st, srv = local_step_ids(st, srv, batch, key, ids)
+            return (st, srv), None
+
+        (cur, server), _ = jax.lax.scan(body, (cur, server), batches_q,
+                                        length=q)
+        w = staleness_weights(last_sync, ids, round_id, staleness_decay)
+        new_client, server = sync_update(server, weighted_mean(cur, w))
+        if sync_mode == "broadcast":
+            bank_states = broadcast(bank_states, new_client)
+            last_sync = jnp.full_like(last_sync, round_id + 1)
+        else:
+            c = ids.shape[0]
+            bank_states = scatter(
+                bank_states, ids,
+                jax.tree.map(lambda v: jnp.broadcast_to(v[None],
+                                                        (c,) + v.shape),
+                             new_client))
+            last_sync = last_sync.at[ids].set(round_id + 1)
+        return bank_states, last_sync, server
+
+    return round_fn

@@ -221,40 +221,16 @@ class FederatedTrainer:
 
     def init_states(self, key, batch):
         """Materialized init (CPU-scale usage)."""
-        def one_client(k, b):
-            params = init_params(self.specs, k, self.cfg.dtype)
-            batches = split_client_batch(self.cfg, b)
-            return self.alg.init_client_state(params["x"], params["y"],
-                                              batches, k)
-        keys = jax.random.split(key, self.m)
-        # all clients start from the same params (paper line 2): use key 0 for
-        # params, per-client keys for estimator samples
-        def one(k, b):
-            params = init_params(self.specs, jax.random.PRNGKey(0), self.cfg.dtype)
-            batches = split_client_batch(self.cfg, b)
-            return self.alg.init_client_state(params["x"], params["y"], batches, k)
-        states = self._vmap_clients(one)(keys, batch)
-        xp_like = jax.tree.map(lambda a: a[0], states["x"])
-        server = self.alg.init_server_state(xp_like)
-        if self.fed.adaptive != "none":
-            from repro.core.adafbio import warm_adaptive
-            server = warm_adaptive(server, tree_mean_axis0(states), self.fed)
+        states, _, server = self.init_population_states(key, batch, self.m)
         return states, server
 
     def local_step_fn(self) -> Callable:
-        def step(states, server, batch, key):
-            t = server["t"]
-            def one(state, b, i):
-                batches = split_client_batch(self.cfg, b)
-                k = jax.random.fold_in(jax.random.fold_in(key, i), t)
-                return self.alg.local_step(state, server["adaptive"], batches,
-                                           k, t, self.m)
-            ids = jnp.arange(self.m)
-            new_states = self._vmap_clients(one)(states, batch, ids)
-            new_server = dict(server)
-            new_server["t"] = t + 1
-            return new_states, new_server
-        return step
+        """All-clients step: the cohort step over the full population
+        (ids = 0..m-1), so the two paths share one implementation."""
+        step = self.cohort_local_step_fn()
+        ids = jnp.arange(self.m)
+        return lambda states, server, batch, key: step(states, server, batch,
+                                                       key, ids)
 
     def sync_step_fn(self) -> Callable:
         def step(states, server):
@@ -276,6 +252,74 @@ class FederatedTrainer:
         return make_round_step(self.local_step_fn(), self.sync_step_fn(),
                                q if q is not None else self.fed.q)
 
+    # -------------------------------------------------- population mode
+
+    def cohort_local_step_fn(self, n: Optional[int] = None) -> Callable:
+        """``local_step_fn`` over a sampled cohort: identical math, but the
+        per-client RNG folds the GLOBAL client id carried in ``ids`` (not the
+        vmap position), and the eta_t schedule sees the POPULATION size ``n``
+        (the paper's M — not the cohort/vmap width), so a cohort step
+        reproduces the same client's step as a full-population step."""
+        m_sched = n if n is not None else self.m
+        def step(states, server, batch, key, ids):
+            t = server["t"]
+            def one(state, b, gid):
+                batches = split_client_batch(self.cfg, b)
+                k = jax.random.fold_in(jax.random.fold_in(key, gid), t)
+                return self.alg.local_step(state, server["adaptive"], batches,
+                                           k, t, m_sched)
+            new_states = self._vmap_clients(one)(states, batch, ids)
+            new_server = dict(server)
+            new_server["t"] = t + 1
+            return new_states, new_server
+        return step
+
+    def init_population_states(self, key, batch, n: int):
+        """Bank init: like ``init_states`` but over a population of ``n``
+        clients (``batch`` carries a leading n axis). Returns
+        ``(bank_states, last_sync, server)``."""
+        keys = jax.random.split(key, n)
+        def one(k, b):
+            params = init_params(self.specs, jax.random.PRNGKey(0), self.cfg.dtype)
+            batches = split_client_batch(self.cfg, b)
+            return self.alg.init_client_state(params["x"], params["y"], batches, k)
+        bank = self._vmap_clients(one)(keys, batch)
+        xp_like = jax.tree.map(lambda a: a[0], bank["x"])
+        server = self.alg.init_server_state(xp_like)
+        if self.fed.adaptive != "none":
+            from repro.core.adafbio import warm_adaptive
+            server = warm_adaptive(server, tree_mean_axis0(bank), self.fed)
+        return bank, jnp.zeros((n,), jnp.int32), server
+
+    def population_round_fn(self, n: int, q: Optional[int] = None, *,
+                            sync_mode: str = "broadcast",
+                            staleness_decay: float = 0.0) -> Callable:
+        """Gather → fused scan round → aggregate → scatter over an n-client
+        bank: ``round(bank, last_sync, server, ids, batches_q, key,
+        round_id)``. Jits once per cohort shape [C, ...]; compute is O(C),
+        the bank writes O(n) memory bandwidth only."""
+        from repro.fed.population import make_population_round
+        def sync_update(server, avg):
+            return self.alg.sync_update(server, avg, n)
+        return make_population_round(
+            self.cohort_local_step_fn(n), sync_update,
+            q if q is not None else self.fed.q,
+            sync_mode=sync_mode, staleness_decay=staleness_decay)
+
+    def abstract_population_states(self, n: int):
+        p = abstract_params(self.specs, self.cfg.dtype)
+        one = {"x": p["x"], "y": p["y"], "v": p["y"], "w": p["x"]}
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), one)
+
+    def population_state_shardings(self, n: int):
+        """Bank shardings: the population axis takes the client mesh axes
+        (same logical layout as the per-round client axis), so gather/scatter
+        between bank and cohort stay local to each client shard."""
+        return self._shardings(self.client_state_axes(),
+                               self.abstract_population_states(n),
+                               fallback=("model",))
+
     def eval_fn(self) -> Callable:
         """Mean UL loss f(x̄, ȳ) over the clients' val batches."""
         def ev(states, batch):
@@ -289,10 +333,11 @@ class FederatedTrainer:
     # -------------------------------------------------- jit plumbing
 
     def jitted(self, which: str, batch_specs=None, batch_axes=None,
-               donate: bool = True):
+               donate: bool = True, population_n: Optional[int] = None):
         """jit with shardings; returns the (lowerable) compiled callable."""
         ss = self.state_shardings()
         sv = self.server_shardings()
+        rep = NamedSharding(self.mesh, P()) if self.mesh else None
         if which == "local":
             fn = self.local_step_fn()
             in_sh = (ss, sv, self.batch_shardings(batch_specs, batch_axes),
@@ -304,8 +349,7 @@ class FederatedTrainer:
             in_sh = (ss, sv)
             out_sh = (ss, sv)
             dn = (0,) if donate else ()
-        elif which == "round":
-            fn = self.round_step_fn()
+        elif which in ("round", "population_round"):
             # scanned batches carry a leading (unsharded) q axis
             is_axes = lambda t: (isinstance(t, tuple) and
                                  all(u is None or isinstance(u, str)
@@ -317,9 +361,18 @@ class FederatedTrainer:
                 lambda s: jax.ShapeDtypeStruct((self.fed.q,) + s.shape,
                                                s.dtype), batch_specs)
                 if batch_specs is not None else None)
-            in_sh = (ss, sv, self.batch_shardings(round_specs, round_axes),
-                     NamedSharding(self.mesh, P()) if self.mesh else None)
-            out_sh = (ss, sv)
+            bsh = self.batch_shardings(round_specs, round_axes)
+            if which == "round":
+                fn = self.round_step_fn()
+                in_sh = (ss, sv, bsh, rep)
+                out_sh = (ss, sv)
+            else:
+                if population_n is None:
+                    raise ValueError("population_round needs population_n")
+                fn = self.population_round_fn(population_n)
+                pss = self.population_state_shardings(population_n)
+                in_sh = (pss, rep, sv, rep, bsh, rep, rep)
+                out_sh = (pss, rep, sv)
             dn = (0,) if donate else ()
         else:
             raise ValueError(which)

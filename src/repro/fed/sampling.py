@@ -1,0 +1,127 @@
+"""Per-round cohort samplers: which C of the N population clients train.
+
+The population subsystem (``repro.fed.population``) decouples the client
+*population* (N persistent states) from the per-round compute *cohort*
+(C sampled clients). Samplers are the pluggable policy in between: a
+deterministic function ``round_id -> C client ids``, seeded from the run key
+so different runs draw different cohorts while any single run is exactly
+reproducible (and replayable against the legacy masked-participation path —
+`FedDriver._active_mask` consumes the same draw, which is what the
+cohort ≡ masked parity tests rely on).
+
+Three policies, mirroring the client-sampling settings of the related
+federated-bilevel work (uniform sampling à la Gao arXiv:2204.13299;
+availability traces à la the asynchronous setting of Jiao et al.
+arXiv:2212.10048):
+
+  uniform     — C clients uniformly without replacement each round.
+  roundrobin  — deterministic cyclic sweep; every client participates exactly
+                once per ⌈N/C⌉ rounds (useful for coverage tests & debugging).
+  trace       — each client has a periodic up/down availability schedule
+                (random phase); the cohort is drawn uniformly from the
+                currently-available clients. If fewer than C are up, the
+                available set is cycled to fill the fixed-shape cohort
+                (duplicates are an availability artifact, and are weighted
+                like any repeated participant by the aggregation).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+SAMPLERS = ("uniform", "roundrobin", "trace")
+
+
+class CohortSampler:
+    """Protocol: deterministic ``round_id -> [c] int32 global client ids``."""
+
+    n: int
+    c: int
+
+    def cohort(self, round_id: int) -> jax.Array:
+        raise NotImplementedError
+
+    def mask(self, round_id: int) -> jax.Array:
+        """Boolean participation mask over the full population — the legacy
+        masked-participation view of the same draw."""
+        return jnp.zeros((self.n,), bool).at[self.cohort(round_id)].set(True)
+
+
+@dataclasses.dataclass(frozen=True)
+class UniformSampler(CohortSampler):
+    """C of N uniformly at random, without replacement, per round."""
+    n: int
+    c: int
+    key: jax.Array
+
+    def cohort(self, round_id: int) -> jax.Array:
+        k = jax.random.fold_in(self.key, round_id)
+        return jax.random.permutation(k, self.n)[: self.c].astype(jnp.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundRobinSampler(CohortSampler):
+    """Cyclic sweep: round r takes clients [r*c, r*c + c) mod n."""
+    n: int
+    c: int
+    offset: int = 0
+
+    def cohort(self, round_id: int) -> jax.Array:
+        start = self.offset + round_id * self.c
+        return ((start + jnp.arange(self.c)) % self.n).astype(jnp.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class AvailabilityTraceSampler(CohortSampler):
+    """Clients follow periodic up/down schedules; sample among the available.
+
+    Client i is up at round r iff ``(r + phase_i) % period < duty * period``,
+    with a random per-client phase derived from ``key``. The cohort is a
+    uniform draw (without replacement) from the up set; a shortfall cycles
+    the up set so the cohort keeps its static shape [c].
+    """
+    n: int
+    c: int
+    key: jax.Array
+    period: int = 8
+    duty: float = 0.5
+
+    def _phases(self) -> jax.Array:
+        # schedule salt kept off the per-round fold_in(round_id) stream
+        return jax.random.randint(jax.random.fold_in(self.key, 0x7FFFFFFF),
+                                  (self.n,), 0, self.period)
+
+    def up_mask(self, round_id: int) -> jax.Array:
+        up_len = max(int(round(self.duty * self.period)), 1)
+        return (round_id + self._phases()) % self.period < up_len
+
+    def cohort(self, round_id: int) -> jax.Array:
+        up = self.up_mask(round_id)
+        k = jax.random.fold_in(self.key, round_id)
+        # available clients get scores in [-1, 0), unavailable in [0, 1):
+        # argsort ranks every up client ahead of every down client, with a
+        # uniform shuffle within each group.
+        score = jax.random.uniform(k, (self.n,)) - up.astype(jnp.float32)
+        order = jnp.argsort(score)
+        n_up = jnp.maximum(up.sum(), 1)
+        slot = jnp.arange(self.c)
+        # slots beyond the up count wrap around the available prefix rather
+        # than dipping into down clients
+        return order[jnp.where(slot < n_up, slot, slot % n_up)].astype(jnp.int32)
+
+
+def make_sampler(name: str, n: int, c: int, key: jax.Array, *,
+                 period: int = 8, duty: float = 0.5,
+                 offset: int = 0) -> CohortSampler:
+    if not 1 <= c <= n:
+        raise ValueError(f"cohort size must satisfy 1 <= c <= n, "
+                         f"got c={c}, n={n}")
+    if name == "uniform":
+        return UniformSampler(n, c, key)
+    if name == "roundrobin":
+        return RoundRobinSampler(n, c, offset)
+    if name == "trace":
+        return AvailabilityTraceSampler(n, c, key, period, duty)
+    raise KeyError(f"unknown sampler {name!r}; known: {SAMPLERS}")

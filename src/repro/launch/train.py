@@ -14,13 +14,16 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.checkpoint import load_checkpoint, save_checkpoint
 from repro.configs import FedConfig, get_arch, reduced
 from repro.configs.base import ShapeConfig
-from repro.data.synthetic import FederatedLMData, make_client_batch
+from repro.data.synthetic import (FederatedLMData, make_client_batch,
+                                  make_cohort_batch)
 from repro.fed.round import ENGINES
 from repro.fed.runtime import FederatedTrainer, client_batch_specs
+from repro.fed.sampling import SAMPLERS, make_sampler
 from repro.core.tree_util import tree_stack
 from repro.launch.mesh import make_local_mesh, make_production_mesh
 
@@ -44,6 +47,14 @@ def main():
     ap.add_argument("--engine", default="scan", choices=list(ENGINES),
                     help="scan: each q-step round + sync compiles as ONE "
                          "program; eager: one jitted call per local step")
+    ap.add_argument("--population", type=int, default=0,
+                    help="client population size N: keep N persistent client "
+                         "states and compute only a sampled cohort per round "
+                         "(0 = legacy all-clients-every-round mode)")
+    ap.add_argument("--cohort", type=int, default=8,
+                    help="per-round compute cohort size C (population mode)")
+    ap.add_argument("--sampler", default="uniform", choices=list(SAMPLERS),
+                    help="cohort sampling policy (population mode)")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -58,10 +69,12 @@ def main():
     shape = ShapeConfig("cli", args.seq, args.batch, "train")
     tr = FederatedTrainer(cfg, fed, shape, mesh=mesh,
                           algorithm=args.algorithm)
+    key = jax.random.PRNGKey(0)
+    if args.population:
+        run_population(args, cfg, fed, shape, tr, key)
+        return
     specs, axes = client_batch_specs(cfg, shape, tr.m, fed)
     data = FederatedLMData(vocab=cfg.vocab, n_clients=tr.m)
-
-    key = jax.random.PRNGKey(0)
     batch = make_client_batch(data, cfg, specs, 0)
     states, server = tr.init_states(key, batch)
     start = 0
@@ -111,6 +124,64 @@ def main():
     if args.ckpt:
         save_checkpoint(args.ckpt, (states, server), steps_done)
         print(f"saved checkpoint to {args.ckpt} at step {steps_done}")
+
+
+def run_population(args, cfg, fed, shape, tr: FederatedTrainer, key):
+    """Population mode: N persistent client states, C-client cohort rounds.
+
+    Each round: sample C global ids, build ONLY their batches (O(C) host
+    work), then gather → fused scan round → aggregate → scatter as one
+    jitted program (jits once for cohort shape [C, ...])."""
+    n, c = args.population, args.cohort
+    # per-client batch sizes derive from the cohort (the compute unit);
+    # the bank-init batch reuses the same per-client shapes with leading N
+    specs_c, _ = client_batch_specs(cfg, shape, c, fed)
+    specs_n = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n,) + s.shape[1:], s.dtype), specs_c)
+    data = FederatedLMData(vocab=cfg.vocab, n_clients=n)
+    bank, last_sync, server = tr.init_population_states(
+        key, make_client_batch(data, cfg, specs_n, 0), n)
+    start = 0
+    if args.resume and args.ckpt:
+        (bank, last_sync, server), start = load_checkpoint(
+            args.ckpt, (bank, last_sync, server))
+        print(f"resumed population run from step {start}")
+    sampler = make_sampler(args.sampler, n, c, jax.random.fold_in(key, 23))
+    round_fn = jax.jit(tr.population_round_fn(n))
+    ev = jax.jit(tr.eval_fn())
+
+    start_round = start // fed.q
+    n_rounds = max(args.steps // fed.q, start_round + 1)
+    if n_rounds * fed.q != args.steps:
+        print(f"population mode runs whole rounds: {n_rounds * fed.q} steps "
+              f"instead of the requested {args.steps} "
+              f"(use --steps divisible by q={fed.q})", flush=True)
+    print(f"population mode: N={n} clients, C={c} cohort/round "
+          f"({args.sampler} sampler), rounds {start_round}..{n_rounds - 1} "
+          f"of q={fed.q}", flush=True)
+    t0 = time.time()
+    for r in range(start_round, n_rounds):
+        t = r * fed.q
+        ids = sampler.cohort(r)
+        batch_q = tree_stack([make_cohort_batch(data, cfg, specs_c, t + j,
+                                                ids)
+                              for j in range(fed.q)])
+        r0 = time.time()
+        bank, last_sync, server = round_fn(bank, last_sync, server, ids,
+                                           batch_q, key, jnp.int32(r))
+        jax.block_until_ready(bank)
+        dt = time.time() - r0
+        if r % max(args.eval_every // fed.q, 1) == 0 or r == n_rounds - 1:
+            last = jax.tree.map(lambda x: x[-1], batch_q)
+            loss = float(ev(bank, last))
+            print(f"round {r:4d} (step {t + fed.q - 1:5d})  "
+                  f"f(x̄,ȳ) = {loss:.4f}  round={dt*1e3:.1f}ms  "
+                  f"cohort={np.asarray(ids)[:8].tolist()}...  "
+                  f"({time.time()-t0:.1f}s)", flush=True)
+    if args.ckpt:
+        save_checkpoint(args.ckpt, (bank, last_sync, server),
+                        n_rounds * fed.q)
+        print(f"saved population checkpoint to {args.ckpt}")
 
 
 if __name__ == "__main__":

@@ -2,6 +2,16 @@
 clients as a leading pytree axis on a single host; algorithm-agnostic via the
 ``Algorithm`` contract, so AdaFBiO and every baseline run identically).
 
+Two participation regimes:
+
+  * masked (seed behaviour, ``participation`` < 1): ALL M clients compute
+    every step, inactive ones are masked — O(M) compute regardless of the
+    participation fraction, M capped by what one vmap/jit fits;
+  * population (``population=PopulationConfig(n, cohort)``): N client states
+    persist in a bank (repro.fed.population), a CohortSampler picks C ids
+    per round, and only those C are computed (gather → fused scan round →
+    scatter) — O(C) compute at any population scale.
+
 Tracks the paper's cost metrics exactly: #samples consumed (q(K+2) at init,
 K+2 per local step) and #communication rounds (1 per sync)."""
 from __future__ import annotations
@@ -14,7 +24,7 @@ from typing import Any, Callable, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import FedConfig
+from repro.configs.base import FedConfig, PopulationConfig
 from repro.core.baselines import Algorithm, make_algorithm
 from repro.core.bilevel import BilevelProblem
 from repro.core.tree_util import (tree_bcast_axis0, tree_mean_axis0,
@@ -31,6 +41,10 @@ class RunResult:
     grad_norm: List[float]
     seconds: float
     final_avg_state: Any = None    # averaged client state at the last step
+    # wall-clock of the first, compile-including round; steady-state rounds
+    # land in FedDriver.round_seconds so eager-vs-scan comparisons aren't
+    # skewed by compile time
+    compile_seconds: float = 0.0
 
 
 @dataclasses.dataclass
@@ -43,9 +57,17 @@ class FedDriver:
     metric_fn: Optional[Callable[..., float]] = None  # (x̄, ȳ) -> scalar
     grad_norm_fn: Optional[Callable[..., float]] = None
     algorithm: str = "adafbio"
-    # partial participation: fraction of clients active per round (between
-    # syncs); inactive clients hold state and are excluded from the average.
+    # partial participation, masked path (thin alias for a uniform sampler):
+    # fraction of clients active per round; inactive clients hold state and
+    # are excluded from the average — but still COMPUTE (and are masked).
+    # Prefer `population=` for anything beyond vmap scale.
     participation: float = 1.0
+    # population mode: persistent bank of population.n client states, only
+    # population.cohort of them computed per round (repro.fed.population).
+    population: Optional[PopulationConfig] = None
+    # cohort-selection policy; None derives population.sampler (or a uniform
+    # sampler for the masked path) from the run key at run() time.
+    sampler: Optional[Any] = None
     track_consensus: bool = False
     # "eager": one jitted call per local step (seed behaviour).
     # "scan":  the fused round engine — q local steps + sync compiled as ONE
@@ -60,7 +82,9 @@ class FedDriver:
         self.alg: Algorithm = make_algorithm(self.algorithm, self.fed,
                                              self.problem)
         self.consensus_log = []
-        self.round_seconds: List[float] = []   # per-round wall-clock (scan)
+        # steady-state per-round wall-clock; the first (compile-including)
+        # round is reported separately as RunResult.compile_seconds
+        self.round_seconds: List[float] = []
 
     def _batches(self, step: int):
         per_client = [self.batch_fn(m, step) for m in range(self.n_clients)]
@@ -109,14 +133,31 @@ class FedDriver:
         new_client, new_server = self.alg.sync_update(server, avg, m)
         return tree_bcast_axis0(new_client, m), new_server
 
-    def _active_mask(self, round_id):
+    def _setup_sampler(self, key):
+        """Resolve the run's CohortSampler from the run key (so different
+        seeds draw different cohorts — the seed behaviour used a constant
+        PRNGKey(23) for every run)."""
+        from repro.fed.sampling import make_sampler
+        if self.sampler is not None:
+            self._run_sampler = self.sampler
+            return
+        skey = jax.random.fold_in(key, 23)
         m = self.n_clients
-        if self.participation >= 1.0:
-            return jnp.ones((m,), bool)
-        k = jax.random.fold_in(jax.random.PRNGKey(23), round_id)
-        n_active = max(int(self.participation * m), 1)
-        perm = jax.random.permutation(k, m)
-        return jnp.zeros((m,), bool).at[perm[:n_active]].set(True)
+        if self.population is not None:
+            p = self.population
+            self._run_sampler = make_sampler(p.sampler, p.n, p.cohort, skey,
+                                             period=p.trace_period,
+                                             duty=p.trace_duty)
+        elif self.participation < 1.0:
+            c = max(int(self.participation * m), 1)
+            self._run_sampler = make_sampler("uniform", m, c, skey)
+        else:
+            self._run_sampler = None
+
+    def _active_mask(self, round_id):
+        if getattr(self, "_run_sampler", None) is None:
+            return jnp.ones((self.n_clients,), bool)
+        return self._run_sampler.mask(round_id)
 
     def _record(self, res: RunResult, states, step, samples, comms):
         avg = tree_mean_axis0(states)
@@ -130,8 +171,19 @@ class FedDriver:
 
     # -------------------------------------------------- run loops
 
+    def _log_round(self, res: RunResult, dt: float):
+        """First completed round carries the compile; keep it out of the
+        steady-state per-round log."""
+        if res.compile_seconds == 0.0:
+            res.compile_seconds = dt
+        else:
+            self.round_seconds.append(dt)
+
     def run(self, total_steps: int, key=None, eval_every: int = 10) -> RunResult:
         key = key if key is not None else jax.random.PRNGKey(0)
+        self._setup_sampler(key)
+        if self.population is not None:
+            return self._run_population(total_steps, key, eval_every)
         if self.engine == "scan":
             return self._run_scan(total_steps, key, eval_every)
         fed = self.alg.fed
@@ -163,7 +215,7 @@ class FedDriver:
             if (t + 1) % fed.q == 0:
                 # per-round wall-clock, comparable with the scan engine's
                 jax.block_until_ready(states)
-                self.round_seconds.append(time.time() - r0)
+                self._log_round(res, time.time() - r0)
                 r0 = time.time()
             if t % eval_every == 0 or t == total_steps - 1:
                 self._record(res, states, t, samples, comms)
@@ -209,13 +261,16 @@ class FedDriver:
         for r, n_steps in enumerate(lengths):
             batches_q = tree_stack([self._batches(t + j)
                                     for j in range(n_steps)])
+            active = self._active_mask(r)
+            # round 0 has no preceding sync (sync_first=False): reuse the
+            # current mask instead of computing an unused _active_mask(-1)
+            active_prev = self._active_mask(r - 1) if r > 0 else active
             r0 = time.time()
             states, server = segment(
-                states, server, batches_q, key,
-                self._active_mask(r - 1), self._active_mask(r),
+                states, server, batches_q, key, active_prev, active,
                 n_steps=n_steps, sync_first=r > 0)
             jax.block_until_ready(states)
-            self.round_seconds.append(time.time() - r0)
+            self._log_round(res, time.time() - r0)
             t += n_steps
             samples += n_steps * (fed.neumann_k + 2)
             if r > 0:
@@ -224,4 +279,129 @@ class FedDriver:
                 self._record(res, states, t - 1, samples, comms)
         res.seconds = time.time() - t0
         res.final_avg_state = tree_mean_axis0(states)
+        return res
+
+    # -------------------------------------------------- population mode
+
+    def _cohort_batches(self, ids, step: int):
+        per = [self.batch_fn(int(g), step) for g in ids]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+
+    def _init_population(self, key):
+        """Bank of N client states — same per-client init as the masked
+        path's ``_init_run`` (shared (x0, y0), per-client estimator keys and
+        step-0 batches), so N == M runs start identically."""
+        from repro.fed.population import ClientPopulation
+        n = self.population.n
+        fed = self.alg.fed
+        xp, yp = self.init_xy(key)
+        batches0 = self._cohort_batches(range(n), 0)
+        pop = ClientPopulation.create(
+            lambda k, b: self.alg.init_client_state(xp, yp, b, k),
+            key, batches0, n)
+        server = self.alg.init_server_state(xp)
+        if fed.adaptive != "none":
+            from repro.core.adafbio import warm_adaptive
+            server = warm_adaptive(server, tree_mean_axis0(pop.states), fed)
+        return pop, server
+
+    def _run_population(self, total_steps: int, key, eval_every) -> RunResult:
+        """Cohort-sampled rounds over a persistent N-client bank.
+
+        Same round shape as ``_run_scan`` — the sync that closes the
+        PREVIOUS round, then this round's local steps as one ``lax.scan`` —
+        but gather/compute/scatter touch only the C sampled clients, so the
+        program jits once for cohort shape [C, ...] and per-round compute is
+        O(C) regardless of N. With ``sync_mode='broadcast'`` and the same
+        cohort schedule this reproduces the masked-participation trajectory
+        exactly (tests/test_population.py).
+        """
+        from repro.fed.population import (broadcast, gather, scatter,
+                                          staleness_weights, weighted_mean)
+        if self.track_consensus:
+            raise ValueError("track_consensus needs the masked eager engine "
+                             "(it reads pre-sync client states mid-round)")
+        pcfg = self.population
+        # checked here, not __post_init__: `population` is routinely assigned
+        # after construction, and batch_fn/init indices run over 0..n-1
+        if pcfg.n != self.n_clients:
+            raise ValueError(
+                f"population.n ({pcfg.n}) must equal n_clients "
+                f"({self.n_clients}) — batch_fn/init indices run over the "
+                f"population")
+        n = pcfg.n
+        fed = self.alg.fed
+        q = fed.q
+        pop, server = self._init_population(key)
+        bank, last_sync = pop.states, pop.last_sync
+        samples = fed.q * (fed.neumann_k + 2)
+        comms = 0
+
+        @functools.partial(jax.jit, static_argnames=("n_steps", "sync_first"))
+        def segment(bank, last_sync, server, prev_ids, ids, batches_q, kk,
+                    round_id, *, n_steps, sync_first):
+            if sync_first:
+                # the sync at the START of round r closes round r-1; a client
+                # stamped at the previous sync (last_sync == r-1) is fully
+                # fresh — same staleness origin as make_population_round's
+                # end-of-round convention (which stamps round_id + 1)
+                w = staleness_weights(last_sync, prev_ids, round_id - 1,
+                                      pcfg.staleness_decay)
+                avg = weighted_mean(gather(bank, prev_ids), w)
+                new_client, server = self.alg.sync_update(server, avg, n)
+                if pcfg.sync_mode == "broadcast":
+                    bank = broadcast(bank, new_client)
+                    last_sync = jnp.full_like(last_sync, round_id)
+                else:
+                    c = prev_ids.shape[0]
+                    bank = scatter(bank, prev_ids, jax.tree.map(
+                        lambda v: jnp.broadcast_to(v[None], (c,) + v.shape),
+                        new_client))
+                    last_sync = last_sync.at[prev_ids].set(round_id)
+            cur = gather(bank, ids)
+
+            def body(carry, batch):
+                st, srv = carry
+                t = srv["t"]
+
+                def one(st1, b, gid):
+                    k2 = jax.random.fold_in(jax.random.fold_in(kk, gid), t)
+                    return self.alg.local_step(st1, srv["adaptive"], b, k2,
+                                               t, n)
+                st = jax.vmap(one)(st, batch, ids)
+                srv = dict(srv)
+                srv["t"] = t + 1
+                return (st, srv), None
+
+            (cur, server), _ = jax.lax.scan(body, (cur, server), batches_q,
+                                            length=n_steps)
+            return scatter(bank, ids, cur), last_sync, server
+
+        full, rem = divmod(total_steps, q)
+        lengths = [q] * full + ([rem] if rem else [])
+        eval_rounds = max(eval_every // q, 1)
+        res = RunResult(self.alg.name, [], [], [], [], [], 0.0)
+        t0 = time.time()
+        t = 0
+        prev_ids = None
+        for r, n_steps in enumerate(lengths):
+            ids = jnp.asarray(self._run_sampler.cohort(r), jnp.int32)
+            batches_q = tree_stack([self._cohort_batches(ids, t + j)
+                                    for j in range(n_steps)])
+            r0 = time.time()
+            bank, last_sync, server = segment(
+                bank, last_sync, server,
+                prev_ids if prev_ids is not None else ids, ids, batches_q,
+                key, jnp.int32(r), n_steps=n_steps, sync_first=r > 0)
+            jax.block_until_ready(bank)
+            self._log_round(res, time.time() - r0)
+            prev_ids = ids
+            t += n_steps
+            samples += n_steps * (fed.neumann_k + 2)
+            if r > 0:
+                comms += 1
+            if r % eval_rounds == 0 or r == len(lengths) - 1:
+                self._record(res, bank, t - 1, samples, comms)
+        res.seconds = time.time() - t0
+        res.final_avg_state = tree_mean_axis0(bank)
         return res

@@ -1,0 +1,374 @@
+"""Population subsystem (repro.fed.population / sampling, data.partition):
+cohort-sampled gather→scan-round→scatter must reproduce the legacy
+masked-participation trajectories exactly when given the same cohort
+schedule, samplers must honour their policies, and Dirichlet partitioning
+must be deterministic and actually skewed."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import PopulationConfig
+from repro.data.hyperclean import HyperCleanData
+from repro.data.partition import (dirichlet_class_priors, dirichlet_partition,
+                                  label_histogram)
+from repro.fed.population import (ClientPopulation, broadcast, gather,
+                                  make_population_round, scatter,
+                                  staleness_weights, weighted_mean)
+from repro.fed.sampling import (AvailabilityTraceSampler, RoundRobinSampler,
+                                UniformSampler, make_sampler)
+from tests.test_system import _quad_driver
+
+
+# ------------------------------------------------------ masked ≡ cohort path
+
+@pytest.mark.parametrize("steps", [16, 10])
+def test_cohort_path_matches_masked_participation(steps):
+    """The acceptance property: with the same sampled cohorts, the O(C)
+    population path (gather → fused scan round → scatter, broadcast sync)
+    reproduces the O(M) masked-participation trajectories — eager AND scan —
+    to 1e-5, including a trailing partial round."""
+    sampler = UniformSampler(4, 2, jax.random.PRNGKey(9))
+    runs = {}
+    for mode in ("eager", "scan", "population"):
+        d = _quad_driver("adafbio")
+        d.sampler = sampler
+        if mode == "population":
+            d.population = PopulationConfig(n=4, cohort=2)
+        else:
+            d.participation = 0.5
+            d.engine = mode
+        runs[mode] = d.run(steps, eval_every=steps)
+    for mode in ("scan", "population"):
+        for pa, (a, b) in zip(
+                jax.tree_util.tree_leaves_with_path(
+                    runs["eager"].final_avg_state),
+                zip(jax.tree.leaves(runs["eager"].final_avg_state),
+                    jax.tree.leaves(runs[mode].final_avg_state))):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5, rtol=1e-5,
+                                       err_msg=f"{mode}: {pa[0]}")
+        np.testing.assert_allclose(runs["eager"].grad_norm[-1],
+                                   runs[mode].grad_norm[-1],
+                                   atol=1e-5, rtol=1e-4)
+        assert runs["eager"].samples[-1] == runs[mode].samples[-1]
+
+
+def test_population_scales_past_cohort():
+    """N ≫ C population runs converge and stay finite (the whole point of
+    the subsystem: N is no longer capped by the per-round vmap)."""
+    from repro.core.baselines import make_algorithm
+    d = _quad_driver("adafbio", m=64)
+    # the default step sizes are calibrated for M=4; the eta_t ∝ M^{1/3}
+    # schedule needs smaller base rates at M=64
+    d.fed = dataclasses.replace(d.alg.fed, lr_x=0.02, lr_y=0.1)
+    d.alg = make_algorithm("adafbio", d.fed, d.problem)
+    d.population = PopulationConfig(n=64, cohort=4)
+    r = d.run(40, eval_every=8)
+    assert np.isfinite(r.grad_norm).all()
+    # 4-of-64 participation: the first syncs move the average off the shared
+    # init (a jump in the exact grad norm), then the descent takes over
+    assert r.grad_norm[-1] < 0.9 * max(r.grad_norm)
+
+
+def test_participants_sync_mode_runs_and_differs_from_broadcast():
+    """participants-only sync (clients keep stale models between
+    participations) is a genuinely different regime from broadcast."""
+    outs = {}
+    for mode in ("broadcast", "participants"):
+        d = _quad_driver("adafbio", m=8)
+        d.sampler = UniformSampler(8, 2, jax.random.PRNGKey(3))
+        d.population = PopulationConfig(n=8, cohort=2, sync_mode=mode,
+                                        staleness_decay=0.5)
+        outs[mode] = d.run(24, eval_every=24)
+        assert np.isfinite(outs[mode].grad_norm).all()
+    a = np.concatenate([np.asarray(l).ravel() for l in
+                        jax.tree.leaves(outs["broadcast"].final_avg_state)])
+    b = np.concatenate([np.asarray(l).ravel() for l in
+                        jax.tree.leaves(outs["participants"].final_avg_state)])
+    assert not np.allclose(a, b, atol=1e-6)
+
+
+# ------------------------------------------------------ satellite fixes
+
+def test_participation_draws_depend_on_run_key():
+    """Regression: the seed hard-wired PRNGKey(23), so every run drew the
+    same participation masks regardless of the run key."""
+    masks = {}
+    for seed in (0, 1):
+        d = _quad_driver("adafbio")
+        d.participation = 0.5
+        d.run(4, key=jax.random.PRNGKey(seed), eval_every=4)
+        masks[seed] = np.stack([np.asarray(d._active_mask(r))
+                                for r in range(8)])
+    assert (masks[0] != masks[1]).any()
+
+
+def test_compile_seconds_split_from_round_seconds():
+    """The first (compile-including) round lands in RunResult.compile_seconds;
+    round_seconds holds only steady-state rounds."""
+    for mode in ("eager", "scan", "population"):
+        d = _quad_driver("adafbio")
+        if mode == "population":
+            d.population = PopulationConfig(n=4, cohort=2)
+        else:
+            d.engine = mode
+        r = d.run(12, eval_every=12)     # 3 rounds of q=4
+        assert r.compile_seconds > 0.0
+        # exactly the 2 post-compile rounds land in the steady-state log
+        assert len(d.round_seconds) == 2, mode
+
+
+# ------------------------------------------------------ samplers
+
+def test_uniform_sampler_no_replacement_and_mask_agrees():
+    s = UniformSampler(16, 5, jax.random.PRNGKey(0))
+    for r in range(6):
+        ids = np.asarray(s.cohort(r))
+        assert len(set(ids.tolist())) == 5
+        assert (ids >= 0).all() and (ids < 16).all()
+        mask = np.asarray(s.mask(r))
+        assert mask.sum() == 5 and mask[ids].all()
+    assert (np.asarray(s.cohort(0)) != np.asarray(s.cohort(1))).any()
+
+
+def test_roundrobin_covers_population_exactly():
+    s = RoundRobinSampler(12, 4)
+    seen = np.concatenate([np.asarray(s.cohort(r)) for r in range(3)])
+    assert sorted(seen.tolist()) == list(range(12))
+
+
+def test_trace_sampler_respects_availability():
+    s = AvailabilityTraceSampler(32, 4, jax.random.PRNGKey(1),
+                                 period=4, duty=0.5)
+    for r in range(8):
+        up = np.asarray(s.up_mask(r))
+        ids = np.asarray(s.cohort(r))
+        if up.sum() >= 4:
+            assert up[ids].all()
+            assert len(set(ids.tolist())) == 4
+    # availability rotates: different rounds see different up sets
+    assert (np.asarray(s.up_mask(0)) != np.asarray(s.up_mask(2))).any()
+
+
+def test_make_sampler_validates():
+    with pytest.raises(KeyError):
+        make_sampler("nope", 8, 2, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError):
+        make_sampler("uniform", 8, 9, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError):
+        PopulationConfig(n=8, cohort=9)
+    with pytest.raises(ValueError):
+        PopulationConfig(n=8, cohort=2, sync_mode="broadcsat")
+    with pytest.raises(ValueError):
+        PopulationConfig(n=8, cohort=2, sampler="nope")
+    # population.n must match the driver's client/data index space, even
+    # when `population` is assigned after construction
+    d = _quad_driver("adafbio", m=4)
+    d.population = PopulationConfig(n=8, cohort=2)
+    with pytest.raises(ValueError):
+        d.run(4, eval_every=4)
+
+
+# ------------------------------------------------------ bank primitives
+
+def test_gather_scatter_roundtrip_and_staleness_weights():
+    bank = {"x": jnp.arange(12.0).reshape(6, 2)}
+    ids = jnp.asarray([4, 1], jnp.int32)
+    cohort = gather(bank, ids)
+    np.testing.assert_array_equal(np.asarray(cohort["x"]),
+                                  [[8.0, 9.0], [2.0, 3.0]])
+    bank2 = scatter(bank, ids, jax.tree.map(lambda a: a * 10.0, cohort))
+    np.testing.assert_array_equal(np.asarray(bank2["x"][4]), [80.0, 90.0])
+    np.testing.assert_array_equal(np.asarray(bank2["x"][0]), [0.0, 1.0])
+
+    last_sync = jnp.asarray([5, 0, 5, 5, 2, 5], jnp.int32)
+    w = np.asarray(staleness_weights(last_sync, ids, jnp.int32(5), 1.0))
+    np.testing.assert_allclose(w.sum(), 1.0, rtol=1e-6)
+    assert w[0] > w[1]          # client 4 (staleness 3) beats client 1 (5)
+    wu = np.asarray(staleness_weights(last_sync, ids, jnp.int32(5), 0.0))
+    np.testing.assert_allclose(wu, 0.5, rtol=1e-6)
+
+
+def test_make_population_round_participants_updates_only_cohort():
+    """Toy algorithm through the fused round: participants-mode sync writes
+    the aggregate back to cohort rows only and stamps their last_sync."""
+    def local(states, server, batch, key, ids):
+        return jax.tree.map(lambda a: a + 1.0, states), server
+
+    def sync(server, avg):
+        return avg, server
+
+    round_fn = make_population_round(local, sync, q=2,
+                                     sync_mode="participants")
+    bank = {"x": jnp.zeros((5,))}
+    last_sync = jnp.zeros((5,), jnp.int32)
+    ids = jnp.asarray([3, 0], jnp.int32)
+    bank, last_sync, _ = jax.jit(round_fn)(bank, last_sync, {}, ids,
+                                           jnp.zeros((2,)),
+                                           jax.random.PRNGKey(0),
+                                           jnp.int32(4))
+    # cohort rows: 2 local +1 steps then the cohort average (2.0)
+    np.testing.assert_array_equal(np.asarray(bank["x"]),
+                                  [2.0, 0.0, 0.0, 2.0, 0.0])
+    np.testing.assert_array_equal(np.asarray(last_sync), [5, 0, 0, 5, 0])
+
+
+def test_client_population_create_and_broadcast():
+    pop = ClientPopulation.create(
+        lambda k, b: {"x": b}, jax.random.PRNGKey(0),
+        jnp.arange(4.0), n=4)
+    assert pop.n == 4 and pop.states["x"].shape == (4,)
+    bank = broadcast(pop.states, {"x": jnp.float32(7.0)})
+    np.testing.assert_array_equal(np.asarray(bank["x"]), 7.0)
+    w = jnp.asarray([0.25, 0.25, 0.25, 0.25])
+    np.testing.assert_allclose(
+        float(weighted_mean(pop.states, w)["x"]), 1.5, rtol=1e-6)
+
+
+# ------------------------------------------------------ dirichlet partition
+
+def test_dirichlet_partition_deterministic_disjoint_and_skewed():
+    key = jax.random.PRNGKey(11)
+    labels = np.asarray(jax.random.randint(jax.random.PRNGKey(5), (600,),
+                                           0, 10))
+    p1 = dirichlet_partition(key, labels, 8, 0.1)
+    p2 = dirichlet_partition(key, labels, 8, 0.1)
+    for a, b in zip(p1, p2):
+        np.testing.assert_array_equal(a, b)
+    allidx = np.concatenate(p1)
+    assert len(allidx) == 600 and len(np.unique(allidx)) == 600
+    # strong skew at alpha=0.1: clients concentrate on few classes; near
+    # uniform at alpha=100
+    def max_share(parts):
+        h = label_histogram(labels, parts, 10).astype(float)
+        h = h[h.sum(1) > 20]                       # clients with enough data
+        return (h.max(1) / np.maximum(h.sum(1), 1)).mean()
+    skewed = max_share(p1)
+    uniform = max_share(dirichlet_partition(key, labels, 8, 100.0))
+    assert skewed > uniform + 0.2, (skewed, uniform)
+
+
+def test_dirichlet_class_priors_shapes_and_determinism():
+    key = jax.random.PRNGKey(2)
+    p = dirichlet_class_priors(key, 6, 5, 0.5)
+    assert p.shape == (6, 5)
+    np.testing.assert_allclose(np.asarray(p.sum(axis=1)), 1.0, rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(p),
+                                  np.asarray(dirichlet_class_priors(key, 6, 5,
+                                                                    0.5)))
+
+
+def test_synthetic_lm_dirichlet_unigrams():
+    """FederatedLMData(dirichlet_alpha=...) swaps the permuted-Zipf unigrams
+    for Dirichlet label-skew priors: deterministic, and small alpha
+    concentrates each client's token distribution."""
+    from repro.data.synthetic import FederatedLMData
+    data = FederatedLMData(vocab=64, n_clients=4, dirichlet_alpha=0.05)
+    a = np.asarray(data.sample(1, 0, 0, (256,)))
+    np.testing.assert_array_equal(a, np.asarray(data.sample(1, 0, 0, (256,))))
+    # strong skew: a few tokens dominate each client's stream
+    top = np.sort(np.bincount(a, minlength=64))[::-1]
+    assert top[:4].sum() > 0.5 * a.size
+    # clients are heterogeneous: different dominant tokens
+    b = np.asarray(data.sample(2, 0, 0, (256,)))
+    assert np.argmax(np.bincount(a, minlength=64)) != \
+        np.argmax(np.bincount(b, minlength=64))
+
+
+def test_cohort_batch_rows_match_population_batch():
+    """make_cohort_batch row j must equal full-population row ids[j] for
+    every slot — including the non-token modality stubs — so population-mode
+    batches reproduce full-population batches."""
+    import jax.numpy as jnp2
+    from repro.data.synthetic import (FederatedLMData, make_client_batch,
+                                      make_cohort_batch)
+    data = FederatedLMData(vocab=32, n_clients=6)
+    specs_n = {"tokens": jax.ShapeDtypeStruct((6, 2, 8), jnp2.int32),
+               "prefix_embeds": jax.ShapeDtypeStruct((6, 2, 4), jnp2.bfloat16)}
+    specs_c = {k: jax.ShapeDtypeStruct((2,) + v.shape[1:], v.dtype)
+               for k, v in specs_n.items()}
+    full = make_client_batch(data, None, specs_n, step=3)
+    ids = np.asarray([5, 1])
+    cohort = make_cohort_batch(data, None, specs_c, 3, ids)
+    for k in specs_n:
+        np.testing.assert_array_equal(
+            np.asarray(cohort[k], np.float32),
+            np.asarray(full[k][ids], np.float32), err_msg=k)
+
+
+def test_hyperclean_dirichlet_label_skew():
+    """label_alpha wires Dirichlet skew into the hyper-cleaning dataset:
+    per-client label histograms concentrate, and the default path
+    (label_alpha=0) is untouched."""
+    base = HyperCleanData(4, 128, 32, 8, 10, 0.0)
+    skew = dataclasses.replace(base, label_alpha=0.1)
+
+    def mean_max_share(data):
+        shares = []
+        for m in range(4):
+            b = np.asarray(data.client_data(m)["b_tr"])
+            h = np.bincount(b, minlength=10).astype(float)
+            shares.append(h.max() / h.sum())
+        return np.mean(shares)
+
+    assert mean_max_share(skew) > mean_max_share(base) + 0.2
+    # determinism of the skewed path
+    a = np.asarray(skew.client_data(1)["b_tr"])
+    np.testing.assert_array_equal(a, np.asarray(skew.client_data(1)["b_tr"]))
+    # the uniform path's draws are unchanged (exact seed behaviour)
+    u = np.asarray(base.client_data(0)["b_tr"])
+    k = jax.random.fold_in(jax.random.PRNGKey(0), 0)
+    _, k2, *_ = jax.random.split(k, 5)
+    ka, _ = jax.random.split(k2)
+    expect = np.asarray(jax.random.randint(ka, (128,), 0, 10))
+    # corruption is off (corrupt_frac=0) so labels are the raw draws
+    np.testing.assert_array_equal(u, expect)
+
+
+# ------------------------------------------------------ trainer level
+
+def test_trainer_population_round_smoke():
+    """FederatedTrainer population path: bank init over N, one fused cohort
+    round, scatter leaves non-cohort rows broadcast-synced, all finite."""
+    from repro.configs import FedConfig, get_arch, reduced
+    from repro.configs.base import ShapeConfig
+    from repro.fed.runtime import FederatedTrainer, client_batch_specs
+
+    cfg = reduced(get_arch("qwen1.5-4b"))
+    fed = FedConfig(q=2, neumann_k=2, lr_x=1e-2, lr_y=1e-1)
+    shape = ShapeConfig("t", 16, 2, "train")
+    tr = FederatedTrainer(cfg, fed, shape, mesh=None)
+    n, c = 6, 2
+    specs_c, _ = client_batch_specs(cfg, shape, c, fed)
+    specs_n = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n,) + s.shape[1:], s.dtype), specs_c)
+    key = jax.random.PRNGKey(0)
+
+    def batch_at(specs, t):
+        kk = jax.random.fold_in(key, t)
+        return {k: (jax.random.randint(kk, v.shape, 0, cfg.vocab)
+                    if v.dtype == jnp.int32 else jnp.zeros(v.shape, v.dtype))
+                for k, v in specs.items()}
+
+    bank, last_sync, server = tr.init_population_states(
+        key, batch_at(specs_n, 0), n)
+    assert jax.tree.leaves(bank)[0].shape[0] == n
+
+    from repro.core.tree_util import tree_stack
+    round_fn = jax.jit(tr.population_round_fn(n))
+    ids = jnp.asarray([4, 1], jnp.int32)
+    batches_q = tree_stack([batch_at(specs_c, t) for t in range(fed.q)])
+    bank, last_sync, server = round_fn(bank, last_sync, server, ids,
+                                       batches_q, key, jnp.int32(0))
+    for leaf in jax.tree.leaves(bank):
+        assert leaf.shape[0] == n
+        assert np.isfinite(np.asarray(leaf, np.float32)).all()
+    assert int(server["t"]) == fed.q + 1     # q locals + the sync's bump
+    # broadcast sync: every bank row equals the post-sync client state
+    np.testing.assert_array_equal(np.asarray(last_sync), 1)
+    x0 = np.asarray(jax.tree.leaves(bank)[0][0], np.float32)
+    xn = np.asarray(jax.tree.leaves(bank)[0][-1], np.float32)
+    np.testing.assert_array_equal(x0, xn)
