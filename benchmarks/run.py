@@ -157,7 +157,8 @@ def engine_wallclock(rounds=12):
 
 # ---------------------------------------------------------------- population
 
-def population_scale(n=256, c=16, rounds=8, sampler="uniform"):
+def population_scale(n=256, c=16, rounds=8, sampler="uniform",
+                     max_staleness=0.0, max_delay=1, delay_eta=0.0):
     """Cohort-sampled population vs the same-size plain run: population mode
     keeps N client states banked and computes only the C sampled clients per
     round (gather → fused scan round → scatter), so a round costs what a
@@ -212,6 +213,23 @@ def population_scale(n=256, c=16, rounds=8, sampler="uniform"):
          f"x{stats['pop'] / max(stats['plain'], 1e-12):.2f}")
     _row("population/masked_over_pop", 0.0,
          f"x{stats['masked'] / max(stats['pop'], 1e-12):.2f}")
+
+    if max_staleness != 0:
+        # asynchronous variant: overlapping cohorts with delayed arrivals,
+        # bounded-staleness gating, delay-adaptive server steps — reports
+        # the accepted-staleness histogram alongside the round cost
+        da = driver(n)
+        da.population = PopulationConfig(
+            n=n, cohort=c, sampler=sampler, max_staleness=max_staleness,
+            max_delay=max_delay, delay_eta=delay_eta)
+        ra = da.run(steps, eval_every=steps - 1)
+        hist = "|".join(f"{s}:{int(k)}" for s, k in
+                        enumerate(da.staleness_hist) if k)
+        dropped = sum(s["dropped"] for s in da.staleness_log)
+        _row(f"population/async_n{n}_c{c}_d{max_delay}", steady(da) * 1e6,
+             f"q={q};rounds={rounds};gnormT={ra.grad_norm[-1]:.3f};"
+             f"stale_hist={hist};dropped={dropped};"
+             f"max_staleness={max_staleness}")
 
 
 # ---------------------------------------------------------------- kernels
@@ -271,6 +289,16 @@ def main() -> None:
                     help="cohort sampler for the population benchmark")
     ap.add_argument("--rounds", type=int, default=8,
                     help="timed rounds for the population benchmark")
+    ap.add_argument("--max-staleness", type=float, default=0.0,
+                    help="population benchmark: > 0 adds an async variant "
+                         "dropping arrivals staler than this many rounds "
+                         "(reports the staleness histogram)")
+    ap.add_argument("--max-delay", type=int, default=1,
+                    help="population benchmark async variant: dispatch "
+                         "return delays are uniform over [1, max-delay]")
+    ap.add_argument("--delay-eta", type=float, default=0.0,
+                    help="population benchmark async variant: delay-"
+                         "adaptive server step coefficient")
     benches = {
         "table1": table1_complexity,
         "fig_hyperrep": fig1_hyperrep,
@@ -286,7 +314,8 @@ def main() -> None:
     args = ap.parse_args()
     benches["population"] = lambda: population_scale(
         args.population, args.cohort, rounds=args.rounds,
-        sampler=args.sampler)
+        sampler=args.sampler, max_staleness=args.max_staleness,
+        max_delay=args.max_delay, delay_eta=args.delay_eta)
     ENGINE = args.engine
     print("name,us_per_call,derived")
     if args.only:

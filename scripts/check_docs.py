@@ -1,0 +1,94 @@
+#!/usr/bin/env python
+"""README CLI-flag-table ⇔ argparse parity check (the docs CI gate).
+
+The README's "CLI flag reference" section documents every flag of
+``launch/train.py`` and ``benchmarks/run.py`` in one table per tool. This
+script asserts the two stay in lockstep, in BOTH directions:
+
+  * every flag the argparse parsers define appears in the README table;
+  * every flag the README table documents exists in the parsers.
+
+Flags are extracted from the sources with a regex (no imports — the check
+must run without jax installed), and from the README by section heading.
+Run from the repo root: ``python scripts/check_docs.py``. Exit code 0 on
+parity, 1 with a per-tool diff otherwise. Wired into the fast-tier CI job
+and ``tests/test_docs.py``.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+# tool name -> (source path, README section heading)
+TOOLS = {
+    "train": ("src/repro/launch/train.py",
+              "### `python -m repro.launch.train`"),
+    "bench": ("benchmarks/run.py", "### `python benchmarks/run.py`"),
+}
+
+ARG_RE = re.compile(r"""add_argument\(\s*["'](--[a-z0-9-]+)["']""")
+ROW_RE = re.compile(r"^\|\s*`(--[a-z0-9-]+)`\s*\|")
+
+
+def source_flags(path: pathlib.Path) -> set:
+    return set(ARG_RE.findall(path.read_text()))
+
+
+def readme_sections(readme: pathlib.Path) -> dict:
+    """heading -> set of flags documented in that section's table."""
+    sections, current = {}, None
+    for line in readme.read_text().splitlines():
+        if line.startswith("#"):
+            current = line.strip()
+            sections.setdefault(current, set())
+            continue
+        m = ROW_RE.match(line.strip())
+        if m and current is not None:
+            sections[current].add(m.group(1))
+    return sections
+
+
+DOCS = ("docs/ARCHITECTURE.md", "docs/async.md")
+
+
+def main() -> int:
+    readme = ROOT / "README.md"
+    text = readme.read_text()
+    sections = readme_sections(readme)
+    failures = []
+    for doc in DOCS:
+        if not (ROOT / doc).is_file():
+            failures.append(f"docs: {doc} is missing")
+        elif doc not in text:
+            failures.append(f"docs: README does not link to {doc}")
+    for tool, (src, heading) in TOOLS.items():
+        in_src = source_flags(ROOT / src)
+        if heading not in sections:
+            failures.append(f"{tool}: README section {heading!r} not found")
+            continue
+        in_doc = sections[heading]
+        undocumented = sorted(in_src - in_doc)
+        stale = sorted(in_doc - in_src)
+        if undocumented:
+            failures.append(f"{tool}: flags missing from the README table: "
+                            f"{', '.join(undocumented)}")
+        if stale:
+            failures.append(f"{tool}: README documents flags the parser "
+                            f"does not define: {', '.join(stale)}")
+    if failures:
+        print("check_docs: README CLI flag table out of sync "
+              "(README.md 'CLI flag reference' section):", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    n = sum(len(sections[h]) for _, h in TOOLS.values())
+    print(f"check_docs: OK — {n} flags documented, parsers and README "
+          f"agree")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -180,7 +180,7 @@ class PopulationConfig:
     """
     n: int                          # population size N
     cohort: int                     # per-round compute cohort C
-    sampler: str = "uniform"        # uniform | roundrobin | trace
+    sampler: str = "uniform"        # uniform | roundrobin | trace | trace-file
     sync_mode: str = "broadcast"    # broadcast | participants (fed.population)
     # staleness-aware aggregation: weight ∝ (1 + rounds_since_sync)^-decay;
     # 0 = plain uniform cohort average (only meaningful with participants sync)
@@ -188,6 +188,22 @@ class PopulationConfig:
     # availability-trace sampler schedule (sampler == "trace")
     trace_period: int = 8
     trace_duty: float = 0.5
+    # recorded-trace replay (sampler == "trace-file"): JSONL of per-client
+    # up intervals, see docs/async.md for the format spec
+    trace_file: Optional[str] = None
+    # ---- asynchronous execution (fed.population.make_async_round) ----
+    # 0 = synchronous rounds (today's path, bit-identical); > 0 enables
+    # async execution and drops arriving updates staler than this many
+    # rounds (float("inf") = async with no gating)
+    max_staleness: float = 0.0
+    # per-dispatch return delay is uniform over [1, max_delay] rounds;
+    # > 1 makes cohorts genuinely overlap (a client can be sampled while
+    # still in flight)
+    max_delay: int = 1
+    # delay-adaptive server step à la Jiao et al. (arXiv:2212.10048):
+    # the model movement scales by 1 / (1 + delay_eta * (mean_tau - 1));
+    # 0 disables
+    delay_eta: float = 0.0
 
     def __post_init__(self):
         if not 1 <= self.cohort <= self.n:
@@ -196,9 +212,31 @@ class PopulationConfig:
         if self.sync_mode not in ("broadcast", "participants"):
             raise ValueError(f"sync_mode must be 'broadcast' or "
                              f"'participants', got {self.sync_mode!r}")
-        if self.sampler not in ("uniform", "roundrobin", "trace"):
+        if self.sampler not in ("uniform", "roundrobin", "trace",
+                                "trace-file"):
             raise ValueError(f"sampler must be one of uniform/roundrobin/"
-                             f"trace, got {self.sampler!r}")
+                             f"trace/trace-file, got {self.sampler!r}")
+        if self.sampler == "trace-file" and not self.trace_file:
+            raise ValueError("sampler='trace-file' needs trace_file=<path>")
+        if self.max_staleness < 0:
+            raise ValueError(f"max_staleness must be >= 0 (0 = synchronous),"
+                             f" got {self.max_staleness}")
+        if self.max_delay < 1:
+            raise ValueError(f"max_delay must be >= 1 round, "
+                             f"got {self.max_delay}")
+        if self.delay_eta < 0:
+            raise ValueError(f"delay_eta must be >= 0, got {self.delay_eta}")
+        if self.max_staleness == 0 and (self.max_delay > 1
+                                        or self.delay_eta > 0):
+            raise ValueError("max_delay > 1 / delay_eta > 0 are async knobs:"
+                             " set max_staleness > 0 (or float('inf')) to "
+                             "enable asynchronous execution")
+
+    @property
+    def asynchronous(self) -> bool:
+        """True when rounds run the async path (overlapping cohorts,
+        delayed arrivals, bounded-staleness gating)."""
+        return self.max_staleness != 0
 
 
 _ARCH_IDS = [

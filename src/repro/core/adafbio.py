@@ -1,4 +1,18 @@
-"""AdaFBiO — Algorithm 1, as pure per-client/server step functions.
+"""AdaFBiO — Algorithm 1 of the paper, as pure per-client/server step
+functions.
+
+What this module owns: the paper's per-iteration math — the eta_t /
+alpha / beta schedules (§4), the STORM variance-reduced estimator refreshes
+(Eqs. 10-11), the adaptive-matrix local update (Eq. 14), and the sync-step
+server update with adaptive regeneration (Eqs. 8-9, lines 4-9). How it
+composes with its neighbours: hypergradient estimates come from
+``repro.core.hypergrad`` (Eq. 15 Neumann series); adaptive matrices from
+``repro.core.adaptive``; the fused flat-buffer kernels from
+``repro.kernels.ops`` (selected by ``FedConfig.fused``). Everything here is
+one-client math: the federated structure — the leading M client axis,
+rounds, cohorts, meshes — is added by ``repro.fed.runtime`` /
+``repro.fed.round`` / ``repro.fed.population``, which consume these
+functions through the ``Algorithm`` contract in ``repro.core.baselines``.
 
 State:
   ClientState = {"x", "y", "v", "w"}       (per client m; leading M axis added

@@ -1,15 +1,19 @@
-from repro.fed.population import (ClientPopulation, make_population_round,
+from repro.fed.population import (ClientPopulation, init_async_state,
+                                  make_async_round, make_population_round,
                                   staleness_weights)
 from repro.fed.round import make_round_step, stack_round_batches
 from repro.fed.runtime import (FederatedTrainer, build_lm_problem_ctx,
                                split_client_batch)
 from repro.fed.sampling import (AvailabilityTraceSampler, CohortSampler,
-                                RoundRobinSampler, SAMPLERS, UniformSampler,
-                                make_sampler)
+                                RoundRobinSampler, SAMPLERS,
+                                TraceFileSampler, UniformSampler, load_trace,
+                                make_sampler, save_trace)
 from repro.fed.serve import build_serve_fns
 
 __all__ = ["FederatedTrainer", "build_lm_problem_ctx", "split_client_batch",
            "build_serve_fns", "make_round_step", "stack_round_batches",
            "ClientPopulation", "make_population_round", "staleness_weights",
+           "make_async_round", "init_async_state",
            "CohortSampler", "UniformSampler", "RoundRobinSampler",
-           "AvailabilityTraceSampler", "SAMPLERS", "make_sampler"]
+           "AvailabilityTraceSampler", "TraceFileSampler", "load_trace",
+           "save_trace", "SAMPLERS", "make_sampler"]

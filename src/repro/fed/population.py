@@ -27,6 +27,19 @@ Sync modes (who receives the post-aggregation server state):
                   intermittent-availability regime (Jiao et al.,
                   arXiv:2212.10048) — and ``staleness_weights`` can
                   down-weight long-absent clients at aggregation time.
+
+Asynchronous execution (``make_async_round``, PR 3) drops the synchronized-
+round assumption entirely: a dispatched client takes ``delay`` rounds to
+return its update (``in_flight``/``dispatch_round`` bookkeeping + a
+jit-compatible pending-update buffer holding the computed update until it
+"arrives"), cohorts overlap (a client sampled while still in flight simply
+keeps flying — its delayed update lands when due), the server drops arrivals
+older than ``max_staleness`` rounds (bounded-staleness gating) and can scale
+its step by the observed cohort staleness (delay-adaptive eta_t, à la Jiao
+et al. arXiv:2212.10048). The degenerate setting — every delay exactly one
+round, no gating, no delay adaptation — reproduces the synchronous
+``make_population_round`` trajectories, making async a strict superset of
+the sync path (tests/test_async.py). See docs/async.md for the semantics.
 """
 from __future__ import annotations
 
@@ -37,6 +50,9 @@ import jax
 import jax.numpy as jnp
 
 SYNC_MODES = ("broadcast", "participants")
+
+# return_round sentinel for clients with no pending update in flight
+NEVER = jnp.iinfo(jnp.int32).max
 
 
 # ------------------------------------------------------------ bank primitives
@@ -84,10 +100,24 @@ def staleness_weights(last_sync, ids, round_id, decay: float):
 
 @dataclasses.dataclass
 class ClientPopulation:
-    """N stacked client states + per-client sync bookkeeping."""
+    """N stacked client states + per-client sync/flight bookkeeping.
+
+    ``in_flight``/``dispatch_round`` are the async-execution fields: client i
+    with ``in_flight[i]`` is busy computing an update it dispatched at round
+    ``dispatch_round[i]`` and cannot start new work until that update
+    arrives (``make_async_round``). The synchronous path never sets them.
+    """
     states: Any                  # pytree, every leaf with leading axis N
     last_sync: jax.Array         # int32 [N]: round of last server-state pull
     n: int
+    in_flight: Optional[jax.Array] = None      # bool  [N]
+    dispatch_round: Optional[jax.Array] = None  # int32 [N]
+
+    def __post_init__(self):
+        if self.in_flight is None:
+            self.in_flight = jnp.zeros((self.n,), bool)
+        if self.dispatch_round is None:
+            self.dispatch_round = jnp.zeros((self.n,), jnp.int32)
 
     @classmethod
     def create(cls, init_one: Callable[[jax.Array, Any], Any], key,
@@ -154,5 +184,209 @@ def make_population_round(local_step_ids: Callable, sync_update: Callable,
                              new_client))
             last_sync = last_sync.at[ids].set(round_id + 1)
         return bank_states, last_sync, server
+
+    return round_fn
+
+
+# ------------------------------------------------------------ async execution
+
+def scatter_where(bank_states, ids, values, keep):
+    """Masked cohort write-back: ``bank[ids[j]] = values[j]`` where
+    ``keep[j]``, rows with ``~keep[j]`` are untouched (later duplicate ids
+    win, as in :func:`scatter`)."""
+    def upd(a, v):
+        m = keep.reshape((keep.shape[0],) + (1,) * (v.ndim - 1))
+        return a.at[ids].set(jnp.where(m, v.astype(a.dtype), a[ids]))
+    return jax.tree.map(upd, bank_states, values)
+
+
+def _rows_where(bank_states, mask, value):
+    """Overwrite the bank rows selected by ``mask`` ([N] bool) with one
+    unbatched client state."""
+    def upd(a, v):
+        m = mask.reshape((mask.shape[0],) + (1,) * (a.ndim - 1))
+        return jnp.where(m, v[None].astype(a.dtype), a)
+    return jax.tree.map(upd, bank_states, value)
+
+
+def _tree_where(pred, a, b):
+    return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
+
+
+def delay_schedule(key, round_id, n: int, max_delay: int) -> jax.Array:
+    """Per-(client, round) return delays, uniform over [1, max_delay] rounds.
+
+    Deterministic in (key, round_id, client id) and drawn on a salt stream
+    disjoint from the local-step RNG folds, so enabling async never perturbs
+    the per-step sample draws."""
+    if max_delay == 1:
+        return jnp.ones((n,), jnp.int32)
+    k = jax.random.fold_in(jax.random.fold_in(key, 0x0DE1A7), round_id)
+    return jax.random.randint(k, (n,), 1, max_delay + 1).astype(jnp.int32)
+
+
+def init_async_state(bank_states, server, n: int) -> dict:
+    """Initial async-execution state around a freshly initialized bank.
+
+    Keys:
+      bank            [N, ...] pytree — each client's latest local state
+      pending         [N, ...] pytree — the in-flight update awaiting arrival
+      last_sync       int32 [N] — round of last server-state pull
+      in_flight       bool  [N] — client is computing / update not yet landed
+      dispatch_round  int32 [N] — round the current flight started
+      return_round    int32 [N] — round the pending update arrives (NEVER
+                      when idle)
+      anchor          unbatched client state — the server's current global
+                      model (last broadcast value; delay-adaptive scaling
+                      interpolates toward it)
+      server          the algorithm's server state
+    """
+    uniform = jnp.full((n,), 1.0 / n, jnp.float32)
+    return {
+        "bank": bank_states,
+        # a real copy: pending must not alias the bank's buffers, the round
+        # program donates both
+        "pending": jax.tree.map(jnp.copy, bank_states),
+        "last_sync": jnp.zeros((n,), jnp.int32),
+        "in_flight": jnp.zeros((n,), bool),
+        "dispatch_round": jnp.zeros((n,), jnp.int32),
+        "return_round": jnp.full((n,), NEVER, jnp.int32),
+        "anchor": weighted_mean(bank_states, uniform),
+        "server": server,
+    }
+
+
+def make_async_round(local_step_ids: Callable, sync_update: Callable,
+                     q: int, *, sync_mode: str = "broadcast",
+                     staleness_decay: float = 0.0,
+                     max_staleness: float = float("inf"),
+                     max_delay: int = 1,
+                     delay_eta: float = 0.0) -> Callable:
+    """Build the asynchronous round program: arrivals → gate → server step →
+    dispatch.
+
+    One call advances the simulation by one server round ``round_id``:
+
+      1. **Arrivals** — every in-flight update whose ``return_round`` is due
+         lands. Its observed staleness is ``tau = round_id -
+         dispatch_round`` (the rounds elapsed since the client pulled the
+         server state).
+      2. **Bounded-staleness gate** — arrivals with ``tau > max_staleness``
+         are dropped (their compute is discarded; the client still re-syncs
+         so it cannot stay stale forever). Accepted arrivals aggregate with
+         the ``(1 + tau)^-staleness_decay`` weights of
+         :func:`staleness_weights`.
+      3. **Server step** — ``sync_update`` maps the aggregate to the new
+         global model; with ``delay_eta > 0`` the movement away from the
+         previous global model (``anchor``) is scaled by the delay-adaptive
+         factor ``1 / (1 + delay_eta * max(mean_tau - 1, 0))`` — staler
+         cohorts take smaller server steps (Jiao et al., arXiv:2212.10048).
+         ``broadcast`` pushes the result to every idle client,
+         ``participants`` only to the clients that just arrived. A round
+         with no arrivals leaves the server untouched.
+      4. **Dispatch** — the sampled cohort ``ids`` starts the q local steps.
+         Clients still in flight are ineligible (their row of the cohort
+         compute is masked out — overlapping cohorts); eligible clients
+         store the computed update in the pending buffer with a return round
+         ``round_id + delay``, ``delay`` ~ U[1, max_delay]
+         (:func:`delay_schedule`).
+
+    With ``max_delay=1``, ``max_staleness=inf``, ``delay_eta=0`` every
+    update returns next round with staleness 1 and the program reproduces
+    the synchronous path exactly (tests/test_async.py).
+
+    Returns ``round_fn(state, ids, batches_q, key, round_id) -> (state,
+    stats)`` over the :func:`init_async_state` dict; ``stats`` carries
+    ``arrived/accepted/dropped`` counts, ``mean_staleness``, ``eta_scale``,
+    ``dispatched``, and the per-client ``staleness`` vector (int32 [N], the
+    accepted arrival's tau, -1 elsewhere) for histogramming.
+    """
+    if sync_mode not in SYNC_MODES:
+        raise ValueError(f"sync_mode must be one of {SYNC_MODES}, "
+                         f"got {sync_mode!r}")
+    if q < 1:
+        raise ValueError(f"round needs q >= 1 local steps, got {q}")
+    if max_delay < 1:
+        raise ValueError(f"max_delay must be >= 1 round, got {max_delay}")
+    if max_staleness <= 0:
+        raise ValueError("async rounds need max_staleness > 0 (use the "
+                         "synchronous make_population_round for the "
+                         "max_staleness=0 setting)")
+
+    def round_fn(state, ids, batches_q, key, round_id):
+        bank, pending = state["bank"], state["pending"]
+        last_sync, in_flight = state["last_sync"], state["in_flight"]
+        disp, ret = state["dispatch_round"], state["return_round"]
+        anchor, server = state["anchor"], state["server"]
+        n = last_sync.shape[0]
+
+        # 1. arrivals + 2. bounded-staleness gate
+        arrived = in_flight & (ret <= round_id)
+        tau = jnp.maximum(round_id - disp, 0).astype(jnp.float32)
+        accept = arrived & (tau <= max_staleness)
+        n_acc = accept.sum()
+        has = n_acc > 0
+        w = accept.astype(jnp.float32) * (1.0 + tau) ** (-staleness_decay)
+        w = w / jnp.maximum(w.sum(), 1e-12)
+        # no-arrival rounds aggregate the anchor (result discarded below)
+        avg = _tree_where(has, weighted_mean(pending, w), anchor)
+
+        # 3. server step (+ delay-adaptive scaling of the model movement)
+        new_client, new_server = sync_update(server, avg)
+        mean_tau = jnp.where(has, (accept * tau).sum()
+                             / jnp.maximum(n_acc, 1), 0.0)
+        scale = 1.0 / (1.0 + delay_eta * jnp.maximum(mean_tau - 1.0, 0.0))
+        if delay_eta > 0.0:
+            new_client = jax.tree.map(
+                lambda a, c: (a.astype(jnp.float32) + scale
+                              * (c.astype(jnp.float32)
+                                 - a.astype(jnp.float32))).astype(c.dtype),
+                anchor, new_client)
+        server = _tree_where(has, new_server, server)
+        anchor = _tree_where(has, new_client, anchor)
+        if sync_mode == "broadcast":
+            sync_rows = ~(in_flight & ~arrived)   # everyone not mid-flight
+        else:
+            # returners only — dropped arrivals re-sync too, so a client
+            # can never be wedged permanently past the staleness bound
+            sync_rows = arrived
+        sync_rows = sync_rows & has               # no arrivals → no write
+        bank = _rows_where(bank, sync_rows, anchor)
+        last_sync = jnp.where(sync_rows, round_id, last_sync)
+        in_flight = in_flight & ~arrived
+        ret = jnp.where(arrived, NEVER, ret)
+
+        # 4. dispatch the cohort (in-flight members are ineligible)
+        eligible = ~in_flight[ids]
+        cur = gather(bank, ids)
+
+        def body(carry, batch):
+            st, srv = carry
+            st, srv = local_step_ids(st, srv, batch, key, ids)
+            return (st, srv), None
+
+        (cur, server), _ = jax.lax.scan(body, (cur, server), batches_q)
+        delay = delay_schedule(key, round_id, n, max_delay)[ids]
+        pending = scatter_where(pending, ids, cur, eligible)
+        # the bank row mirrors the client's own latest local state (same
+        # meaning as the sync path's post-round scatter); the server never
+        # reads it before the arrival lands from `pending`
+        bank = scatter_where(bank, ids, cur, eligible)
+        in_flight = in_flight.at[ids].set(True)   # eligible start, rest stay
+        disp = disp.at[ids].set(jnp.where(eligible, round_id, disp[ids]))
+        ret = ret.at[ids].set(jnp.where(eligible, round_id + delay,
+                                        ret[ids]))
+
+        state = {"bank": bank, "pending": pending, "last_sync": last_sync,
+                 "in_flight": in_flight, "dispatch_round": disp,
+                 "return_round": ret, "anchor": anchor, "server": server}
+        stats = {"arrived": arrived.sum().astype(jnp.int32),
+                 "accepted": n_acc.astype(jnp.int32),
+                 "dropped": (arrived.sum() - n_acc).astype(jnp.int32),
+                 "mean_staleness": mean_tau,
+                 "eta_scale": scale.astype(jnp.float32),
+                 "dispatched": eligible.sum().astype(jnp.int32),
+                 "staleness": jnp.where(accept, tau.astype(jnp.int32), -1)}
+        return state, stats
 
     return round_fn

@@ -1,11 +1,26 @@
-"""Federated runtime: client state with a leading M axis mapped onto the mesh.
+"""Federated LM runtime: the mesh-sharded trainer that turns the paper's
+algorithm into jitted step/round programs over real architectures.
 
-Replica mode: M = pods x data rows; each client's tensors shard over `model`
-only. Zero mode: M = pods; client tensors additionally FSDP-shard over `data`.
-Local steps are vmapped per client with ``spmd_axis_name`` = the client mesh
-axes, so the compiled local step contains NO collectives over client axes (the
-paper's communication saving is structural, not scheduled). The sync step's
-client-mean lowers to all-reduces over the client axes — once per q steps.
+What this module owns: ``FederatedTrainer`` — state structure (client x/y/v/w
+pytrees with a leading M client axis, server adaptive state), logical-axis
+shardings, and the jitted step functions (``local``/``sync``/``round``/
+``population_round``/``async_population_round``) for one (arch, mesh) pair.
+How it composes with its neighbours: per-step math comes from ``repro.core``
+(``alg.local_step`` = Algorithm 1 lines 10-20 / Eq. 14, ``alg.sync_update``
+= lines 4-9); fused round programs from ``repro.fed.round`` (scan engine)
+and ``repro.fed.population`` (bank rounds, async rounds); model forward/
+backward from ``repro.models`` via the bilevel problem split
+(``repro.core.bilevel``). The host-side loop that drives these programs is
+``repro.launch.train`` (or ``repro.tasks.driver`` for the small-scale paper
+experiments).
+
+Placement: replica mode — M = pods x data rows; each client's tensors shard
+over `model` only. Zero mode — M = pods; client tensors additionally
+FSDP-shard over `data`. Local steps are vmapped per client with
+``spmd_axis_name`` = the client mesh axes, so the compiled local step
+contains NO collectives over client axes (the paper's communication saving
+is structural, not scheduled). The sync step's client-mean lowers to
+all-reduces over the client axes — once per q steps (paper §4, Remark 2).
 """
 from __future__ import annotations
 
@@ -160,9 +175,13 @@ class FederatedTrainer:
         return jax.tree.map(
             lambda s: jax.ShapeDtypeStruct((self.m,) + s.shape, s.dtype), one)
 
-    def client_state_axes(self):
+    def one_state_axes(self):
+        """Logical axes of ONE client's state (no leading clients axis)."""
         ax = self._axes
-        one = {"x": ax["x"], "y": ax["y"], "v": ax["y"], "w": ax["x"]}
+        return {"x": ax["x"], "y": ax["y"], "v": ax["y"], "w": ax["x"]}
+
+    def client_state_axes(self):
+        one = self.one_state_axes()
         return jax.tree.map(lambda a: ("clients",) + a, one,
                             is_leaf=lambda t: isinstance(t, tuple)
                             and all(u is None or isinstance(u, str) for u in t))
@@ -312,6 +331,37 @@ class FederatedTrainer:
         return jax.tree.map(
             lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), one)
 
+    def init_async_population_states(self, key, batch, n: int):
+        """Bank init + async bookkeeping: the ``init_async_state`` dict
+        (bank, pending buffer, flight/staleness vectors, anchor, server)
+        that ``async_population_round_fn`` advances."""
+        from repro.fed.population import init_async_state
+        bank, _, server = self.init_population_states(key, batch, n)
+        return init_async_state(bank, server, n)
+
+    def async_population_round_fn(self, n: int, q: Optional[int] = None, *,
+                                  sync_mode: str = "broadcast",
+                                  staleness_decay: float = 0.0,
+                                  max_staleness: float = float("inf"),
+                                  max_delay: int = 1,
+                                  delay_eta: float = 0.0) -> Callable:
+        """Asynchronous round over an n-client bank: arrivals →
+        bounded-staleness gate → delay-adaptive server step → overlapping-
+        cohort dispatch, one jitted program per round
+        (``repro.fed.population.make_async_round``; semantics in
+        docs/async.md). ``round(state, ids, batches_q, key, round_id) ->
+        (state, stats)``."""
+        from repro.fed.population import make_async_round
+
+        def sync_update(server, avg):
+            return self.alg.sync_update(server, avg, n)
+        return make_async_round(
+            self.cohort_local_step_fn(n), sync_update,
+            q if q is not None else self.fed.q,
+            sync_mode=sync_mode, staleness_decay=staleness_decay,
+            max_staleness=max_staleness, max_delay=max_delay,
+            delay_eta=delay_eta)
+
     def population_state_shardings(self, n: int):
         """Bank shardings: the population axis takes the client mesh axes
         (same logical layout as the per-round client axis), so gather/scatter
@@ -333,8 +383,13 @@ class FederatedTrainer:
     # -------------------------------------------------- jit plumbing
 
     def jitted(self, which: str, batch_specs=None, batch_axes=None,
-               donate: bool = True, population_n: Optional[int] = None):
-        """jit with shardings; returns the (lowerable) compiled callable."""
+               donate: bool = True, population_n: Optional[int] = None,
+               async_opts: Optional[Dict[str, Any]] = None):
+        """jit with shardings; returns the (lowerable) compiled callable.
+
+        ``async_opts`` (async_population_round only) forwards the async
+        knobs — sync_mode / staleness_decay / max_staleness / max_delay /
+        delay_eta — to :meth:`async_population_round_fn`."""
         ss = self.state_shardings()
         sv = self.server_shardings()
         rep = NamedSharding(self.mesh, P()) if self.mesh else None
@@ -349,7 +404,8 @@ class FederatedTrainer:
             in_sh = (ss, sv)
             out_sh = (ss, sv)
             dn = (0,) if donate else ()
-        elif which in ("round", "population_round"):
+        elif which in ("round", "population_round",
+                       "async_population_round"):
             # scanned batches carry a leading (unsharded) q axis
             is_axes = lambda t: (isinstance(t, tuple) and
                                  all(u is None or isinstance(u, str)
@@ -366,13 +422,35 @@ class FederatedTrainer:
                 fn = self.round_step_fn()
                 in_sh = (ss, sv, bsh, rep)
                 out_sh = (ss, sv)
-            else:
+            elif which == "population_round":
                 if population_n is None:
                     raise ValueError("population_round needs population_n")
                 fn = self.population_round_fn(population_n)
                 pss = self.population_state_shardings(population_n)
                 in_sh = (pss, rep, sv, rep, bsh, rep, rep)
                 out_sh = (pss, rep, sv)
+            else:
+                if population_n is None:
+                    raise ValueError("async_population_round needs "
+                                     "population_n")
+                fn = self.async_population_round_fn(population_n,
+                                                    **(async_opts or {}))
+                pss = self.population_state_shardings(population_n)
+                one_abs = jax.tree.map(
+                    lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype),
+                    self.abstract_population_states(population_n))
+                one_sh = self._shardings(self.one_state_axes(), one_abs,
+                                         fallback=("model",))
+                st_sh = {"bank": pss, "pending": pss, "last_sync": rep,
+                         "in_flight": rep, "dispatch_round": rep,
+                         "return_round": rep, "anchor": one_sh,
+                         "server": sv}
+                stats_sh = None if self.mesh is None else {
+                    k: rep for k in ("arrived", "accepted", "dropped",
+                                     "mean_staleness", "eta_scale",
+                                     "dispatched", "staleness")}
+                in_sh = (st_sh, rep, bsh, rep, rep)
+                out_sh = (st_sh, stats_sh)
             dn = (0,) if donate else ()
         else:
             raise ValueError(which)

@@ -9,7 +9,7 @@ reproducible (and replayable against the legacy masked-participation path —
 `FedDriver._active_mask` consumes the same draw, which is what the
 cohort ≡ masked parity tests rely on).
 
-Three policies, mirroring the client-sampling settings of the related
+Four policies, mirroring the client-sampling settings of the related
 federated-bilevel work (uniform sampling à la Gao arXiv:2204.13299;
 availability traces à la the asynchronous setting of Jiao et al.
 arXiv:2212.10048):
@@ -22,16 +22,47 @@ arXiv:2212.10048):
                 currently-available clients. If fewer than C are up, the
                 available set is cycled to fill the fixed-shape cohort
                 (duplicates are an availability artifact, and are weighted
-                like any repeated participant by the aggregation).
+                like any repeated participant by the aggregation). If NO
+                client is up, the draw falls back to uniform without
+                replacement over all N (docs/async.md documents why).
+  trace-file  — same cohort draw, but availability replays a recorded
+                device trace (JSONL of per-client up intervals,
+                :func:`load_trace`) instead of a synthetic periodic
+                schedule; the trace cycles past its horizon.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-SAMPLERS = ("uniform", "roundrobin", "trace")
+SAMPLERS = ("uniform", "roundrobin", "trace", "trace-file")
+
+
+def draw_from_available(up: jax.Array, key: jax.Array, round_id: int,
+                        c: int) -> jax.Array:
+    """Uniform cohort draw (without replacement) from the up set.
+
+    Available clients get scores in [-1, 0), unavailable in [0, 1): argsort
+    ranks every up client ahead of every down client, with a uniform shuffle
+    within each group. A shortfall (0 < #up < C) cycles the up set so the
+    cohort keeps its static shape [c]; an EMPTY up set falls back to a
+    uniform draw without replacement over all N clients — the defined
+    all-clients-down behaviour (every score then sits in [0, 1), so the
+    argsort is already a uniform permutation of the full population).
+    """
+    n = up.shape[0]
+    k = jax.random.fold_in(key, round_id)
+    score = jax.random.uniform(k, (n,)) - up.astype(jnp.float32)
+    order = jnp.argsort(score)
+    pool = jnp.where(up.sum() > 0, up.sum(), n)
+    slot = jnp.arange(c)
+    # slots beyond the pool wrap around the available prefix rather than
+    # dipping into down clients
+    return order[jnp.where(slot < pool, slot, slot % pool)].astype(jnp.int32)
 
 
 class CohortSampler:
@@ -98,23 +129,110 @@ class AvailabilityTraceSampler(CohortSampler):
         return (round_id + self._phases()) % self.period < up_len
 
     def cohort(self, round_id: int) -> jax.Array:
-        up = self.up_mask(round_id)
-        k = jax.random.fold_in(self.key, round_id)
-        # available clients get scores in [-1, 0), unavailable in [0, 1):
-        # argsort ranks every up client ahead of every down client, with a
-        # uniform shuffle within each group.
-        score = jax.random.uniform(k, (self.n,)) - up.astype(jnp.float32)
-        order = jnp.argsort(score)
-        n_up = jnp.maximum(up.sum(), 1)
-        slot = jnp.arange(self.c)
-        # slots beyond the up count wrap around the available prefix rather
-        # than dipping into down clients
-        return order[jnp.where(slot < n_up, slot, slot % n_up)].astype(jnp.int32)
+        return draw_from_available(self.up_mask(round_id), self.key,
+                                   round_id, self.c)
+
+
+# ------------------------------------------------------------ trace replay
+
+def load_trace(path: str, n: int) -> np.ndarray:
+    """Load a JSONL availability trace into a dense [horizon, n] bool table.
+
+    One line per client: ``{"client": i, "up": [[start, end], ...]}`` —
+    client ``i`` is available during the half-open round intervals
+    ``[start, end)``. An optional ``{"horizon": T}`` line fixes the table
+    length; otherwise the horizon is the max interval end. Clients absent
+    from the file are always available (an un-instrumented device is assumed
+    up). Format spec + worked example: docs/async.md.
+    """
+    explicit = None
+    derived = 0
+    intervals = {}
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            rec = json.loads(line)
+            if "horizon" in rec:
+                explicit = int(rec["horizon"])
+                if explicit < 1:
+                    raise ValueError(f"horizon must be >= 1 round, "
+                                     f"got {explicit}")
+                continue
+            i = int(rec["client"])
+            if not 0 <= i < n:
+                raise ValueError(f"trace client id {i} outside population "
+                                 f"[0, {n})")
+            ivs = [(int(a), int(b)) for a, b in rec["up"]]
+            for a, b in ivs:
+                if a < 0 or b < a:
+                    raise ValueError(f"bad up interval [{a}, {b}) for "
+                                     f"client {i}")
+                derived = max(derived, b)
+            intervals[i] = intervals.get(i, []) + ivs
+    # an explicit horizon line FIXES the trace length (docs/async.md);
+    # intervals past it are clipped. Without one, the max interval end wins.
+    horizon = explicit if explicit is not None else derived
+    if horizon == 0:
+        raise ValueError(f"trace {path!r} has no up intervals and no "
+                         f"horizon line")
+    table = np.zeros((horizon, n), bool)
+    table[:, [i for i in range(n) if i not in intervals]] = True
+    for i, ivs in intervals.items():
+        for a, b in ivs:
+            table[a:min(b, horizon), i] = True
+    return table
+
+
+def save_trace(path: str, table: np.ndarray) -> None:
+    """Write a dense [horizon, n] availability table as the JSONL trace
+    format :func:`load_trace` reads (maximal up intervals per client)."""
+    table = np.asarray(table, bool)
+    horizon, n = table.shape
+    with open(path, "w") as f:
+        f.write(json.dumps({"horizon": int(horizon)}) + "\n")
+        for i in range(n):
+            col = table[:, i]
+            edges = np.flatnonzero(np.diff(np.concatenate(
+                ([False], col, [False]))))
+            ivs = [[int(a), int(b)] for a, b in
+                   zip(edges[::2], edges[1::2])]
+            f.write(json.dumps({"client": i, "up": ivs}) + "\n")
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceFileSampler(CohortSampler):
+    """Replay a recorded availability trace ([horizon, n] bool table).
+
+    ``up_mask(r)`` is row ``r % horizon`` (the trace cycles past its
+    horizon); the cohort draw — including the shortfall cycling and the
+    all-down uniform fallback — is :func:`draw_from_available`, shared with
+    the synthetic ``trace`` sampler, so replaying a trace generated from a
+    periodic schedule reproduces that schedule's cohorts exactly
+    (tests/test_property.py).
+    """
+    n: int
+    c: int
+    key: jax.Array
+    table: np.ndarray            # [horizon, n] bool (host-side, static)
+
+    @classmethod
+    def from_file(cls, path: str, n: int, c: int,
+                  key: jax.Array) -> "TraceFileSampler":
+        return cls(n, c, key, load_trace(path, n))
+
+    def up_mask(self, round_id: int) -> jax.Array:
+        return jnp.asarray(self.table[int(round_id) % self.table.shape[0]])
+
+    def cohort(self, round_id: int) -> jax.Array:
+        return draw_from_available(self.up_mask(round_id), self.key,
+                                   round_id, self.c)
 
 
 def make_sampler(name: str, n: int, c: int, key: jax.Array, *,
                  period: int = 8, duty: float = 0.5,
-                 offset: int = 0) -> CohortSampler:
+                 offset: int = 0, trace_file: str = None) -> CohortSampler:
     if not 1 <= c <= n:
         raise ValueError(f"cohort size must satisfy 1 <= c <= n, "
                          f"got c={c}, n={n}")
@@ -124,4 +242,9 @@ def make_sampler(name: str, n: int, c: int, key: jax.Array, *,
         return RoundRobinSampler(n, c, offset)
     if name == "trace":
         return AvailabilityTraceSampler(n, c, key, period, duty)
+    if name == "trace-file":
+        if not trace_file:
+            raise ValueError("sampler 'trace-file' needs trace_file=<path> "
+                             "(JSONL availability trace, see docs/async.md)")
+        return TraceFileSampler.from_file(trace_file, n, c, key)
     raise KeyError(f"unknown sampler {name!r}; known: {SAMPLERS}")

@@ -55,6 +55,19 @@ def main():
                     help="per-round compute cohort size C (population mode)")
     ap.add_argument("--sampler", default="uniform", choices=list(SAMPLERS),
                     help="cohort sampling policy (population mode)")
+    ap.add_argument("--trace-file", default=None,
+                    help="JSONL availability trace replayed by the "
+                         "trace-file sampler (format: docs/async.md)")
+    ap.add_argument("--max-staleness", type=float, default=0.0,
+                    help="0 = synchronous rounds; > 0 enables async "
+                         "execution and drops arrivals staler than this "
+                         "many rounds (inf = no gating)")
+    ap.add_argument("--max-delay", type=int, default=1,
+                    help="async dispatch return delay is uniform over "
+                         "[1, max-delay] rounds (> 1 overlaps cohorts)")
+    ap.add_argument("--delay-eta", type=float, default=0.0,
+                    help="delay-adaptive server step: scale model movement "
+                         "by 1/(1 + delay_eta*(mean_staleness - 1))")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -139,6 +152,12 @@ def run_population(args, cfg, fed, shape, tr: FederatedTrainer, key):
     specs_n = jax.tree.map(
         lambda s: jax.ShapeDtypeStruct((n,) + s.shape[1:], s.dtype), specs_c)
     data = FederatedLMData(vocab=cfg.vocab, n_clients=n)
+    sampler = make_sampler(args.sampler, n, c, jax.random.fold_in(key, 23),
+                           trace_file=args.trace_file)
+    if args.max_staleness != 0:
+        run_population_async(args, cfg, fed, tr, key, data, specs_c,
+                             specs_n, sampler)
+        return
     bank, last_sync, server = tr.init_population_states(
         key, make_client_batch(data, cfg, specs_n, 0), n)
     start = 0
@@ -146,7 +165,6 @@ def run_population(args, cfg, fed, shape, tr: FederatedTrainer, key):
         (bank, last_sync, server), start = load_checkpoint(
             args.ckpt, (bank, last_sync, server))
         print(f"resumed population run from step {start}")
-    sampler = make_sampler(args.sampler, n, c, jax.random.fold_in(key, 23))
     round_fn = jax.jit(tr.population_round_fn(n))
     ev = jax.jit(tr.eval_fn())
 
@@ -182,6 +200,67 @@ def run_population(args, cfg, fed, shape, tr: FederatedTrainer, key):
         save_checkpoint(args.ckpt, (bank, last_sync, server),
                         n_rounds * fed.q)
         print(f"saved population checkpoint to {args.ckpt}")
+
+
+def run_population_async(args, cfg, fed, tr: FederatedTrainer, key, data,
+                         specs_c, specs_n, sampler):
+    """Asynchronous population mode: overlapping cohorts with delayed
+    arrivals, server-side bounded-staleness gating, delay-adaptive server
+    steps (docs/async.md). Prints per-eval arrival/staleness stats and a
+    final accepted-staleness histogram."""
+    n, c = args.population, args.cohort
+    state = tr.init_async_population_states(
+        key, make_client_batch(data, cfg, specs_n, 0), n)
+    start = 0
+    if args.resume and args.ckpt:
+        state, start = load_checkpoint(args.ckpt, state)
+        print(f"resumed async population run from step {start}")
+    round_fn = jax.jit(tr.async_population_round_fn(
+        n, max_staleness=args.max_staleness, max_delay=args.max_delay,
+        delay_eta=args.delay_eta))
+    ev = jax.jit(tr.eval_fn())
+
+    start_round = start // fed.q
+    n_rounds = max(args.steps // fed.q, start_round + 1)
+    if n_rounds * fed.q != args.steps:
+        print(f"async population mode runs whole rounds: {n_rounds * fed.q} "
+              f"steps instead of the requested {args.steps} "
+              f"(use --steps divisible by q={fed.q})", flush=True)
+    print(f"async population mode: N={n} clients, C={c} cohort/round "
+          f"({args.sampler} sampler), max_staleness={args.max_staleness}, "
+          f"max_delay={args.max_delay}, delay_eta={args.delay_eta}, "
+          f"rounds {start_round}..{n_rounds - 1} of q={fed.q}", flush=True)
+    hist = np.zeros(args.max_delay + 1, np.int64)
+    t0 = time.time()
+    for r in range(start_round, n_rounds):
+        t = r * fed.q
+        ids = sampler.cohort(r)
+        batch_q = tree_stack([make_cohort_batch(data, cfg, specs_c, t + j,
+                                                ids)
+                              for j in range(fed.q)])
+        r0 = time.time()
+        state, stats = round_fn(state, ids, batch_q, key, jnp.int32(r))
+        jax.block_until_ready(state)
+        dt = time.time() - r0
+        stale = np.asarray(stats["staleness"])
+        acc = stale[stale >= 0]
+        np.add.at(hist, np.minimum(acc, hist.size - 1), 1)
+        if r % max(args.eval_every // fed.q, 1) == 0 or r == n_rounds - 1:
+            last = jax.tree.map(lambda x: x[-1], batch_q)
+            loss = float(ev(state["bank"], last))
+            print(f"round {r:4d} (step {t + fed.q - 1:5d})  "
+                  f"f(x̄,ȳ) = {loss:.4f}  round={dt*1e3:.1f}ms  "
+                  f"arrived={int(stats['arrived'])} "
+                  f"dropped={int(stats['dropped'])} "
+                  f"tau={float(stats['mean_staleness']):.2f} "
+                  f"eta_scale={float(stats['eta_scale']):.3f}  "
+                  f"({time.time()-t0:.1f}s)", flush=True)
+    print("accepted-staleness histogram (rounds): "
+          + " ".join(f"{s}:{int(k)}" for s, k in enumerate(hist) if k),
+          flush=True)
+    if args.ckpt:
+        save_checkpoint(args.ckpt, state, n_rounds * fed.q)
+        print(f"saved async population checkpoint to {args.ckpt}")
 
 
 if __name__ == "__main__":

@@ -1,8 +1,19 @@
-"""Small-scale federated driver for the paper's experiments (M simulated
-clients as a leading pytree axis on a single host; algorithm-agnostic via the
-``Algorithm`` contract, so AdaFBiO and every baseline run identically).
+"""Small-scale federated experiment driver: the host-side loop that owns
+run orchestration for the paper's experiments.
 
-Two participation regimes:
+What this module owns: the ``FedDriver`` run loop (batch building, round
+scheduling, metric/wall-clock recording in ``RunResult``) for M simulated
+clients on a single host, algorithm-agnostic via the ``Algorithm`` contract
+(``repro.core.baselines``), so AdaFBiO (Algorithm 1) and every Table-1
+baseline run identically. How it composes with its neighbours: per-step math
+comes from ``repro.core`` (``alg.local_step`` implements lines 10-20 /
+Eq. 14, ``alg.sync_update`` lines 4-9 of Algorithm 1); fused round programs
+come from ``repro.fed.round`` (scan engine) and ``repro.fed.population``
+(cohort rounds, async rounds); cohort policies from ``repro.fed.sampling``.
+The mesh-sharded LM counterpart of this driver is
+``repro.fed.runtime.FederatedTrainer`` — same round shapes, sharded states.
+
+Three participation regimes:
 
   * masked (seed behaviour, ``participation`` < 1): ALL M clients compute
     every step, inactive ones are masked — O(M) compute regardless of the
@@ -10,10 +21,15 @@ Two participation regimes:
   * population (``population=PopulationConfig(n, cohort)``): N client states
     persist in a bank (repro.fed.population), a CohortSampler picks C ids
     per round, and only those C are computed (gather → fused scan round →
-    scatter) — O(C) compute at any population scale.
+    scatter) — O(C) compute at any population scale;
+  * async population (``population.max_staleness != 0``): overlapping
+    cohorts with delayed arrivals, server-side bounded-staleness gating and
+    delay-adaptive eta_t (docs/async.md); per-round arrival statistics land
+    in ``FedDriver.staleness_log`` / ``staleness_hist``.
 
 Tracks the paper's cost metrics exactly: #samples consumed (q(K+2) at init,
-K+2 per local step) and #communication rounds (1 per sync)."""
+K+2 per local step) and #communication rounds (1 per sync; async counts the
+rounds in which an aggregation actually happened)."""
 from __future__ import annotations
 
 import dataclasses
@@ -147,7 +163,8 @@ class FedDriver:
             p = self.population
             self._run_sampler = make_sampler(p.sampler, p.n, p.cohort, skey,
                                              period=p.trace_period,
-                                             duty=p.trace_duty)
+                                             duty=p.trace_duty,
+                                             trace_file=p.trace_file)
         elif self.participation < 1.0:
             c = max(int(self.participation * m), 1)
             self._run_sampler = make_sampler("uniform", m, c, skey)
@@ -287,6 +304,25 @@ class FedDriver:
         per = [self.batch_fn(int(g), step) for g in ids]
         return jax.tree.map(lambda *xs: jnp.stack(xs), *per)
 
+    def _cohort_local_step(self, n: int):
+        """One cohort-wide local step: per-client RNG folds the GLOBAL id
+        (so a cohort step reproduces the same client's full-population
+        step) and the eta_t schedule sees the population size ``n``. The
+        single implementation both the sync and async population round
+        programs scan — the degenerate-async ≡ sync parity guarantee
+        (tests/test_async.py) rides on them sharing it."""
+        def step(states, srv, batch, kk, ids):
+            t = srv["t"]
+
+            def one(st1, b, gid):
+                k2 = jax.random.fold_in(jax.random.fold_in(kk, gid), t)
+                return self.alg.local_step(st1, srv["adaptive"], b, k2, t, n)
+            states = jax.vmap(one)(states, batch, ids)
+            srv = dict(srv)
+            srv["t"] = t + 1
+            return states, srv
+        return step
+
     def _init_population(self, key):
         """Bank of N client states — same per-client init as the masked
         path's ``_init_run`` (shared (x0, y0), per-client estimator keys and
@@ -329,6 +365,8 @@ class FedDriver:
                 f"population.n ({pcfg.n}) must equal n_clients "
                 f"({self.n_clients}) — batch_fn/init indices run over the "
                 f"population")
+        if pcfg.asynchronous:
+            return self._run_population_async(total_steps, key, eval_every)
         n = pcfg.n
         fed = self.alg.fed
         q = fed.q
@@ -359,18 +397,11 @@ class FedDriver:
                         new_client))
                     last_sync = last_sync.at[prev_ids].set(round_id)
             cur = gather(bank, ids)
+            local = self._cohort_local_step(n)
 
             def body(carry, batch):
                 st, srv = carry
-                t = srv["t"]
-
-                def one(st1, b, gid):
-                    k2 = jax.random.fold_in(jax.random.fold_in(kk, gid), t)
-                    return self.alg.local_step(st1, srv["adaptive"], b, k2,
-                                               t, n)
-                st = jax.vmap(one)(st, batch, ids)
-                srv = dict(srv)
-                srv["t"] = t + 1
+                st, srv = local(st, srv, batch, kk, ids)
                 return (st, srv), None
 
             (cur, server), _ = jax.lax.scan(body, (cur, server), batches_q,
@@ -404,4 +435,80 @@ class FedDriver:
                 self._record(res, bank, t - 1, samples, comms)
         res.seconds = time.time() - t0
         res.final_avg_state = tree_mean_axis0(bank)
+        return res
+
+    # -------------------------------------------------- async population
+
+    def _run_population_async(self, total_steps: int, key,
+                              eval_every) -> RunResult:
+        """Asynchronous rounds over the bank: arrivals → bounded-staleness
+        gate → (delay-adaptively scaled) server step → overlapping-cohort
+        dispatch, all inside ONE jitted program per round
+        (``repro.fed.population.make_async_round``; semantics in
+        docs/async.md). Per-round arrival stats land in
+        ``self.staleness_log`` and the accepted-staleness histogram in
+        ``self.staleness_hist`` (index = staleness in rounds)."""
+        import numpy as np
+        from repro.fed.population import init_async_state, make_async_round
+        if self.track_consensus:
+            raise ValueError("track_consensus needs the masked eager engine "
+                             "(it reads pre-sync client states mid-round)")
+        pcfg = self.population
+        n = pcfg.n
+        fed = self.alg.fed
+        q = fed.q
+        pop, server = self._init_population(key)
+        state = init_async_state(pop.states, server, n)
+        samples = fed.q * (fed.neumann_k + 2)
+        comms = 0
+        self.staleness_log: List[Dict[str, float]] = []
+        self.staleness_hist = np.zeros(0, np.int64)
+
+        segment = jax.jit(make_async_round(
+            self._cohort_local_step(n),
+            lambda srv, avg: self.alg.sync_update(srv, avg, n),
+            q, sync_mode=pcfg.sync_mode,
+            staleness_decay=pcfg.staleness_decay,
+            max_staleness=pcfg.max_staleness, max_delay=pcfg.max_delay,
+            delay_eta=pcfg.delay_eta))
+
+        full, rem = divmod(total_steps, q)
+        lengths = [q] * full + ([rem] if rem else [])
+        eval_rounds = max(eval_every // q, 1)
+        res = RunResult(self.alg.name, [], [], [], [], [], 0.0)
+        t0 = time.time()
+        t = 0
+        for r, n_steps in enumerate(lengths):
+            ids = jnp.asarray(self._run_sampler.cohort(r), jnp.int32)
+            batches_q = tree_stack([self._cohort_batches(ids, t + j)
+                                    for j in range(n_steps)])
+            r0 = time.time()
+            state, stats = segment(state, ids, batches_q, key, jnp.int32(r))
+            jax.block_until_ready(state)
+            self._log_round(res, time.time() - r0)
+            stale = np.asarray(stats["staleness"])
+            acc = stale[stale >= 0]
+            if acc.size:
+                h = np.bincount(acc)
+                if h.size > self.staleness_hist.size:
+                    h[:self.staleness_hist.size] += self.staleness_hist
+                    self.staleness_hist = h
+                else:
+                    self.staleness_hist[:h.size] += h
+            self.staleness_log.append({
+                "round": r,
+                "arrived": int(stats["arrived"]),
+                "accepted": int(stats["accepted"]),
+                "dropped": int(stats["dropped"]),
+                "dispatched": int(stats["dispatched"]),
+                "mean_staleness": float(stats["mean_staleness"]),
+                "eta_scale": float(stats["eta_scale"]),
+            })
+            comms += int(int(stats["accepted"]) > 0)
+            t += n_steps
+            samples += n_steps * (fed.neumann_k + 2)
+            if r % eval_rounds == 0 or r == len(lengths) - 1:
+                self._record(res, state["bank"], t - 1, samples, comms)
+        res.seconds = time.time() - t0
+        res.final_avg_state = tree_mean_axis0(state["bank"])
         return res

@@ -1,0 +1,270 @@
+"""Asynchronous execution layer (repro.fed.population.make_async_round):
+degenerate async must reproduce the synchronous population path, bounded
+staleness must gate, cohorts must genuinely overlap, and delay-adaptive
+eta_t must scale the server step — all as one jitted program per round."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import PopulationConfig
+from repro.fed.population import (NEVER, init_async_state, make_async_round,
+                                  scatter_where)
+from repro.fed.sampling import UniformSampler
+from tests.test_system import _quad_driver
+
+
+INF = float("inf")
+
+
+def _toy_round(**kw):
+    """Toy algorithm: local step adds 1, sync returns the plain aggregate."""
+    def local(states, server, batch, key, ids):
+        return jax.tree.map(lambda a: a + 1.0, states), server
+
+    def sync(server, avg):
+        return avg, server
+    return make_async_round(local, sync, q=2, **kw)
+
+
+def _toy_state(n=5):
+    return init_async_state({"x": jnp.zeros((n,))}, {}, n)
+
+
+# --------------------------------------------------- strict-superset parity
+
+def test_degenerate_async_matches_sync_population():
+    """max_delay=1, max_staleness=inf, delay_eta=0: every dispatch returns
+    next round with staleness 1 — the async program must reproduce the
+    synchronous population trajectory (async is a strict superset)."""
+    runs = {}
+    for name, pcfg in [
+        ("sync", PopulationConfig(n=4, cohort=2)),
+        ("async", PopulationConfig(n=4, cohort=2, max_staleness=INF)),
+    ]:
+        d = _quad_driver("adafbio")
+        d.sampler = UniformSampler(4, 2, jax.random.PRNGKey(9))
+        d.population = pcfg
+        runs[name] = d.run(16, eval_every=4)
+    for a, b in zip(jax.tree.leaves(runs["sync"].final_avg_state),
+                    jax.tree.leaves(runs["async"].final_avg_state)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-6, rtol=1e-6)
+    np.testing.assert_allclose(runs["sync"].grad_norm, runs["async"].grad_norm,
+                               atol=1e-5, rtol=1e-5)
+    assert runs["sync"].comms[-1] == runs["async"].comms[-1]
+    assert runs["sync"].samples[-1] == runs["async"].samples[-1]
+
+
+def test_max_staleness_zero_routes_to_sync_path():
+    """The OFF switch: max_staleness=0 never enters the async program (no
+    staleness_log is produced) and matches the plain population run."""
+    d = _quad_driver("adafbio")
+    d.population = PopulationConfig(n=4, cohort=2, max_staleness=0.0)
+    d.run(8, eval_every=8)
+    assert not hasattr(d, "staleness_log")
+
+
+# --------------------------------------------------- toy-round mechanics
+
+def test_async_round_pending_buffer_and_delayed_arrival():
+    """A dispatched update sits in `pending` until its return round, then
+    aggregates and broadcasts; the bank mirrors the local state meanwhile."""
+    round_fn = jax.jit(_toy_round(max_staleness=INF, max_delay=1))
+    state = _toy_state(n=5)
+    ids = jnp.asarray([3, 0], jnp.int32)
+    kk = jax.random.PRNGKey(0)
+
+    state, stats = round_fn(state, ids, jnp.zeros((2,)), kk, jnp.int32(0))
+    # round 0: nothing arrives, both dispatch; update parked in pending
+    assert int(stats["arrived"]) == 0 and int(stats["dispatched"]) == 2
+    np.testing.assert_array_equal(np.asarray(state["in_flight"]),
+                                  [True, False, False, True, False])
+    np.testing.assert_array_equal(np.asarray(state["pending"]["x"]),
+                                  [2.0, 0.0, 0.0, 2.0, 0.0])
+    np.testing.assert_array_equal(np.asarray(state["bank"]["x"]),
+                                  [2.0, 0.0, 0.0, 2.0, 0.0])
+    np.testing.assert_array_equal(np.asarray(state["return_round"]),
+                                  [1, NEVER, NEVER, 1, NEVER])
+    # server untouched: no arrivals yet
+    np.testing.assert_array_equal(np.asarray(state["last_sync"]), 0)
+
+    state, stats = round_fn(state, ids, jnp.zeros((2,)), kk, jnp.int32(1))
+    # round 1: both arrive with staleness 1, aggregate (2.0) broadcasts,
+    # then the same cohort redispatches from the fresh model
+    assert int(stats["arrived"]) == 2 and int(stats["accepted"]) == 2
+    np.testing.assert_allclose(float(stats["mean_staleness"]), 1.0)
+    np.testing.assert_array_equal(np.asarray(state["bank"]["x"]),
+                                  [4.0, 2.0, 2.0, 4.0, 2.0])
+    np.testing.assert_array_equal(np.asarray(state["anchor"]["x"]), 2.0)
+    np.testing.assert_array_equal(np.asarray(state["last_sync"]), 1)
+
+
+def test_async_round_overlapping_cohort_skips_in_flight():
+    """With max_delay large, a client sampled while in flight is ineligible:
+    its pending update is NOT recomputed and its flight bookkeeping holds."""
+    round_fn = jax.jit(_toy_round(max_staleness=INF, max_delay=4))
+    state = _toy_state(n=5)
+    # pin delays: dispatch at round 0 with delay in [1,4] — run until arrival
+    ids = jnp.asarray([3, 0], jnp.int32)
+    kk = jax.random.PRNGKey(1)
+    state, s0 = round_fn(state, ids, jnp.zeros((2,)), kk, jnp.int32(0))
+    assert int(s0["dispatched"]) == 2
+    disp0 = np.asarray(state["dispatch_round"]).copy()
+    pend0 = np.asarray(state["pending"]["x"]).copy()
+    ret0 = np.asarray(state["return_round"]).copy()
+    if (ret0[[0, 3]] > 1).any():
+        # at least one of them is still flying at round 1: resampling it
+        # must not restart the flight
+        state, s1 = round_fn(state, ids, jnp.zeros((2,)), kk, jnp.int32(1))
+        still = [i for i in (0, 3) if ret0[i] > 1]
+        assert int(s1["dispatched"]) == 2 - len(still)
+        np.testing.assert_array_equal(
+            np.asarray(state["dispatch_round"])[still], disp0[still])
+        np.testing.assert_array_equal(
+            np.asarray(state["pending"]["x"])[still], pend0[still])
+
+
+def test_async_round_bounded_staleness_drops_and_resyncs():
+    """An arrival with tau > max_staleness is dropped (its compute never
+    reaches the aggregate) but the client still re-syncs to the current
+    global model."""
+    round_fn = jax.jit(_toy_round(max_staleness=1, max_delay=1,
+                                  sync_mode="participants"))
+    state = _toy_state(n=4)
+    kk = jax.random.PRNGKey(0)
+    # manufacture a stale in-flight update for client 2: dispatched at round
+    # -5 (tau = 5 at round 0), returning now, with a poisoned value that
+    # must never be aggregated
+    state["in_flight"] = state["in_flight"].at[2].set(True)
+    state["dispatch_round"] = state["dispatch_round"].at[2].set(-5)
+    state["return_round"] = state["return_round"].at[2].set(0)
+    state["pending"] = {"x": state["pending"]["x"].at[2].set(1e6)}
+    # and a fresh one for client 1 (tau = 1), value 10
+    state["in_flight"] = state["in_flight"].at[1].set(True)
+    state["dispatch_round"] = state["dispatch_round"].at[1].set(-1)
+    state["return_round"] = state["return_round"].at[1].set(0)
+    state["pending"] = {"x": state["pending"]["x"].at[1].set(10.0)}
+
+    ids = jnp.asarray([0, 3], jnp.int32)
+    state, stats = round_fn(state, ids, jnp.zeros((2,)), kk, jnp.int32(0))
+    assert int(stats["arrived"]) == 2
+    assert int(stats["accepted"]) == 1 and int(stats["dropped"]) == 1
+    # aggregate = the fresh update only; both returners re-sync to it
+    np.testing.assert_array_equal(np.asarray(state["anchor"]["x"]), 10.0)
+    np.testing.assert_array_equal(np.asarray(state["bank"]["x"])[[1, 2]],
+                                  [10.0, 10.0])
+    # accepted-staleness vector marks only the accepted arrival
+    np.testing.assert_array_equal(np.asarray(stats["staleness"]),
+                                  [-1, 1, -1, -1])
+    assert not np.asarray(state["in_flight"])[[1, 2]].any()
+
+
+def test_async_round_no_arrivals_leaves_server_alone():
+    """A round with zero arrivals must not move the server, the anchor, or
+    anyone's last_sync (the where-gated sync_update is fully discarded)."""
+    def sync(server, avg):
+        return avg, {"calls": server["calls"] + 1}
+    def local(states, server, batch, key, ids):
+        return jax.tree.map(lambda a: a + 1.0, states), server
+    round_fn = jax.jit(make_async_round(local, sync, q=1, max_staleness=INF,
+                                        max_delay=3))
+    state = init_async_state({"x": jnp.arange(4.0)}, {"calls": jnp.int32(0)},
+                             4)
+    state, stats = round_fn(state, jnp.asarray([1], jnp.int32),
+                            jnp.zeros((1,)), jax.random.PRNGKey(0),
+                            jnp.int32(0))
+    assert int(stats["arrived"]) == 0
+    assert int(state["server"]["calls"]) == 0
+    np.testing.assert_allclose(float(state["anchor"]["x"]), 1.5)
+    np.testing.assert_array_equal(np.asarray(state["last_sync"]), 0)
+
+
+def test_delay_adaptive_eta_scales_server_movement():
+    """delay_eta > 0: the model movement shrinks by
+    1/(1 + delay_eta*(mean_tau - 1)); tau = 1 arrivals are unscaled."""
+    for tau, want_scale in [(1, 1.0), (3, 0.5)]:
+        round_fn = jax.jit(_toy_round(max_staleness=INF, max_delay=1,
+                                      delay_eta=0.5))
+        state = _toy_state(n=3)
+        state["in_flight"] = state["in_flight"].at[0].set(True)
+        state["dispatch_round"] = state["dispatch_round"].at[0].set(-tau)
+        state["return_round"] = state["return_round"].at[0].set(0)
+        state["pending"] = {"x": state["pending"]["x"].at[0].set(8.0)}
+        state, stats = round_fn(state, jnp.asarray([1, 2], jnp.int32),
+                                jnp.zeros((2,)), jax.random.PRNGKey(0),
+                                jnp.int32(0))
+        np.testing.assert_allclose(float(stats["eta_scale"]), want_scale)
+        # anchor starts at 0 (bank mean of zeros): movement toward 8.0
+        np.testing.assert_allclose(float(state["anchor"]["x"]),
+                                   8.0 * want_scale)
+
+
+def test_delay_eta_changes_trajectory_on_quadratic():
+    """End-to-end: with real delays, delay-adaptive stepping produces a
+    different (finite) trajectory than the unscaled async run."""
+    outs = {}
+    for eta in (0.0, 2.0):
+        d = _quad_driver("adafbio", m=8)
+        d.sampler = UniformSampler(8, 3, jax.random.PRNGKey(3))
+        d.population = PopulationConfig(n=8, cohort=3, max_staleness=INF,
+                                        max_delay=3, delay_eta=eta)
+        outs[eta] = d.run(24, eval_every=24)
+        assert np.isfinite(outs[eta].grad_norm).all()
+    a = np.concatenate([np.asarray(l).ravel() for l in
+                        jax.tree.leaves(outs[0.0].final_avg_state)])
+    b = np.concatenate([np.asarray(l).ravel() for l in
+                        jax.tree.leaves(outs[2.0].final_avg_state)])
+    assert not np.allclose(a, b, atol=1e-6)
+
+
+# --------------------------------------------------- driver-level behaviour
+
+def test_async_driver_gates_and_reports_staleness():
+    """FedDriver async run: staleness histogram only holds accepted taus
+    <= max_staleness, the log accounts every arrival, and overlap shows up
+    as rounds with fewer dispatches than cohort slots."""
+    d = _quad_driver("adafbio", m=8)
+    d.population = PopulationConfig(n=8, cohort=3, max_staleness=2,
+                                    max_delay=3)
+    r = d.run(48, eval_every=12)
+    assert np.isfinite(r.grad_norm).all()
+    log = d.staleness_log
+    assert len(log) == 12
+    assert sum(s["dropped"] for s in log) > 0          # tau=3 arrivals exist
+    assert any(s["dispatched"] < 3 for s in log)       # overlapping cohorts
+    # histogram: accepted arrivals only, staleness within the bound
+    assert d.staleness_hist.sum() == sum(s["accepted"] for s in log)
+    assert d.staleness_hist.size <= 3                  # taus 1..2 only
+    assert d.staleness_hist[0] == 0                    # tau >= 1 always
+    # arrivals are conserved: accepted + dropped == arrived
+    assert all(s["accepted"] + s["dropped"] == s["arrived"] for s in log)
+
+
+def test_async_config_validation():
+    with pytest.raises(ValueError):
+        PopulationConfig(n=8, cohort=2, max_delay=3)       # async knob, off
+    with pytest.raises(ValueError):
+        PopulationConfig(n=8, cohort=2, delay_eta=0.5)     # async knob, off
+    with pytest.raises(ValueError):
+        PopulationConfig(n=8, cohort=2, max_staleness=-1.0)
+    with pytest.raises(ValueError):
+        PopulationConfig(n=8, cohort=2, max_staleness=1, max_delay=0)
+    with pytest.raises(ValueError):
+        PopulationConfig(n=8, cohort=2, sampler="trace-file")  # needs path
+    with pytest.raises(ValueError):
+        make_async_round(lambda *a: a, lambda *a: a, q=1, max_staleness=0)
+    assert PopulationConfig(n=8, cohort=2,
+                            max_staleness=INF).asynchronous
+    assert not PopulationConfig(n=8, cohort=2).asynchronous
+
+
+def test_scatter_where_masks_rows():
+    bank = {"x": jnp.zeros((4, 2))}
+    ids = jnp.asarray([2, 0], jnp.int32)
+    vals = {"x": jnp.ones((2, 2)) * 7.0}
+    out = scatter_where(bank, ids, vals, jnp.asarray([True, False]))
+    np.testing.assert_array_equal(np.asarray(out["x"][2]), 7.0)
+    np.testing.assert_array_equal(np.asarray(out["x"][0]), 0.0)

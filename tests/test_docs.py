@@ -1,0 +1,31 @@
+"""Docs-parity gate (scripts/check_docs.py) as a fast-tier test: the README
+CLI flag tables must match the argparse parsers in both directions, and the
+docs/ tree the README points into must exist."""
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def test_check_docs_passes():
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "scripts" / "check_docs.py")],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stderr or proc.stdout
+
+
+def test_docs_tree_exists_and_linked():
+    readme = (ROOT / "README.md").read_text()
+    for doc in ("docs/ARCHITECTURE.md", "docs/async.md"):
+        assert (ROOT / doc).is_file(), doc
+        assert doc in readme, f"README must link {doc}"
+
+
+def test_readme_flag_tables_cover_async_flags():
+    """The new async flags are the ones most likely to rot — pin them."""
+    readme = (ROOT / "README.md").read_text()
+    for flag in ("--max-staleness", "--max-delay", "--delay-eta",
+                 "--trace-file", "--population", "--cohort", "--sampler",
+                 "--engine"):
+        assert f"`{flag}`" in readme, flag

@@ -153,6 +153,81 @@ def test_trace_sampler_respects_availability():
     assert (np.asarray(s.up_mask(0)) != np.asarray(s.up_mask(2))).any()
 
 
+def test_trace_sampler_all_down_falls_back_to_uniform():
+    """Defined fallback (docs/async.md): when NO client is available the
+    draw is uniform without replacement over all N — never an
+    all-duplicates cohort of one arbitrary client."""
+    from repro.fed.sampling import draw_from_available
+    up = jnp.zeros((12,), bool)
+    seen = set()
+    for r in range(6):
+        ids = np.asarray(draw_from_available(up, jax.random.PRNGKey(2), r, 5))
+        assert len(set(ids.tolist())) == 5            # no duplicates
+        assert (ids >= 0).all() and (ids < 12).all()
+        seen.update(ids.tolist())
+    assert len(seen) > 5                              # draws vary per round
+    # a TraceFileSampler over an all-down trace hits the same fallback
+    from repro.fed.sampling import TraceFileSampler
+    tf = TraceFileSampler(12, 5, jax.random.PRNGKey(2),
+                          np.zeros((3, 12), bool))
+    ids = np.asarray(tf.cohort(0))
+    assert len(set(ids.tolist())) == 5
+
+
+def test_trace_file_save_load_roundtrip(tmp_path):
+    """save_trace -> load_trace is the identity on dense tables, absent
+    clients default to always-up, and malformed traces are rejected."""
+    from repro.fed.sampling import load_trace, save_trace
+    rng = np.random.default_rng(3)
+    table = rng.random((7, 9)) < 0.4
+    path = tmp_path / "trace.jsonl"
+    save_trace(str(path), table)
+    np.testing.assert_array_equal(load_trace(str(path), 9), table)
+    # absent clients are always available
+    path2 = tmp_path / "partial.jsonl"
+    path2.write_text('{"horizon": 4}\n{"client": 1, "up": [[1, 3]]}\n')
+    got = load_trace(str(path2), 3)
+    np.testing.assert_array_equal(got[:, 0], True)
+    np.testing.assert_array_equal(got[:, 1], [False, True, True, False])
+    np.testing.assert_array_equal(got[:, 2], True)
+    # an explicit horizon FIXES the length: intervals past it are clipped
+    path5 = tmp_path / "clip.jsonl"
+    path5.write_text('{"horizon": 4}\n{"client": 0, "up": [[0, 10]]}\n')
+    got = load_trace(str(path5), 2)
+    assert got.shape == (4, 2)
+    np.testing.assert_array_equal(got[:, 0], True)
+    # client ids outside the population and empty traces are errors
+    path3 = tmp_path / "bad.jsonl"
+    path3.write_text('{"client": 7, "up": [[0, 2]]}\n')
+    with pytest.raises(ValueError):
+        load_trace(str(path3), 3)
+    path4 = tmp_path / "empty.jsonl"
+    path4.write_text('{"client": 0, "up": []}\n')
+    with pytest.raises(ValueError):
+        load_trace(str(path4), 3)
+
+
+def test_trace_file_sampler_drives_population_run(tmp_path):
+    """End-to-end: a PopulationConfig(sampler='trace-file') run replays the
+    trace — cohorts only name available clients (when any are up)."""
+    from repro.fed.sampling import TraceFileSampler, save_trace
+    rng = np.random.default_rng(0)
+    table = rng.random((6, 4)) < 0.6
+    path = tmp_path / "t.jsonl"
+    save_trace(str(path), table)
+    d = _quad_driver("adafbio")
+    d.population = PopulationConfig(n=4, cohort=2, sampler="trace-file",
+                                    trace_file=str(path))
+    r = d.run(12, eval_every=12)
+    assert np.isfinite(r.grad_norm).all()
+    assert isinstance(d._run_sampler, TraceFileSampler)
+    for rd in range(6):
+        up = table[rd % 6]
+        ids = np.asarray(d._run_sampler.cohort(rd))
+        if up.sum() > 0:
+            assert up[ids].all()
+
+
 def test_make_sampler_validates():
     with pytest.raises(KeyError):
         make_sampler("nope", 8, 2, jax.random.PRNGKey(0))

@@ -114,3 +114,68 @@ def test_ring_buffer_holds_last_window(w_pow, frac, seed):
     for pos in range(s - w, s):
         np.testing.assert_allclose(np.asarray(buf[0, pos % w]),
                                    np.asarray(k_seq[0, pos]), atol=0)
+
+
+# ---------------------------------------------------------------- async layer
+
+@given(st.integers(0, 2 ** 30), st.integers(2, 8), st.integers(1, 6))
+def test_async_round_bitwise_stable_across_jit_retracing(seed, n, rounds):
+    """Bounded-staleness gating at max_staleness=inf with no overlap
+    (max_delay=1) must be bitwise-stable across jit re-tracing: two fresh
+    jit instances of the same async round program, fed the same inputs,
+    produce identical bits round after round."""
+    from repro.fed.population import init_async_state, make_async_round
+
+    def local(states, server, batch, key, ids):
+        kk = jax.random.fold_in(key, server["t"])
+        noise = jax.random.normal(kk, states["x"].shape)
+        return ({"x": states["x"] * 0.9 + 0.1 * noise},
+                {"t": server["t"] + 1})
+
+    def sync(server, avg):
+        return avg, server
+
+    def build():
+        # a FRESH trace each time: new closure, new jit cache entry
+        return jax.jit(make_async_round(local, sync, q=2,
+                                        max_staleness=float("inf"),
+                                        max_delay=1))
+
+    key = jax.random.PRNGKey(seed)
+    c = max(n // 2, 1)
+    init = init_async_state(
+        {"x": jax.random.normal(key, (n, 3))}, {"t": jnp.int32(0)}, n)
+    outs = []
+    for attempt in range(2):
+        jax.clear_caches()
+        fn = build()
+        state = jax.tree.map(lambda a: a, init)
+        for r in range(rounds):
+            ids = jax.random.permutation(
+                jax.random.fold_in(key, r), n)[:c].astype(jnp.int32)
+            state, stats = fn(state, ids, jnp.zeros((2, c)), key,
+                              jnp.int32(r))
+        outs.append((state, stats))
+    for a, b in zip(jax.tree.leaves(outs[0]), jax.tree.leaves(outs[1])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@given(st.integers(2, 24), st.integers(2, 10), st.floats(0.1, 1.0),
+       st.integers(0, 2 ** 30))
+def test_trace_file_replay_matches_in_memory_trace_sampler(n, period, duty,
+                                                          seed):
+    """Replaying a trace generated from the periodic schedule reproduces
+    the in-memory `trace` sampler's cohorts exactly — same up masks, same
+    shared draw — including rounds past the horizon (the trace cycles)."""
+    from repro.fed.sampling import AvailabilityTraceSampler, TraceFileSampler
+    key = jax.random.PRNGKey(seed)
+    c = max(n // 3, 1)
+    s = AvailabilityTraceSampler(n, c, key, period=period, duty=duty)
+    table = np.stack([np.asarray(s.up_mask(r)) for r in range(period)])
+    tf = TraceFileSampler(n, c, key, table)
+    for r in range(2 * period + 3):
+        np.testing.assert_array_equal(np.asarray(s.up_mask(r)),
+                                      np.asarray(tf.up_mask(r)))
+        np.testing.assert_array_equal(np.asarray(s.cohort(r)),
+                                      np.asarray(tf.cohort(r)),
+                                      err_msg=f"round {r}")
