@@ -158,7 +158,9 @@ def engine_wallclock(rounds=12):
 # ---------------------------------------------------------------- population
 
 def population_scale(n=256, c=16, rounds=8, sampler="uniform",
-                     max_staleness=0.0, max_delay=1, delay_eta=0.0):
+                     max_staleness=0.0, max_delay=1, delay_eta=0.0,
+                     delay_model="uniform", tiers=None, delay_mu=0.0,
+                     delay_sigma=0.5):
     """Cohort-sampled population vs the same-size plain run: population mode
     keeps N client states banked and computes only the C sampled clients per
     round (gather → fused scan round → scatter), so a round costs what a
@@ -181,6 +183,11 @@ def population_scale(n=256, c=16, rounds=8, sampler="uniform",
     def steady(d):
         timed = d.round_seconds[1:] or d.round_seconds
         return sum(timed) / max(len(timed), 1)
+
+    if max_staleness == 0 and (delay_model != "uniform" or tiers):
+        raise ValueError("--delay-model / --tiers are async knobs: set "
+                         "--max-staleness != 0 to enable the async "
+                         "population variant")
 
     stats = {}
 
@@ -215,21 +222,36 @@ def population_scale(n=256, c=16, rounds=8, sampler="uniform",
          f"x{stats['masked'] / max(stats['pop'], 1e-12):.2f}")
 
     if max_staleness != 0:
-        # asynchronous variant: overlapping cohorts with delayed arrivals,
-        # bounded-staleness gating, delay-adaptive server steps — reports
-        # the accepted-staleness histogram alongside the round cost
+        # asynchronous variant: overlapping cohorts with delayed arrivals
+        # (per-client delays from the pluggable delay model), bounded-
+        # staleness gating, delay-adaptive server steps — reports the
+        # accepted-staleness histogram alongside the round cost
+        from repro.fed.population import parse_tier_spec
+        pop_kw = {}
+        if tiers:
+            if delay_model != "tiers":
+                raise ValueError("--tiers only applies to --delay-model "
+                                 f"tiers (got --delay-model {delay_model})")
+            fr, td = parse_tier_spec(tiers)
+            pop_kw = {"tier_fracs": fr, "tier_delays": td}
         da = driver(n)
         da.population = PopulationConfig(
             n=n, cohort=c, sampler=sampler, max_staleness=max_staleness,
-            max_delay=max_delay, delay_eta=delay_eta)
+            max_delay=max_delay, delay_eta=delay_eta,
+            delay_model=delay_model, delay_mu=delay_mu,
+            delay_sigma=delay_sigma, **pop_kw)
         ra = da.run(steps, eval_every=steps - 1)
         hist = "|".join(f"{s}:{int(k)}" for s, k in
                         enumerate(da.staleness_hist) if k)
         dropped = sum(s["dropped"] for s in da.staleness_log)
         _row(f"population/async_n{n}_c{c}_d{max_delay}", steady(da) * 1e6,
              f"q={q};rounds={rounds};gnormT={ra.grad_norm[-1]:.3f};"
-             f"stale_hist={hist};dropped={dropped};"
-             f"max_staleness={max_staleness}")
+             f"delay_model={delay_model};stale_hist={hist};"
+             f"dropped={dropped};max_staleness={max_staleness}")
+        for ti, h in sorted(da.staleness_hist_by_tier.items()):
+            _row(f"population/async_tier{ti}", 0.0,
+                 "stale_hist=" + ("|".join(f"{s}:{int(k)}" for s, k in
+                                           enumerate(h) if k) or "-"))
 
 
 # ---------------------------------------------------------------- kernels
@@ -299,6 +321,18 @@ def main() -> None:
     ap.add_argument("--delay-eta", type=float, default=0.0,
                     help="population benchmark async variant: delay-"
                          "adaptive server step coefficient")
+    ap.add_argument("--delay-model", default="uniform",
+                    choices=["uniform", "tiers", "lognormal"],
+                    help="population benchmark async variant: per-client "
+                         "delay model (trace needs a file; use "
+                         "launch/train.py or benchmarks/sweep.py)")
+    ap.add_argument("--tiers", default=None,
+                    help="tiers delay model spec frac:lo:hi[,frac:lo:hi"
+                         "...], e.g. 0.2:1:1,0.6:2:4,0.2:4:8")
+    ap.add_argument("--delay-mu", type=float, default=0.0,
+                    help="lognormal delay model log-latency location")
+    ap.add_argument("--delay-sigma", type=float, default=0.5,
+                    help="lognormal delay model log-latency scale")
     benches = {
         "table1": table1_complexity,
         "fig_hyperrep": fig1_hyperrep,
@@ -315,7 +349,9 @@ def main() -> None:
     benches["population"] = lambda: population_scale(
         args.population, args.cohort, rounds=args.rounds,
         sampler=args.sampler, max_staleness=args.max_staleness,
-        max_delay=args.max_delay, delay_eta=args.delay_eta)
+        max_delay=args.max_delay, delay_eta=args.delay_eta,
+        delay_model=args.delay_model, tiers=args.tiers,
+        delay_mu=args.delay_mu, delay_sigma=args.delay_sigma)
     ENGINE = args.engine
     print("name,us_per_call,derived")
     if args.only:

@@ -1,0 +1,247 @@
+"""Convergence-vs-staleness sweep harness (``BENCH_async_sweep.json``).
+
+Runs AdaFBiO on the paper's two tasks — federated hyper-representation
+learning (Section 6.1) and federated data hyper-cleaning (Section 6.2) —
+over a grid of asynchronous-execution settings
+
+    max_staleness  x  delay model  x  delay_eta
+
+plus one synchronous baseline per task, and writes a machine-readable JSON
+record per cell: final task metric and grad norm, the paper's cost counters
+(#samples with the async masked-dispatch convention, #communication
+rounds), the accepted-staleness histogram (split by speed tier for the
+``tiers`` delay model), and wall-clock. The output is the repo's
+convergence-vs-staleness trajectory artifact: CI runs one tiny cell per PR
+and uploads it, and full sweeps accumulate how much staleness each task
+tolerates under each device-heterogeneity regime (docs/async.md).
+
+    PYTHONPATH=src:. python benchmarks/sweep.py --task hyperclean \
+        --steps 64 --population 8 --cohort 2 --staleness-grid 2,4,inf \
+        --delay-models uniform,tiers --delay-eta-grid 0,0.5
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+
+TASKS = ("hyperclean", "hyperrep")
+
+
+def build_task(name: str, n_clients: int):
+    """(FedConfig, FedDriver kwargs) for one paper task at population size
+    ``n_clients`` (sizes reduced from the paper's so a sweep cell costs
+    seconds on CPU)."""
+    if name == "hyperclean":
+        from repro.configs.paper_tasks import HyperCleanConfig
+        from repro.tasks.hyperclean import build_hyperclean
+        cfg = HyperCleanConfig(n_clients=n_clients, n_train_per_client=64,
+                               n_val_per_client=32)
+        t = build_hyperclean(cfg)
+        return cfg.fed, dict(problem=t["problem"], batch_fn=t["batch_fn"],
+                             init_xy=t["init_xy"], metric_fn=t["val_loss"],
+                             grad_norm_fn=t["true_grad_norm"])
+    if name == "hyperrep":
+        from repro.configs.paper_tasks import HyperRepConfig
+        from repro.tasks.hyperrep import build_hyperrep
+        cfg = HyperRepConfig(n_clients=n_clients)
+        t = build_hyperrep(cfg)
+        return cfg.fed, dict(problem=t["problem"], batch_fn=t["batch_fn"],
+                             init_xy=t["init_xy"], metric_fn=t["val_loss"])
+    raise KeyError(f"unknown task {name!r}; known: {TASKS}")
+
+
+def json_safe(x):
+    """inf -> "inf", nan -> null so the output stays spec-valid JSON
+    (json.dump would emit bare Infinity/NaN tokens, which strict RFC 8259
+    parsers reject)."""
+    if isinstance(x, float):
+        if math.isnan(x):
+            return None
+        if math.isinf(x):
+            return "inf"
+    return x
+
+
+def run_cell(task: str, pcfg, steps: int, seed: int) -> dict:
+    """One sweep cell: a full FedDriver run, returning the JSON record."""
+    from repro.tasks.driver import FedDriver
+    fed, kw = build_task(task, pcfg.n)
+    d = FedDriver(kw.pop("problem"), fed, pcfg.n, kw.pop("batch_fn"),
+                  kw.pop("init_xy"), algorithm="adafbio", **kw)
+    d.population = pcfg
+    t0 = time.time()
+    r = d.run(steps, key=jax.random.PRNGKey(seed),
+              eval_every=max(steps - 1, 1))
+    cell = {
+        "task": task,
+        "delay_model": pcfg.delay_model,
+        "max_staleness": json_safe(pcfg.max_staleness),
+        "max_delay": pcfg.max_delay,
+        "delay_eta": pcfg.delay_eta,
+        "sampler": pcfg.sampler,
+        "steps": int(r.steps[-1] + 1),
+        "metric0": json_safe(float(r.metric[0])),
+        "metricT": json_safe(float(r.metric[-1])),
+        # hyperrep has no exact-gradient oracle: NaN -> null
+        "grad_normT": json_safe(float(r.grad_norm[-1])),
+        "samples": int(r.samples[-1]),
+        "comms": int(r.comms[-1]),
+        "seconds": round(time.time() - t0, 3),
+    }
+    if pcfg.asynchronous:
+        log = d.staleness_log
+        cell.update({
+            "rounds": len(log),
+            "arrived": sum(s["arrived"] for s in log),
+            "accepted": sum(s["accepted"] for s in log),
+            "dropped": sum(s["dropped"] for s in log),
+            "dispatched": sum(s["dispatched"] for s in log),
+            "staleness_hist": d.staleness_hist.tolist(),
+        })
+        if d.staleness_hist_by_tier:
+            cell["staleness_hist_by_tier"] = {
+                str(ti): h.tolist()
+                for ti, h in sorted(d.staleness_hist_by_tier.items())}
+            cell["tier_fracs"] = list(pcfg.tier_fracs)
+            cell["tier_delays"] = [list(td) for td in pcfg.tier_delays]
+    return cell
+
+
+def parse_grid(spec: str, cast):
+    return tuple(cast(v) for v in spec.split(",") if v)
+
+
+def run_sweep(args) -> dict:
+    """The full grid: per task, one sync baseline + every
+    (max_staleness, delay_model, delay_eta) combination."""
+    from repro.configs.base import DELAY_MODELS, PopulationConfig
+    from repro.fed.population import parse_tier_spec
+    tasks = parse_grid(args.task, str)
+    staleness = parse_grid(args.staleness_grid, float)
+    models = parse_grid(args.delay_models, str)
+    etas = parse_grid(args.delay_eta_grid, float)
+    # fail fast on a bad grid — a mid-sweep ValueError would throw away
+    # every already-computed cell
+    for task in tasks:
+        if task not in TASKS:
+            raise SystemExit(f"unknown task {task!r}; known: {TASKS}")
+    for model in models:
+        if model not in DELAY_MODELS:
+            raise SystemExit(f"unknown delay model {model!r}; "
+                             f"known: {DELAY_MODELS}")
+    if "trace" in models and not args.trace_file:
+        raise SystemExit("delay model 'trace' needs --trace-file "
+                         "(format: docs/async.md)")
+    if args.sampler == "trace-file" and not args.trace_file:
+        raise SystemExit("sampler 'trace-file' needs --trace-file "
+                         "(format: docs/async.md)")
+    if "lognormal" in models and args.max_delay < 2:
+        raise SystemExit("lognormal delays are clipped to [1, max-delay]: "
+                         "set --max-delay >= 2")
+    if any(s <= 0 for s in staleness):
+        raise SystemExit("staleness grid values must be > 0 (a sync "
+                         "baseline cell is added automatically per task)")
+    tier_kw = {}
+    if args.tiers is not None:
+        fr, td = parse_tier_spec(args.tiers)
+        tier_kw = {"tier_fracs": fr, "tier_delays": td}
+    cells = []
+    total = len(tasks) * (1 + len(staleness) * len(models) * len(etas))
+    for task in tasks:
+        print(f"[{len(cells) + 1}/{total}] {task} sync baseline",
+              flush=True)
+        cells.append(run_cell(
+            task, PopulationConfig(n=args.population, cohort=args.cohort,
+                                   sampler=args.sampler,
+                                   trace_file=args.trace_file),
+            args.steps, args.seed))
+        for model in models:
+            for ms in staleness:
+                for eta in etas:
+                    print(f"[{len(cells) + 1}/{total}] {task} "
+                          f"delay_model={model} max_staleness={ms} "
+                          f"delay_eta={eta}", flush=True)
+                    pcfg = PopulationConfig(
+                        n=args.population, cohort=args.cohort,
+                        sampler=args.sampler, max_staleness=ms,
+                        max_delay=args.max_delay, delay_eta=eta,
+                        delay_model=model, delay_mu=args.delay_mu,
+                        delay_sigma=args.delay_sigma,
+                        trace_file=args.trace_file,
+                        **(tier_kw if model == "tiers" else {}))
+                    cells.append(run_cell(task, pcfg, args.steps,
+                                          args.seed))
+    return {
+        "bench": "async_sweep",
+        "meta": {
+            "tasks": list(tasks),
+            "steps": args.steps,
+            "population": args.population,
+            "cohort": args.cohort,
+            "sampler": args.sampler,
+            "staleness_grid": [json_safe(s) for s in staleness],
+            "delay_models": list(models),
+            "delay_eta_grid": list(etas),
+            "max_delay": args.max_delay,
+            "tiers": args.tiers,
+            "delay_mu": args.delay_mu,
+            "delay_sigma": args.delay_sigma,
+            "seed": args.seed,
+        },
+        "cells": cells,
+    }
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description="convergence-vs-staleness sweep over the paper's tasks")
+    ap.add_argument("--task", default="hyperclean,hyperrep",
+                    help="comma list of tasks: hyperclean, hyperrep")
+    ap.add_argument("--steps", type=int, default=64,
+                    help="local steps per cell (q=8 per task config)")
+    ap.add_argument("--population", type=int, default=8,
+                    help="population size N (= the task's client count)")
+    ap.add_argument("--cohort", type=int, default=2,
+                    help="per-round compute cohort size C")
+    ap.add_argument("--sampler", default="uniform",
+                    help="cohort sampler (repro.fed.sampling.SAMPLERS)")
+    ap.add_argument("--staleness-grid", default="2,4,inf",
+                    help="comma list of max_staleness values (inf = async "
+                         "with no gating)")
+    ap.add_argument("--delay-models", default="uniform,tiers",
+                    help="comma list of delay models: uniform, tiers, "
+                         "lognormal, trace")
+    ap.add_argument("--delay-eta-grid", default="0,0.5",
+                    help="comma list of delay-adaptive eta coefficients")
+    ap.add_argument("--max-delay", type=int, default=4,
+                    help="uniform/lognormal delay bound (rounds)")
+    ap.add_argument("--tiers", default=None,
+                    help="tiers delay model spec frac:lo:hi[,frac:lo:hi"
+                         "...], e.g. 0.2:1:1,0.6:2:4,0.2:4:8")
+    ap.add_argument("--delay-mu", type=float, default=0.0,
+                    help="lognormal delay model log-latency location")
+    ap.add_argument("--delay-sigma", type=float, default=0.5,
+                    help="lognormal delay model log-latency scale")
+    ap.add_argument("--trace-file", default=None,
+                    help="JSONL trace for the trace delay model / sampler")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="run key seed (one key per cell, shared)")
+    ap.add_argument("--out", default="BENCH_async_sweep.json",
+                    help="output JSON path")
+    args = ap.parse_args(argv)
+    out = run_sweep(args)
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1, allow_nan=False)
+        f.write("\n")
+    print(f"wrote {len(out['cells'])} cells to {args.out}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -27,6 +27,7 @@ TOOLS = {
     "train": ("src/repro/launch/train.py",
               "### `python -m repro.launch.train`"),
     "bench": ("benchmarks/run.py", "### `python benchmarks/run.py`"),
+    "sweep": ("benchmarks/sweep.py", "### `python benchmarks/sweep.py`"),
 }
 
 ARG_RE = re.compile(r"""add_argument\(\s*["'](--[a-z0-9-]+)["']""")

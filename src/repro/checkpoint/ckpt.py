@@ -42,14 +42,43 @@ def save_checkpoint(path, tree, step: int = 0) -> None:
 
 
 def load_checkpoint(path, like_tree) -> Tuple[Any, int]:
-    """Restore into the structure of ``like_tree`` (dtype/shape-checked)."""
+    """Restore into the structure of ``like_tree``.
+
+    Validates the leaf count, every leaf's stored shape against the target
+    structure, and the stored arrays against the checkpoint's own recorded
+    dtype/shape metadata (a mismatch means a corrupt or mixed-up
+    .npz/.json pair). All checks raise ``ValueError`` naming the offending
+    leaf path — not ``assert``, which vanishes under ``python -O``.
+    """
     data = np.load(str(path) + ".npz")
     meta = json.loads(Path(str(path) + ".json").read_text())
-    leaves, treedef = jax.tree.flatten(like_tree)
-    assert len(leaves) == meta["n_leaves"], (len(leaves), meta["n_leaves"])
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(like_tree)
+    if len(leaves) != meta["n_leaves"]:
+        raise ValueError(
+            f"checkpoint {path} holds {meta['n_leaves']} leaves but the "
+            f"target structure has {len(leaves)}")
     new = []
-    for i, ref in enumerate(leaves):
-        arr = data[f"leaf_{i}"]
-        assert tuple(arr.shape) == tuple(ref.shape), (i, arr.shape, ref.shape)
+    for i, (kp, ref) in enumerate(leaves):
+        name = f"leaf_{i}"
+        where = jax.tree_util.keystr(kp) or "<root>"
+        arr = data[name]
+        ref_shape = tuple(jnp.shape(ref))
+        if tuple(arr.shape) != ref_shape:
+            raise ValueError(
+                f"checkpoint {path} leaf {i} at {where}: stored shape "
+                f"{tuple(arr.shape)} != expected {ref_shape}")
+        want_dtype = meta.get("dtypes", {}).get(name)
+        if want_dtype is not None and str(arr.dtype) != want_dtype:
+            raise ValueError(
+                f"checkpoint {path} leaf {i} at {where}: stored dtype "
+                f"{arr.dtype} != recorded metadata {want_dtype} (corrupt "
+                f"or mismatched .npz/.json pair)")
+        want_shape = meta.get("shapes", {}).get(name)
+        if want_shape is not None and tuple(want_shape) != tuple(arr.shape):
+            raise ValueError(
+                f"checkpoint {path} leaf {i} at {where}: stored shape "
+                f"{tuple(arr.shape)} != recorded metadata "
+                f"{tuple(want_shape)} (corrupt or mismatched .npz/.json "
+                f"pair)")
         new.append(jnp.asarray(arr, dtype=ref.dtype))
     return jax.tree.unflatten(treedef, new), meta["step"]

@@ -170,6 +170,42 @@ class FedConfig:
     fused: str = "auto"
 
 
+DELAY_MODELS = ("uniform", "tiers", "lognormal", "trace")
+
+
+def validate_delay_model(name: str, max_delay: int, tier_fracs, tier_delays,
+                         delay_sigma: float) -> None:
+    """Shared delay-model validation — ``PopulationConfig`` and
+    ``repro.fed.population.make_delay_model`` both call this, so the two
+    construction paths can never drift apart. Raises ``ValueError``."""
+    if name not in DELAY_MODELS:
+        raise ValueError(f"delay_model must be one of {DELAY_MODELS}, "
+                         f"got {name!r}")
+    if max_delay < 1:
+        raise ValueError(f"max_delay must be >= 1 round, got {max_delay}")
+    if name == "tiers":
+        if len(tier_fracs) != len(tier_delays) or not tier_fracs:
+            raise ValueError(
+                f"tiers need matching non-empty tier_fracs/tier_delays, "
+                f"got {len(tier_fracs)} fracs, {len(tier_delays)} delay "
+                f"ranges")
+        if (any(f <= 0 for f in tier_fracs)
+                or abs(sum(tier_fracs) - 1.0) > 1e-6):
+            raise ValueError(f"tier_fracs must be positive and sum to 1, "
+                             f"got {tier_fracs}")
+        if any(not 1 <= lo <= hi for lo, hi in tier_delays):
+            raise ValueError(f"each tier delay range needs 1 <= lo <= hi "
+                             f"rounds, got {tier_delays}")
+    if name == "lognormal":
+        if delay_sigma < 0:
+            raise ValueError(f"delay_sigma must be >= 0, got {delay_sigma}")
+        if max_delay < 2:
+            raise ValueError(
+                "lognormal delays are clipped to [1, max_delay]: "
+                "max_delay=1 makes every delay 1 (the degenerate "
+                "no-heterogeneity case) — set max_delay >= 2")
+
+
 @dataclasses.dataclass(frozen=True)
 class PopulationConfig:
     """Client population ≫ per-round cohort (repro.fed.population).
@@ -204,6 +240,25 @@ class PopulationConfig:
     # the model movement scales by 1 / (1 + delay_eta * (mean_tau - 1));
     # 0 disables
     delay_eta: float = 0.0
+    # ---- heterogeneous per-client delay model (fed.population.DelayModel):
+    #   uniform   — delay ~ U[1, max_delay] per dispatch (the default;
+    #               bit-identical to the plain async path)
+    #   tiers     — each client permanently assigned to a speed tier
+    #               (tier_fracs) with per-tier delay ranges (tier_delays)
+    #   lognormal — permanent per-client latency exp(delay_mu +
+    #               delay_sigma * z_i) quantized to rounds, clipped to
+    #               [1, max_delay]
+    #   trace     — per-round delays replayed from trace_file's optional
+    #               per-client "delay" field (docs/async.md)
+    delay_model: str = "uniform"
+    # tiers model: population fraction per tier (largest-remainder split)
+    # and the [lo, hi] per-dispatch delay range of each tier, default
+    # 20/60/20 fast/medium/straggler
+    tier_fracs: Tuple[float, ...] = (0.2, 0.6, 0.2)
+    tier_delays: Tuple[Tuple[int, int], ...] = ((1, 1), (2, 4), (4, 8))
+    # lognormal model: log-latency location/scale (in rounds)
+    delay_mu: float = 0.0
+    delay_sigma: float = 0.5
 
     def __post_init__(self):
         if not 1 <= self.cohort <= self.n:
@@ -226,10 +281,19 @@ class PopulationConfig:
                              f"got {self.max_delay}")
         if self.delay_eta < 0:
             raise ValueError(f"delay_eta must be >= 0, got {self.delay_eta}")
+        validate_delay_model(self.delay_model, self.max_delay,
+                             self.tier_fracs, self.tier_delays,
+                             self.delay_sigma)
+        if self.delay_model == "trace" and not self.trace_file:
+            raise ValueError("delay_model='trace' replays the trace_file's "
+                             "per-client 'delay' field: set "
+                             "trace_file=<path> (format: docs/async.md)")
         if self.max_staleness == 0 and (self.max_delay > 1
-                                        or self.delay_eta > 0):
-            raise ValueError("max_delay > 1 / delay_eta > 0 are async knobs:"
-                             " set max_staleness > 0 (or float('inf')) to "
+                                        or self.delay_eta > 0
+                                        or self.delay_model != "uniform"):
+            raise ValueError("max_delay > 1 / delay_eta > 0 / a non-uniform"
+                             " delay_model are async knobs: set "
+                             "max_staleness > 0 (or float('inf')) to "
                              "enable asynchronous execution")
 
     @property

@@ -1,19 +1,25 @@
-from repro.fed.population import (ClientPopulation, init_async_state,
-                                  make_async_round, make_population_round,
-                                  staleness_weights)
+from repro.fed.population import (ClientPopulation, DELAY_MODELS,
+                                  DelayModel, delay_model_from_config,
+                                  init_async_state, make_async_round,
+                                  make_delay_model, make_population_round,
+                                  parse_tier_spec, staleness_weights,
+                                  tier_assignment)
 from repro.fed.round import make_round_step, stack_round_batches
 from repro.fed.runtime import (FederatedTrainer, build_lm_problem_ctx,
                                split_client_batch)
 from repro.fed.sampling import (AvailabilityTraceSampler, CohortSampler,
                                 RoundRobinSampler, SAMPLERS,
-                                TraceFileSampler, UniformSampler, load_trace,
-                                make_sampler, save_trace)
+                                TraceFileSampler, UniformSampler,
+                                load_delay_trace, load_trace, make_sampler,
+                                save_trace)
 from repro.fed.serve import build_serve_fns
 
 __all__ = ["FederatedTrainer", "build_lm_problem_ctx", "split_client_batch",
            "build_serve_fns", "make_round_step", "stack_round_batches",
            "ClientPopulation", "make_population_round", "staleness_weights",
            "make_async_round", "init_async_state",
+           "DelayModel", "DELAY_MODELS", "make_delay_model",
+           "delay_model_from_config", "parse_tier_spec", "tier_assignment",
            "CohortSampler", "UniformSampler", "RoundRobinSampler",
            "AvailabilityTraceSampler", "TraceFileSampler", "load_trace",
-           "save_trace", "SAMPLERS", "make_sampler"]
+           "load_delay_trace", "save_trace", "SAMPLERS", "make_sampler"]

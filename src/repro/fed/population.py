@@ -44,10 +44,13 @@ the sync path (tests/test_async.py). See docs/async.md for the semantics.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import DELAY_MODELS, validate_delay_model
 
 SYNC_MODES = ("broadcast", "participants")
 
@@ -225,6 +228,245 @@ def delay_schedule(key, round_id, n: int, max_delay: int) -> jax.Array:
     return jax.random.randint(k, (n,), 1, max_delay + 1).astype(jnp.int32)
 
 
+# ------------------------------------------------------------ delay models
+
+# salt streams for the heterogeneous delay draws — disjoint from the
+# local-step RNG folds and from the uniform delay_schedule salt (0x0DE1A7)
+_TIER_ASSIGN_SALT = 0x71E5A
+_TIER_DRAW_SALT = 0x71D0D
+_LOGNORMAL_SALT = 0x10C4A
+
+
+def _tier_sizes(n: int, fracs: Tuple[float, ...]) -> Tuple[int, ...]:
+    """Largest-remainder rounding of ``fracs * n`` (sums to exactly n)."""
+    raw = [f * n for f in fracs]
+    sizes = [int(x) for x in raw]
+    order = sorted(range(len(fracs)), key=lambda i: raw[i] - sizes[i],
+                   reverse=True)
+    for j in range(n - sum(sizes)):
+        sizes[order[j % len(sizes)]] += 1
+    return tuple(sizes)
+
+
+def tier_assignment(key, n: int, fracs: Tuple[float, ...]) -> jax.Array:
+    """Permanent speed tier of each client: int32 [n] of tier indices.
+
+    Tier SIZES are the largest-remainder rounding of ``fracs * n`` (exact,
+    so a 20/60/20 split of 10 clients is 2/6/2); WHICH clients land in
+    which tier is a key-seeded permutation — deterministic in (key, n,
+    fracs), drawn on its own salt stream so it never perturbs the cohort or
+    per-step sample draws."""
+    bounds = jnp.cumsum(jnp.asarray(_tier_sizes(n, fracs), jnp.int32))
+    slot_tier = jnp.searchsorted(bounds, jnp.arange(n),
+                                 side="right").astype(jnp.int32)
+    perm = jax.random.permutation(
+        jax.random.fold_in(key, _TIER_ASSIGN_SALT), n)
+    return jnp.zeros((n,), jnp.int32).at[perm].set(slot_tier)
+
+
+@dataclasses.dataclass(frozen=True)
+class DelayModel:
+    """Pluggable per-client dispatch-return delay model (device speeds).
+
+    ``schedule(key, round_id, n)`` yields the int32 [n] vector of return
+    delays (in rounds) a dispatch at ``round_id`` would observe; every model
+    is deterministic in (key, round_id, client id) and draws on salt
+    streams disjoint from the local-step RNG folds, so switching models
+    never perturbs the per-step sample draws. Models:
+
+      uniform    — delay ~ U[1, max_delay] per (client, round). The PR 3
+                   behaviour, bit-identical (same :func:`delay_schedule`
+                   draw), and the default.
+      tiers      — each client is PERMANENTLY assigned to a speed tier
+                   (:func:`tier_assignment` over ``tier_fracs``, e.g.
+                   20/60/20 fast/medium/straggler) and draws its delay
+                   uniformly from its tier's ``(lo, hi)`` range in
+                   ``tier_delays`` each round.
+      lognormal  — a continuous permanent per-client compute+comm latency
+                   ``exp(mu + sigma * z_i)``, ``z_i ~ N(0, 1)``, quantized
+                   to rounds (ceil) and clipped to [1, max_delay].
+      trace      — per-dispatch delays replayed from a recorded table
+                   (``table[round % horizon, client]``; parsed from the
+                   JSONL trace's optional per-client ``"delay"`` field by
+                   ``repro.fed.sampling.load_delay_trace``).
+
+    Use :func:`make_delay_model` to build one with validation.
+    """
+    name: str = "uniform"
+    max_delay: int = 1
+    tier_fracs: Tuple[float, ...] = (0.2, 0.6, 0.2)
+    tier_delays: Tuple[Tuple[int, int], ...] = ((1, 1), (2, 4), (4, 8))
+    mu: float = 0.0
+    sigma: float = 0.5
+    table: Optional[Any] = None     # np [horizon, n] int32 (trace model)
+    # resolve() caches of the permanent per-client quantities:
+    client_lo: Optional[Any] = None      # tiers: per-client delay lo bound
+    client_hi: Optional[Any] = None      # tiers: per-client delay hi bound
+    client_delay: Optional[Any] = None   # lognormal: whole delay vector
+
+    @property
+    def bound(self) -> int:
+        """The largest delay this model can emit (histogram sizing)."""
+        if self.name == "tiers":
+            return max(hi for _, hi in self.tier_delays)
+        if self.name == "trace":
+            return int(self.table.max())
+        return self.max_delay
+
+    def tiers(self, key, n: int) -> jax.Array:
+        """The permanent tier of each client (tiers model)."""
+        return tier_assignment(key, n, self.tier_fracs)
+
+    def resolve(self, key, n: int) -> "DelayModel":
+        """Precompute the PERMANENT per-client quantities for a known run
+        key — the tiers model's per-client [lo, hi] range, the lognormal
+        model's whole delay vector — so the jitted round program closes
+        over them as constants instead of rederiving them every round.
+        Draws are unchanged: ``resolve(key, n).schedule(key, r, n)`` ==
+        ``schedule(key, r, n)`` bitwise; only pass the same key the round
+        program will receive."""
+        if self.name == "tiers":
+            lo, hi = self._tier_ranges(key, n)
+            return dataclasses.replace(self, client_lo=lo, client_hi=hi)
+        if self.name == "lognormal":
+            return dataclasses.replace(
+                self, client_delay=self._lognormal(key, n))
+        return self
+
+    def _tier_ranges(self, key, n: int):
+        """Per-client permanent [lo, hi] delay range (tiers model)."""
+        tier = tier_assignment(key, n, self.tier_fracs)
+        lo = jnp.asarray([d[0] for d in self.tier_delays], jnp.int32)[tier]
+        hi = jnp.asarray([d[1] for d in self.tier_delays], jnp.int32)[tier]
+        return lo, hi
+
+    def _lognormal(self, key, n: int) -> jax.Array:
+        z = jax.random.normal(
+            jax.random.fold_in(key, _LOGNORMAL_SALT), (n,))
+        lat = jnp.exp(self.mu + self.sigma * z)
+        return jnp.clip(jnp.ceil(lat), 1, self.max_delay).astype(jnp.int32)
+
+    def schedule(self, key, round_id, n: int) -> jax.Array:
+        """int32 [n] return delays for a dispatch at ``round_id``."""
+        if self.name == "uniform":
+            return delay_schedule(key, round_id, n, self.max_delay)
+        if self.name == "tiers":
+            if self.client_lo is not None:
+                lo, hi = self.client_lo, self.client_hi
+            else:
+                lo, hi = self._tier_ranges(key, n)
+            k = jax.random.fold_in(
+                jax.random.fold_in(key, _TIER_DRAW_SALT), round_id)
+            u = jax.random.uniform(k, (n,))
+            return lo + (u * (hi - lo + 1).astype(jnp.float32)).astype(
+                jnp.int32)
+        if self.name == "lognormal":
+            if self.client_delay is not None:
+                return self.client_delay
+            return self._lognormal(key, n)
+        if self.name == "trace":
+            if self.table.shape[1] != n:
+                raise ValueError(
+                    f"trace delay table covers {self.table.shape[1]} "
+                    f"clients but the population has {n} (jax gather "
+                    f"would silently clip the out-of-range ids)")
+            tab = jnp.asarray(self.table, jnp.int32)
+            return tab[round_id % tab.shape[0]]
+        raise ValueError(f"unknown delay model {self.name!r}; "
+                         f"known: {DELAY_MODELS}")
+
+
+def accum_staleness_hist(hist, taus) -> "np.ndarray":
+    """Accumulate accepted-staleness values into a growing int64 histogram
+    (index = staleness in rounds). Host-side numpy — the one accumulation
+    shared by ``FedDriver`` and the launchers, so overall and per-tier
+    histograms can never drift in semantics. Returns the (possibly
+    reallocated) histogram; start from ``np.zeros(0, np.int64)``."""
+    h = np.bincount(np.asarray(taus)).astype(np.int64)
+    if h.size > hist.size:
+        h[:hist.size] += hist
+        return h
+    hist = hist.copy()
+    hist[:h.size] += h
+    return hist
+
+
+def accum_tier_hists(hist_by_tier: dict, stale, tier_of,
+                     n_tiers: int) -> dict:
+    """Split one round's staleness vector (int32 [N], accepted tau or -1)
+    by permanent speed tier and accumulate each slice into
+    ``hist_by_tier[tier]`` via :func:`accum_staleness_hist`. The one
+    tier-bucketing implementation shared by ``FedDriver`` and the
+    launchers. Returns the updated dict."""
+    for ti in range(n_tiers):
+        acc = stale[(stale >= 0) & (tier_of == ti)]
+        if acc.size:
+            hist_by_tier[ti] = accum_staleness_hist(
+                hist_by_tier.get(ti, np.zeros(0, np.int64)), acc)
+    return hist_by_tier
+
+
+def parse_tier_spec(spec: str):
+    """Parse a ``frac:lo:hi[,frac:lo:hi...]`` CLI tier spec, e.g.
+    ``0.2:1:1,0.6:2:4,0.2:4:8`` → ``((0.2, 0.6, 0.2),
+    ((1, 1), (2, 4), (4, 8)))``."""
+    fracs, delays = [], []
+    for part in spec.split(","):
+        fields = part.split(":")
+        if len(fields) != 3:
+            raise ValueError(f"bad tier spec segment {part!r} (want "
+                             f"frac:lo:hi, e.g. 0.2:1:1,0.6:2:4,0.2:4:8)")
+        f, lo, hi = fields
+        fracs.append(float(f))
+        delays.append((int(lo), int(hi)))
+    return tuple(fracs), tuple(delays)
+
+
+def make_delay_model(name: str = "uniform", max_delay: int = 1, *,
+                     tier_fracs=None, tier_delays=None, mu: float = 0.0,
+                     sigma: float = 0.5, table=None) -> DelayModel:
+    """Build a validated :class:`DelayModel` (see its docstring for the
+    model semantics); ``tier_fracs``/``tier_delays`` default to the 20/60/20
+    fast/medium/straggler split with ranges (1,1)/(2,4)/(4,8)."""
+    fr = tuple(tier_fracs) if tier_fracs is not None else (0.2, 0.6, 0.2)
+    td = (tuple((int(lo), int(hi)) for lo, hi in tier_delays)
+          if tier_delays is not None else ((1, 1), (2, 4), (4, 8)))
+    validate_delay_model(name, max_delay, fr, td, sigma)
+    kw = {}
+    if name == "tiers":
+        kw = {"tier_fracs": fr, "tier_delays": td}
+    elif name == "lognormal":
+        kw = {"mu": float(mu), "sigma": float(sigma)}
+    elif name == "trace":
+        if table is None:
+            raise ValueError("delay model 'trace' needs a [horizon, n] "
+                             "delay table (repro.fed.sampling."
+                             "load_delay_trace over the JSONL trace's "
+                             "per-client 'delay' field, docs/async.md)")
+        if getattr(table, "ndim", 0) != 2 or table.size == 0:
+            raise ValueError(f"delay table must be a non-empty "
+                             f"[horizon, n] array, got shape "
+                             f"{getattr(table, 'shape', None)}")
+        if int(table.min()) < 1:
+            raise ValueError(f"trace delays must be >= 1 round, "
+                             f"min is {int(table.min())}")
+        kw = {"table": table}
+    return DelayModel(name=name, max_delay=max_delay, **kw)
+
+
+def delay_model_from_config(pcfg) -> DelayModel:
+    """The :class:`DelayModel` a ``PopulationConfig`` describes (loads the
+    per-client delay table from ``pcfg.trace_file`` for the trace model)."""
+    table = None
+    if pcfg.delay_model == "trace":
+        from repro.fed.sampling import load_delay_trace
+        table = load_delay_trace(pcfg.trace_file, pcfg.n)
+    return make_delay_model(
+        pcfg.delay_model, pcfg.max_delay, tier_fracs=pcfg.tier_fracs,
+        tier_delays=pcfg.tier_delays, mu=pcfg.delay_mu,
+        sigma=pcfg.delay_sigma, table=table)
+
+
 def init_async_state(bank_states, server, n: int) -> dict:
     """Initial async-execution state around a freshly initialized bank.
 
@@ -261,7 +503,8 @@ def make_async_round(local_step_ids: Callable, sync_update: Callable,
                      staleness_decay: float = 0.0,
                      max_staleness: float = float("inf"),
                      max_delay: int = 1,
-                     delay_eta: float = 0.0) -> Callable:
+                     delay_eta: float = 0.0,
+                     delay: Optional[DelayModel] = None) -> Callable:
     """Build the asynchronous round program: arrivals → gate → server step →
     dispatch.
 
@@ -288,8 +531,10 @@ def make_async_round(local_step_ids: Callable, sync_update: Callable,
          Clients still in flight are ineligible (their row of the cohort
          compute is masked out — overlapping cohorts); eligible clients
          store the computed update in the pending buffer with a return round
-         ``round_id + delay``, ``delay`` ~ U[1, max_delay]
-         (:func:`delay_schedule`).
+         ``round_id + delay``, where ``delay`` comes from the pluggable
+         :class:`DelayModel` (default: the uniform U[1, max_delay]
+         :func:`delay_schedule` — heterogeneous per-client models via the
+         ``delay`` argument).
 
     With ``max_delay=1``, ``max_staleness=inf``, ``delay_eta=0`` every
     update returns next round with staleness 1 and the program reproduces
@@ -298,7 +543,9 @@ def make_async_round(local_step_ids: Callable, sync_update: Callable,
     Returns ``round_fn(state, ids, batches_q, key, round_id) -> (state,
     stats)`` over the :func:`init_async_state` dict; ``stats`` carries
     ``arrived/accepted/dropped`` counts, ``mean_staleness``, ``eta_scale``,
-    ``dispatched``, and the per-client ``staleness`` vector (int32 [N], the
+    ``dispatched`` (the number of UNIQUE clients that started work this
+    round — a duplicate cohort id occupies two slots but dispatches one
+    client), and the per-client ``staleness`` vector (int32 [N], the
     accepted arrival's tau, -1 elsewhere) for histogramming.
     """
     if sync_mode not in SYNC_MODES:
@@ -312,6 +559,8 @@ def make_async_round(local_step_ids: Callable, sync_update: Callable,
         raise ValueError("async rounds need max_staleness > 0 (use the "
                          "synchronous make_population_round for the "
                          "max_staleness=0 setting)")
+    dm = delay if delay is not None else make_delay_model("uniform",
+                                                          max_delay)
 
     def round_fn(state, ids, batches_q, key, round_id):
         bank, pending = state["bank"], state["pending"]
@@ -366,15 +615,19 @@ def make_async_round(local_step_ids: Callable, sync_update: Callable,
             return (st, srv), None
 
         (cur, server), _ = jax.lax.scan(body, (cur, server), batches_q)
-        delay = delay_schedule(key, round_id, n, max_delay)[ids]
+        delays = dm.schedule(key, round_id, n)[ids]
         pending = scatter_where(pending, ids, cur, eligible)
         # the bank row mirrors the client's own latest local state (same
         # meaning as the sync path's post-round scatter); the server never
         # reads it before the arrival lands from `pending`
         bank = scatter_where(bank, ids, cur, eligible)
-        in_flight = in_flight.at[ids].set(True)   # eligible start, rest stay
+        new_flight = in_flight.at[ids].set(True)  # eligible start, rest stay
+        # the UNIQUE clients that started work: duplicate cohort ids (trace
+        # shortfall cycling) occupy two slots but dispatch one client
+        started = new_flight & ~in_flight
+        in_flight = new_flight
         disp = disp.at[ids].set(jnp.where(eligible, round_id, disp[ids]))
-        ret = ret.at[ids].set(jnp.where(eligible, round_id + delay,
+        ret = ret.at[ids].set(jnp.where(eligible, round_id + delays,
                                         ret[ids]))
 
         state = {"bank": bank, "pending": pending, "last_sync": last_sync,
@@ -385,7 +638,7 @@ def make_async_round(local_step_ids: Callable, sync_update: Callable,
                  "dropped": (arrived.sum() - n_acc).astype(jnp.int32),
                  "mean_staleness": mean_tau,
                  "eta_scale": scale.astype(jnp.float32),
-                 "dispatched": eligible.sum().astype(jnp.int32),
+                 "dispatched": started.sum().astype(jnp.int32),
                  "staleness": jnp.where(accept, tau.astype(jnp.int32), -1)}
         return state, stats
 

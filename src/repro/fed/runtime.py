@@ -295,11 +295,18 @@ class FederatedTrainer:
 
     def init_population_states(self, key, batch, n: int):
         """Bank init: like ``init_states`` but over a population of ``n``
-        clients (``batch`` carries a leading n axis). Returns
-        ``(bank_states, last_sync, server)``."""
+        clients (``batch`` carries a leading n axis). The shared (x0, y0)
+        derive from ``key`` (runs with different keys start from different
+        parameters — the seed behaviour hard-coded PRNGKey(0) and made
+        every run's init identical); the per-client estimator keys are the
+        n-way split of the same key. Returns ``(bank_states, last_sync,
+        server)``."""
         keys = jax.random.split(key, n)
+        # one shared init, hoisted out of the client vmap; the salt keeps
+        # the parameter draw off the per-client estimator-key stream
+        params = init_params(self.specs, jax.random.fold_in(key, 0x9142A),
+                             self.cfg.dtype)
         def one(k, b):
-            params = init_params(self.specs, jax.random.PRNGKey(0), self.cfg.dtype)
             batches = split_client_batch(self.cfg, b)
             return self.alg.init_client_state(params["x"], params["y"], batches, k)
         bank = self._vmap_clients(one)(keys, batch)
@@ -344,13 +351,16 @@ class FederatedTrainer:
                                   staleness_decay: float = 0.0,
                                   max_staleness: float = float("inf"),
                                   max_delay: int = 1,
-                                  delay_eta: float = 0.0) -> Callable:
+                                  delay_eta: float = 0.0,
+                                  delay_model=None) -> Callable:
         """Asynchronous round over an n-client bank: arrivals →
         bounded-staleness gate → delay-adaptive server step → overlapping-
         cohort dispatch, one jitted program per round
         (``repro.fed.population.make_async_round``; semantics in
-        docs/async.md). ``round(state, ids, batches_q, key, round_id) ->
-        (state, stats)``."""
+        docs/async.md). ``delay_model`` is an optional
+        ``repro.fed.population.DelayModel`` (heterogeneous per-client
+        delays; None = uniform U[1, max_delay]). ``round(state, ids,
+        batches_q, key, round_id) -> (state, stats)``."""
         from repro.fed.population import make_async_round
 
         def sync_update(server, avg):
@@ -360,7 +370,7 @@ class FederatedTrainer:
             q if q is not None else self.fed.q,
             sync_mode=sync_mode, staleness_decay=staleness_decay,
             max_staleness=max_staleness, max_delay=max_delay,
-            delay_eta=delay_eta)
+            delay_eta=delay_eta, delay=delay_model)
 
     def population_state_shardings(self, n: int):
         """Bank shardings: the population axis takes the client mesh axes

@@ -141,9 +141,12 @@ def load_trace(path: str, n: int) -> np.ndarray:
     One line per client: ``{"client": i, "up": [[start, end], ...]}`` —
     client ``i`` is available during the half-open round intervals
     ``[start, end)``. An optional ``{"horizon": T}`` line fixes the table
-    length; otherwise the horizon is the max interval end. Clients absent
-    from the file are always available (an un-instrumented device is assumed
-    up). Format spec + worked example: docs/async.md.
+    length; otherwise the horizon is the max interval end, stretched to
+    the longest per-client ``"delay"`` list so availability and the
+    :func:`load_delay_trace` delay table always cycle with the SAME
+    period. Clients absent from the file — or listed with a ``"delay"``
+    but no ``"up"`` key — are always available (an un-instrumented device
+    is assumed up). Format spec + worked example: docs/async.md.
     """
     explicit = None
     derived = 0
@@ -164,19 +167,24 @@ def load_trace(path: str, n: int) -> np.ndarray:
             if not 0 <= i < n:
                 raise ValueError(f"trace client id {i} outside population "
                                  f"[0, {n})")
-            ivs = [(int(a), int(b)) for a, b in rec["up"]]
-            for a, b in ivs:
-                if a < 0 or b < a:
-                    raise ValueError(f"bad up interval [{a}, {b}) for "
-                                     f"client {i}")
-                derived = max(derived, b)
-            intervals[i] = intervals.get(i, []) + ivs
+            if "up" in rec:
+                ivs = [(int(a), int(b)) for a, b in rec["up"]]
+                for a, b in ivs:
+                    if a < 0 or b < a:
+                        raise ValueError(f"bad up interval [{a}, {b}) for "
+                                         f"client {i}")
+                    derived = max(derived, b)
+                intervals[i] = intervals.get(i, []) + ivs
+            if "delay" in rec:
+                d = rec["delay"]
+                derived = max(derived,
+                              len(d) if isinstance(d, list) else 1)
     # an explicit horizon line FIXES the trace length (docs/async.md);
     # intervals past it are clipped. Without one, the max interval end wins.
     horizon = explicit if explicit is not None else derived
     if horizon == 0:
-        raise ValueError(f"trace {path!r} has no up intervals and no "
-                         f"horizon line")
+        raise ValueError(f"trace {path!r} has no up intervals, no delay "
+                         f"lists, and no horizon line")
     table = np.zeros((horizon, n), bool)
     table[:, [i for i in range(n) if i not in intervals]] = True
     for i, ivs in intervals.items():
@@ -185,11 +193,22 @@ def load_trace(path: str, n: int) -> np.ndarray:
     return table
 
 
-def save_trace(path: str, table: np.ndarray) -> None:
+def save_trace(path: str, table: np.ndarray, delays=None) -> None:
     """Write a dense [horizon, n] availability table as the JSONL trace
-    format :func:`load_trace` reads (maximal up intervals per client)."""
+    format :func:`load_trace` reads (maximal up intervals per client).
+
+    ``delays``, if given, adds the optional per-client ``"delay"`` field
+    :func:`load_delay_trace` reads: an [n] vector writes one constant delay
+    per client, a [horizon, n] table writes the per-round delay list
+    (constant columns collapse to the scalar form)."""
     table = np.asarray(table, bool)
     horizon, n = table.shape
+    if delays is not None:
+        delays = np.asarray(delays, np.int64)
+        if delays.shape not in ((n,), (horizon, n)):
+            raise ValueError(f"delays must be [n] or [horizon, n] for a "
+                             f"[{horizon}, {n}] table, got "
+                             f"{delays.shape}")
     with open(path, "w") as f:
         f.write(json.dumps({"horizon": int(horizon)}) + "\n")
         for i in range(n):
@@ -198,7 +217,77 @@ def save_trace(path: str, table: np.ndarray) -> None:
                 ([False], col, [False]))))
             ivs = [[int(a), int(b)] for a, b in
                    zip(edges[::2], edges[1::2])]
-            f.write(json.dumps({"client": i, "up": ivs}) + "\n")
+            rec = {"client": i, "up": ivs}
+            if delays is not None:
+                d = delays[i] if delays.ndim == 1 else delays[:, i]
+                if np.ndim(d) == 0 or (np.asarray(d) == np.asarray(d).flat[0]).all():
+                    rec["delay"] = int(np.asarray(d).flat[0])
+                else:
+                    rec["delay"] = [int(v) for v in d]
+            f.write(json.dumps(rec) + "\n")
+
+
+def load_delay_trace(path: str, n: int) -> np.ndarray:
+    """Parse the JSONL trace's optional per-client ``"delay"`` field into a
+    dense [horizon, n] int32 per-round delay table (the ``trace`` delay
+    model of ``repro.fed.population.DelayModel``).
+
+    A client line may carry ``"delay": d`` (every dispatch of client ``i``
+    returns after ``d`` rounds) or ``"delay": [d0, d1, ...]`` (the list is
+    tiled across the trace horizon — a dispatch at round ``r < horizon``
+    takes ``d[r % len(d)]`` rounds; past the horizon the WHOLE trace
+    cycles, row ``r % horizon``, exactly like the availability table).
+    Clients without the field — or absent from the file — default to
+    delay 1: an un-instrumented device is assumed fast, mirroring
+    :func:`load_trace`'s always-available default. Delays must be >= 1
+    round. The horizon follows :func:`load_trace`'s rules (explicit
+    ``horizon`` line, else the max up-interval end), additionally
+    stretched to the longest delay list; a delay list LONGER than an
+    explicit horizon is an error (silently truncating recorded delays
+    would drop e.g. a straggler's slow rounds). A trace with neither
+    intervals nor a horizon line gets horizon 1. Format spec + worked
+    example: docs/async.md.
+    """
+    explicit = None
+    derived = 0
+    delays = {}
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            rec = json.loads(line)
+            if "horizon" in rec:
+                explicit = int(rec["horizon"])
+                if explicit < 1:
+                    raise ValueError(f"horizon must be >= 1 round, "
+                                     f"got {explicit}")
+                continue
+            i = int(rec["client"])
+            if not 0 <= i < n:
+                raise ValueError(f"trace client id {i} outside population "
+                                 f"[0, {n})")
+            for a, b in rec.get("up", []):
+                derived = max(derived, int(b))
+            if "delay" in rec:
+                d = rec["delay"]
+                seq = [int(d)] if np.ndim(d) == 0 else [int(v) for v in d]
+                if any(v < 1 for v in seq):
+                    raise ValueError(f"client {i} delays must be >= 1 "
+                                     f"round, got {seq}")
+                if seq:
+                    delays[i] = seq
+                    derived = max(derived, len(seq))
+    horizon = explicit if explicit is not None else max(derived, 1)
+    table = np.ones((horizon, n), np.int32)
+    for i, seq in delays.items():
+        if len(seq) > horizon:
+            raise ValueError(
+                f"client {i} has {len(seq)} recorded delays but the trace "
+                f"horizon is {horizon}: raise the horizon line (truncating"
+                f" would silently drop recorded delays)")
+        table[:, i] = np.resize(np.asarray(seq, np.int32), horizon)
+    return table
 
 
 @dataclasses.dataclass(frozen=True)

@@ -21,9 +21,12 @@ from repro.configs import FedConfig, get_arch, reduced
 from repro.configs.base import ShapeConfig
 from repro.data.synthetic import (FederatedLMData, make_client_batch,
                                   make_cohort_batch)
+from repro.fed.population import (DELAY_MODELS, accum_staleness_hist,
+                                  accum_tier_hists, make_delay_model,
+                                  parse_tier_spec)
 from repro.fed.round import ENGINES
 from repro.fed.runtime import FederatedTrainer, client_batch_specs
-from repro.fed.sampling import SAMPLERS, make_sampler
+from repro.fed.sampling import SAMPLERS, load_delay_trace, make_sampler
 from repro.core.tree_util import tree_stack
 from repro.launch.mesh import make_local_mesh, make_production_mesh
 
@@ -68,6 +71,22 @@ def main():
     ap.add_argument("--delay-eta", type=float, default=0.0,
                     help="delay-adaptive server step: scale model movement "
                          "by 1/(1 + delay_eta*(mean_staleness - 1))")
+    ap.add_argument("--delay-model", default="uniform",
+                    choices=list(DELAY_MODELS),
+                    help="async per-client delay model: uniform U[1, "
+                         "max-delay]; tiers (permanent speed tiers, see "
+                         "--tiers); lognormal (permanent per-client latency"
+                         " quantized to rounds); trace (replay the "
+                         "--trace-file's per-client 'delay' field)")
+    ap.add_argument("--tiers", default=None,
+                    help="tiers delay model spec frac:lo:hi[,frac:lo:hi"
+                         "...], e.g. 0.2:1:1,0.6:2:4,0.2:4:8 (the default "
+                         "20/60/20 fast/medium/straggler split)")
+    ap.add_argument("--delay-mu", type=float, default=0.0,
+                    help="lognormal delay model: log-latency location "
+                         "(rounds)")
+    ap.add_argument("--delay-sigma", type=float, default=0.5,
+                    help="lognormal delay model: log-latency scale")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -158,6 +177,10 @@ def run_population(args, cfg, fed, shape, tr: FederatedTrainer, key):
         run_population_async(args, cfg, fed, tr, key, data, specs_c,
                              specs_n, sampler)
         return
+    if args.delay_model != "uniform" or args.tiers is not None:
+        raise SystemExit("--delay-model / --tiers are async knobs: set "
+                         "--max-staleness != 0 to enable asynchronous "
+                         "execution")
     bank, last_sync, server = tr.init_population_states(
         key, make_client_batch(data, cfg, specs_n, 0), n)
     start = 0
@@ -202,13 +225,40 @@ def run_population(args, cfg, fed, shape, tr: FederatedTrainer, key):
         print(f"saved population checkpoint to {args.ckpt}")
 
 
+def make_cli_delay_model(args, n: int):
+    """The DelayModel the CLI delay flags describe (loads the per-client
+    delay table from --trace-file for --delay-model trace)."""
+    tier_fracs = tier_delays = None
+    if args.tiers is not None:
+        if args.delay_model != "tiers":
+            raise SystemExit("--tiers only applies to --delay-model tiers "
+                             f"(got --delay-model {args.delay_model})")
+        tier_fracs, tier_delays = parse_tier_spec(args.tiers)
+    table = None
+    if args.delay_model == "trace":
+        if not args.trace_file:
+            raise SystemExit("--delay-model trace replays the trace file's "
+                             "per-client 'delay' field: pass --trace-file "
+                             "(format: docs/async.md)")
+        table = load_delay_trace(args.trace_file, n)
+    return make_delay_model(args.delay_model, args.max_delay,
+                            tier_fracs=tier_fracs, tier_delays=tier_delays,
+                            mu=args.delay_mu, sigma=args.delay_sigma,
+                            table=table)
+
+
 def run_population_async(args, cfg, fed, tr: FederatedTrainer, key, data,
                          specs_c, specs_n, sampler):
     """Asynchronous population mode: overlapping cohorts with delayed
-    arrivals, server-side bounded-staleness gating, delay-adaptive server
-    steps (docs/async.md). Prints per-eval arrival/staleness stats and a
-    final accepted-staleness histogram."""
+    arrivals (per-client delays from the pluggable --delay-model),
+    server-side bounded-staleness gating, delay-adaptive server steps
+    (docs/async.md). Prints per-eval arrival/staleness stats and a final
+    accepted-staleness histogram (split by speed tier for --delay-model
+    tiers)."""
     n, c = args.population, args.cohort
+    # resolve() bakes the permanent per-client delay quantities into the
+    # round program as constants (the same run key is passed every round)
+    dm = make_cli_delay_model(args, n).resolve(key, n)
     state = tr.init_async_population_states(
         key, make_client_batch(data, cfg, specs_n, 0), n)
     start = 0
@@ -217,7 +267,7 @@ def run_population_async(args, cfg, fed, tr: FederatedTrainer, key, data,
         print(f"resumed async population run from step {start}")
     round_fn = jax.jit(tr.async_population_round_fn(
         n, max_staleness=args.max_staleness, max_delay=args.max_delay,
-        delay_eta=args.delay_eta))
+        delay_eta=args.delay_eta, delay_model=dm))
     ev = jax.jit(tr.eval_fn())
 
     start_round = start // fed.q
@@ -228,9 +278,13 @@ def run_population_async(args, cfg, fed, tr: FederatedTrainer, key, data,
               f"(use --steps divisible by q={fed.q})", flush=True)
     print(f"async population mode: N={n} clients, C={c} cohort/round "
           f"({args.sampler} sampler), max_staleness={args.max_staleness}, "
-          f"max_delay={args.max_delay}, delay_eta={args.delay_eta}, "
+          f"delay_model={args.delay_model} (bound {dm.bound}), "
+          f"delay_eta={args.delay_eta}, "
           f"rounds {start_round}..{n_rounds - 1} of q={fed.q}", flush=True)
-    hist = np.zeros(args.max_delay + 1, np.int64)
+    tier_of = (np.asarray(dm.tiers(key, n))
+               if args.delay_model == "tiers" else None)
+    hist = np.zeros(0, np.int64)
+    hist_by_tier = {}
     t0 = time.time()
     for r in range(start_round, n_rounds):
         t = r * fed.q
@@ -244,7 +298,11 @@ def run_population_async(args, cfg, fed, tr: FederatedTrainer, key, data,
         dt = time.time() - r0
         stale = np.asarray(stats["staleness"])
         acc = stale[stale >= 0]
-        np.add.at(hist, np.minimum(acc, hist.size - 1), 1)
+        if acc.size:
+            hist = accum_staleness_hist(hist, acc)
+        if tier_of is not None:
+            accum_tier_hists(hist_by_tier, stale, tier_of,
+                             len(dm.tier_fracs))
         if r % max(args.eval_every // fed.q, 1) == 0 or r == n_rounds - 1:
             last = jax.tree.map(lambda x: x[-1], batch_q)
             loss = float(ev(state["bank"], last))
@@ -258,6 +316,15 @@ def run_population_async(args, cfg, fed, tr: FederatedTrainer, key, data,
     print("accepted-staleness histogram (rounds): "
           + " ".join(f"{s}:{int(k)}" for s, k in enumerate(hist) if k),
           flush=True)
+    if tier_of is not None:
+        for ti in range(len(dm.tier_fracs)):
+            lo, hi = dm.tier_delays[ti]
+            print(f"  tier {ti} (delay {lo}..{hi}, "
+                  f"{int((tier_of == ti).sum())} clients): "
+                  + (" ".join(f"{s}:{int(k)}" for s, k in
+                              enumerate(hist_by_tier.get(ti, ())) if k)
+                     or "-"),
+                  flush=True)
     if args.ckpt:
         save_checkpoint(args.ckpt, state, n_rounds * fed.q)
         print(f"saved async population checkpoint to {args.ckpt}")

@@ -28,8 +28,10 @@ Three participation regimes:
     in ``FedDriver.staleness_log`` / ``staleness_hist``.
 
 Tracks the paper's cost metrics exactly: #samples consumed (q(K+2) at init,
-K+2 per local step) and #communication rounds (1 per sync; async counts the
-rounds in which an aggregation actually happened)."""
+K+2 per local step; async scales each round's increment by the fraction of
+cohort slots that actually dispatched — masked in-flight slots discard
+their compute and must not count) and #communication rounds (1 per sync;
+async counts the rounds in which an aggregation actually happened)."""
 from __future__ import annotations
 
 import dataclasses
@@ -447,22 +449,40 @@ class FedDriver:
         (``repro.fed.population.make_async_round``; semantics in
         docs/async.md). Per-round arrival stats land in
         ``self.staleness_log`` and the accepted-staleness histogram in
-        ``self.staleness_hist`` (index = staleness in rounds)."""
+        ``self.staleness_hist`` (index = staleness in rounds); with the
+        ``tiers`` delay model, ``self.staleness_hist_by_tier`` splits the
+        same histogram by the client's permanent speed tier.
+
+        Sample accounting: a cohort slot whose client is still in flight is
+        masked out and its compute discarded, so the per-round sample
+        increment scales by ``dispatched / cohort`` — the fraction of
+        UNIQUE cohort clients that actually started work (docs/async.md).
+        """
         import numpy as np
-        from repro.fed.population import init_async_state, make_async_round
+        from repro.fed.population import (accum_staleness_hist,
+                                          accum_tier_hists,
+                                          delay_model_from_config,
+                                          init_async_state, make_async_round)
         if self.track_consensus:
             raise ValueError("track_consensus needs the masked eager engine "
                              "(it reads pre-sync client states mid-round)")
         pcfg = self.population
         n = pcfg.n
+        c = pcfg.cohort
         fed = self.alg.fed
         q = fed.q
+        # resolve() bakes the permanent per-client delay quantities into
+        # the round program as constants (same key every round below)
+        dm = delay_model_from_config(pcfg).resolve(key, n)
         pop, server = self._init_population(key)
         state = init_async_state(pop.states, server, n)
-        samples = fed.q * (fed.neumann_k + 2)
+        samples = float(fed.q * (fed.neumann_k + 2))
         comms = 0
         self.staleness_log: List[Dict[str, float]] = []
         self.staleness_hist = np.zeros(0, np.int64)
+        self.staleness_hist_by_tier: Dict[int, Any] = {}
+        tier_of = (np.asarray(dm.tiers(key, n))
+                   if pcfg.delay_model == "tiers" else None)
 
         segment = jax.jit(make_async_round(
             self._cohort_local_step(n),
@@ -470,7 +490,7 @@ class FedDriver:
             q, sync_mode=pcfg.sync_mode,
             staleness_decay=pcfg.staleness_decay,
             max_staleness=pcfg.max_staleness, max_delay=pcfg.max_delay,
-            delay_eta=pcfg.delay_eta))
+            delay_eta=pcfg.delay_eta, delay=dm))
 
         full, rem = divmod(total_steps, q)
         lengths = [q] * full + ([rem] if rem else [])
@@ -489,12 +509,11 @@ class FedDriver:
             stale = np.asarray(stats["staleness"])
             acc = stale[stale >= 0]
             if acc.size:
-                h = np.bincount(acc)
-                if h.size > self.staleness_hist.size:
-                    h[:self.staleness_hist.size] += self.staleness_hist
-                    self.staleness_hist = h
-                else:
-                    self.staleness_hist[:h.size] += h
+                self.staleness_hist = accum_staleness_hist(
+                    self.staleness_hist, acc)
+            if tier_of is not None:
+                accum_tier_hists(self.staleness_hist_by_tier, stale,
+                                 tier_of, len(pcfg.tier_fracs))
             self.staleness_log.append({
                 "round": r,
                 "arrived": int(stats["arrived"]),
@@ -506,9 +525,14 @@ class FedDriver:
             })
             comms += int(int(stats["accepted"]) > 0)
             t += n_steps
-            samples += n_steps * (fed.neumann_k + 2)
+            # only the dispatched fraction of the cohort computed this
+            # round (in-flight slots are masked out and discarded) — the
+            # paper's sample-complexity curves must not count them
+            samples += (n_steps * (fed.neumann_k + 2)
+                        * int(stats["dispatched"]) / c)
             if r % eval_rounds == 0 or r == len(lengths) - 1:
-                self._record(res, state["bank"], t - 1, samples, comms)
+                self._record(res, state["bank"], t - 1,
+                             int(round(samples)), comms)
         res.seconds = time.time() - t0
         res.final_avg_state = tree_mean_axis0(state["bank"])
         return res

@@ -261,6 +261,56 @@ def test_async_config_validation():
     assert not PopulationConfig(n=8, cohort=2).asynchronous
 
 
+def test_dispatched_counts_unique_cohort_ids():
+    """Regression: a duplicate cohort id (trace-sampler shortfall cycling)
+    occupies two slots but dispatches ONE client — `dispatched` must count
+    unique clients, matching the single in_flight.at[ids].set(True) mark."""
+    round_fn = jax.jit(_toy_round(max_staleness=INF, max_delay=1))
+    state = _toy_state(n=5)
+    ids = jnp.asarray([2, 2, 0], jnp.int32)
+    state, stats = round_fn(state, ids, jnp.zeros((2,)),
+                            jax.random.PRNGKey(0), jnp.int32(0))
+    assert int(stats["dispatched"]) == 2
+    np.testing.assert_array_equal(np.asarray(state["in_flight"]),
+                                  [True, False, True, False, False])
+
+
+def test_sample_counter_parity_sync_async_at_max_delay_one():
+    """Regression: the async sample counter scales by dispatched/C; at
+    max_delay=1 every cohort slot dispatches every round, so the counter
+    must equal the synchronous population run's exactly."""
+    runs = {}
+    for name, pcfg in [
+        ("sync", PopulationConfig(n=6, cohort=3)),
+        ("async", PopulationConfig(n=6, cohort=3, max_staleness=INF)),
+    ]:
+        d = _quad_driver("adafbio", m=6)
+        d.sampler = UniformSampler(6, 3, jax.random.PRNGKey(5))
+        d.population = pcfg
+        runs[name] = d.run(24, eval_every=4)
+    assert runs["sync"].samples == runs["async"].samples
+
+
+def test_async_sample_counter_scales_by_dispatched():
+    """Regression: with real overlap (max_delay > 1) some cohort slots are
+    masked out and discarded — the recorded samples must follow
+    q(K+2) + sum_r n_steps (K+2) dispatched_r / C, strictly fewer than the
+    synchronous count whenever any round under-dispatches."""
+    d = _quad_driver("adafbio", m=8)
+    d.population = PopulationConfig(n=8, cohort=3, max_staleness=INF,
+                                    max_delay=3)
+    r = d.run(48, eval_every=48)
+    fed = d.fed
+    k2 = fed.neumann_k + 2
+    expect = float(fed.q * k2)
+    for s in d.staleness_log:
+        expect += fed.q * k2 * s["dispatched"] / 3
+    assert abs(r.samples[-1] - expect) <= 1
+    assert any(s["dispatched"] < 3 for s in d.staleness_log)
+    naive = fed.q * k2 * (len(d.staleness_log) + 1)
+    assert r.samples[-1] < naive
+
+
 def test_scatter_where_masks_rows():
     bank = {"x": jnp.zeros((4, 2))}
     ids = jnp.asarray([2, 0], jnp.int32)

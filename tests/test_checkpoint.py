@@ -1,6 +1,10 @@
+import json
+from pathlib import Path
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.checkpoint import load_checkpoint, save_checkpoint
 
@@ -17,3 +21,34 @@ def test_roundtrip(tmp_path):
         np.testing.assert_array_equal(np.asarray(a, np.float32),
                                       np.asarray(b, np.float32))
         assert a.dtype == b.dtype
+
+
+def test_load_rejects_leaf_count_mismatch(tmp_path):
+    """Regression: validation must raise ValueError (bare assert vanishes
+    under python -O)."""
+    save_checkpoint(tmp_path / "ck", {"a": jnp.zeros((2,))}, step=1)
+    with pytest.raises(ValueError, match="leaves"):
+        load_checkpoint(tmp_path / "ck",
+                        {"a": jnp.zeros((2,)), "b": jnp.zeros((2,))})
+
+
+def test_load_rejects_shape_mismatch_naming_leaf_path(tmp_path):
+    save_checkpoint(tmp_path / "ck",
+                    {"a": jnp.zeros((2, 3)), "b": {"c": jnp.zeros((4,))}},
+                    step=1)
+    with pytest.raises(ValueError, match=r"\['b'\]\['c'\]"):
+        load_checkpoint(tmp_path / "ck",
+                        {"a": jnp.zeros((2, 3)), "b": {"c": jnp.zeros((5,))}})
+
+
+def test_load_rejects_tampered_dtype_metadata(tmp_path):
+    """The recorded dtype metadata is verified on load: a mismatching
+    .npz/.json pair must not restore silently."""
+    save_checkpoint(tmp_path / "ck", {"a": jnp.zeros((2,), jnp.float32)},
+                    step=1)
+    meta_path = Path(str(tmp_path / "ck") + ".json")
+    meta = json.loads(meta_path.read_text())
+    meta["dtypes"]["leaf_0"] = "int32"
+    meta_path.write_text(json.dumps(meta))
+    with pytest.raises(ValueError, match="dtype"):
+        load_checkpoint(tmp_path / "ck", {"a": jnp.zeros((2,), jnp.float32)})

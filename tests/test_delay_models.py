@@ -1,0 +1,317 @@
+"""Heterogeneous per-client delay models (repro.fed.population.DelayModel):
+uniform must stay bit-identical to the plain async path, tiers must be
+permanent/deterministic and degenerate to sync, lognormal must quantize a
+permanent latency, and the trace model must replay the JSONL per-client
+delay field."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import PopulationConfig
+from repro.fed.population import (delay_schedule, init_async_state,
+                                  make_async_round, make_delay_model,
+                                  parse_tier_spec, tier_assignment,
+                                  _tier_sizes)
+from repro.fed.sampling import load_delay_trace, load_trace, save_trace
+from repro.fed.sampling import UniformSampler
+from tests.test_system import _quad_driver
+
+INF = float("inf")
+
+
+def _toy_round(**kw):
+    def local(states, server, batch, key, ids):
+        return jax.tree.map(lambda a: a + 1.0, states), server
+
+    def sync(server, avg):
+        return avg, server
+    return make_async_round(local, sync, q=2, **kw)
+
+
+# ------------------------------------------------------------- construction
+
+def test_parse_tier_spec():
+    assert parse_tier_spec("0.2:1:1,0.6:2:4,0.2:4:8") == (
+        (0.2, 0.6, 0.2), ((1, 1), (2, 4), (4, 8)))
+    with pytest.raises(ValueError):
+        parse_tier_spec("0.2:1")
+
+
+def test_make_delay_model_validation():
+    with pytest.raises(ValueError):
+        make_delay_model("warp", 3)
+    with pytest.raises(ValueError):
+        make_delay_model("uniform", 0)
+    with pytest.raises(ValueError):                      # fracs don't sum
+        make_delay_model("tiers", 1, tier_fracs=(0.5, 0.2),
+                         tier_delays=((1, 1), (2, 3)))
+    with pytest.raises(ValueError):                      # lo > hi
+        make_delay_model("tiers", 1, tier_fracs=(0.5, 0.5),
+                         tier_delays=((1, 1), (5, 3)))
+    with pytest.raises(ValueError):                      # length mismatch
+        make_delay_model("tiers", 1, tier_fracs=(0.5, 0.5),
+                         tier_delays=((1, 1),))
+    with pytest.raises(ValueError):
+        make_delay_model("lognormal", 4, sigma=-1.0)
+    with pytest.raises(ValueError):                      # inert: clips to 1
+        make_delay_model("lognormal", 1)
+    with pytest.raises(ValueError):                      # trace needs table
+        make_delay_model("trace", 1)
+    with pytest.raises(ValueError):                      # delays < 1
+        make_delay_model("trace", 1, table=np.zeros((2, 3), np.int32))
+    # a table narrower than the population must error, not silently clip
+    dm = make_delay_model("trace", 1, table=np.full((4, 5), 2, np.int32))
+    with pytest.raises(ValueError, match="population"):
+        dm.schedule(jax.random.PRNGKey(0), 0, 8)
+
+
+def test_population_config_delay_validation():
+    with pytest.raises(ValueError):                      # async knob, off
+        PopulationConfig(n=8, cohort=2, delay_model="tiers")
+    with pytest.raises(ValueError):                      # unknown model
+        PopulationConfig(n=8, cohort=2, max_staleness=INF,
+                         delay_model="warp")
+    with pytest.raises(ValueError):                      # trace needs file
+        PopulationConfig(n=8, cohort=2, max_staleness=INF,
+                         delay_model="trace")
+    with pytest.raises(ValueError):                      # bad tier range
+        PopulationConfig(n=8, cohort=2, max_staleness=INF,
+                         delay_model="tiers", tier_fracs=(1.0,),
+                         tier_delays=((3, 2),))
+    assert PopulationConfig(n=8, cohort=2, max_staleness=INF,
+                            delay_model="tiers").asynchronous
+
+
+# ------------------------------------------------------------- uniform model
+
+def test_uniform_model_bit_identical_to_delay_schedule():
+    key = jax.random.PRNGKey(11)
+    dm = make_delay_model("uniform", 6)
+    for r in range(4):
+        np.testing.assert_array_equal(
+            np.asarray(dm.schedule(key, r, 32)),
+            np.asarray(delay_schedule(key, r, 32, 6)))
+
+
+def test_uniform_model_round_fn_bit_identical_to_default():
+    """make_async_round(delay=uniform DelayModel) must reproduce the
+    delay=None path bit-for-bit across fresh jit instances (the PR 3
+    trajectories)."""
+    key = jax.random.PRNGKey(2)
+    ids = jnp.asarray([1, 3], jnp.int32)
+    outs = []
+    for delay in (None, make_delay_model("uniform", 4)):
+        round_fn = jax.jit(_toy_round(max_staleness=INF, max_delay=4,
+                                      delay=delay))
+        state = init_async_state({"x": jnp.arange(5.0)}, {}, 5)
+        for r in range(4):
+            state, _ = round_fn(state, ids, jnp.zeros((2,)), key,
+                                jnp.int32(r))
+        outs.append(state)
+    for a, b in zip(jax.tree.leaves(outs[0]), jax.tree.leaves(outs[1])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------------------- tiers model
+
+def test_tier_sizes_largest_remainder():
+    assert _tier_sizes(10, (0.2, 0.6, 0.2)) == (2, 6, 2)
+    for n in (1, 3, 7, 17):
+        assert sum(_tier_sizes(n, (0.2, 0.6, 0.2))) == n
+
+
+def test_tier_assignment_permanent_and_sized():
+    key = jax.random.PRNGKey(4)
+    a = np.asarray(tier_assignment(key, 20, (0.2, 0.6, 0.2)))
+    b = np.asarray(tier_assignment(key, 20, (0.2, 0.6, 0.2)))
+    np.testing.assert_array_equal(a, b)                  # permanent
+    np.testing.assert_array_equal(np.bincount(a), [4, 12, 4])
+    c = np.asarray(tier_assignment(jax.random.PRNGKey(5), 20,
+                                   (0.2, 0.6, 0.2)))
+    assert (a != c).any()                                # key-seeded
+
+
+def test_tiers_schedule_within_ranges_and_deterministic():
+    key = jax.random.PRNGKey(7)
+    dm = make_delay_model("tiers", 1, tier_fracs=(0.25, 0.5, 0.25),
+                          tier_delays=((1, 1), (2, 4), (5, 9)))
+    tier = np.asarray(dm.tiers(key, 16))
+    lo = np.asarray([1, 2, 5])[tier]
+    hi = np.asarray([1, 4, 9])[tier]
+    for r in range(6):
+        d = np.asarray(dm.schedule(key, r, 16))
+        assert (d >= lo).all() and (d <= hi).all()
+        np.testing.assert_array_equal(d, np.asarray(dm.schedule(key, r, 16)))
+    assert dm.bound == 9
+
+
+def test_tiers_model_determinism_end_to_end():
+    """Two identical tiers-model runs produce identical trajectories,
+    histograms, and per-tier histograms."""
+    outs = []
+    for _ in range(2):
+        d = _quad_driver("adafbio", m=8)
+        d.population = PopulationConfig(
+            n=8, cohort=3, max_staleness=INF, delay_model="tiers",
+            tier_fracs=(0.25, 0.5, 0.25),
+            tier_delays=((1, 1), (2, 3), (4, 6)))
+        r = d.run(64, eval_every=16)
+        outs.append((r, d.staleness_hist.copy(),
+                     {k: v.copy() for k, v in
+                      d.staleness_hist_by_tier.items()}))
+    (r0, h0, t0), (r1, h1, t1) = outs
+    np.testing.assert_array_equal(r0.grad_norm, r1.grad_norm)
+    np.testing.assert_array_equal(h0, h1)
+    assert t0.keys() == t1.keys()
+    for k in t0:
+        np.testing.assert_array_equal(t0[k], t1[k])
+    # fast tier arrives fresher than the straggler tier (monotone shift)
+    mean_tau = {k: (np.arange(v.size) * v).sum() / v.sum()
+                for k, v in t0.items() if v.sum()}
+    assert mean_tau[0] < mean_tau[2]
+
+
+def test_tiers_all_unit_delays_degenerate_to_sync():
+    """Sync degeneracy: tiers whose every range is (1, 1) make each
+    dispatch return next round — the trajectory must match the synchronous
+    population path (same guarantee as the uniform max_delay=1 case)."""
+    runs = {}
+    for name, pcfg in [
+        ("sync", PopulationConfig(n=4, cohort=2)),
+        ("tiers", PopulationConfig(n=4, cohort=2, max_staleness=INF,
+                                   delay_model="tiers",
+                                   tier_fracs=(0.5, 0.5),
+                                   tier_delays=((1, 1), (1, 1)))),
+    ]:
+        d = _quad_driver("adafbio")
+        d.sampler = UniformSampler(4, 2, jax.random.PRNGKey(9))
+        d.population = pcfg
+        runs[name] = d.run(16, eval_every=4)
+    for a, b in zip(jax.tree.leaves(runs["sync"].final_avg_state),
+                    jax.tree.leaves(runs["tiers"].final_avg_state)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-6, rtol=1e-6)
+    assert runs["sync"].samples == runs["tiers"].samples
+
+
+def test_resolve_precomputed_schedules_match_unresolved():
+    """resolve(key, n) only caches the permanent per-client quantities —
+    the emitted delays must stay bitwise-identical to the unresolved
+    model's."""
+    key = jax.random.PRNGKey(13)
+    for dm in (make_delay_model("tiers", 1, tier_fracs=(0.5, 0.5),
+                                tier_delays=((1, 2), (3, 7))),
+               make_delay_model("lognormal", 6, mu=0.5, sigma=0.7),
+               make_delay_model("uniform", 4)):
+        res = dm.resolve(key, 12)
+        for r in range(5):
+            np.testing.assert_array_equal(
+                np.asarray(dm.schedule(key, r, 12)),
+                np.asarray(res.schedule(key, r, 12)))
+
+
+# ------------------------------------------------------------- lognormal
+
+def test_lognormal_permanent_quantized_clipped():
+    key = jax.random.PRNGKey(3)
+    dm = make_delay_model("lognormal", 6, mu=0.7, sigma=0.8)
+    d0 = np.asarray(dm.schedule(key, 0, 64))
+    d9 = np.asarray(dm.schedule(key, 9, 64))
+    np.testing.assert_array_equal(d0, d9)        # permanent per client
+    assert d0.min() >= 1 and d0.max() <= 6
+    assert len(np.unique(d0)) > 1                # heterogeneous
+    assert dm.bound == 6
+
+
+# ------------------------------------------------------------- trace model
+
+def test_trace_delay_model_replays_table():
+    """A client whose trace says delay 3 must return exactly 3 rounds after
+    dispatch."""
+    tab = np.asarray([[3, 1]], np.int32)         # client 0 slow, 1 fast
+    round_fn = jax.jit(_toy_round(
+        max_staleness=INF, delay=make_delay_model("trace", 1, table=tab)))
+    state = init_async_state({"x": jnp.zeros((2,))}, {}, 2)
+    ids = jnp.asarray([0, 1], jnp.int32)
+    key = jax.random.PRNGKey(0)
+    state, _ = round_fn(state, ids, jnp.zeros((2,)), key, jnp.int32(0))
+    np.testing.assert_array_equal(np.asarray(state["return_round"]), [3, 1])
+
+
+def test_trace_delay_driver_run(tmp_path):
+    """End-to-end: delay_model='trace' loads the per-client delay field
+    from PopulationConfig.trace_file; the staleness histogram is bounded by
+    the table's delays."""
+    path = tmp_path / "trace.jsonl"
+    with open(path, "w") as f:
+        f.write(json.dumps({"horizon": 2}) + "\n")
+        for i in range(4):
+            f.write(json.dumps({"client": i, "up": [[0, 2]],
+                                "delay": 2 if i < 2 else 1}) + "\n")
+    d = _quad_driver("adafbio", m=4)
+    d.population = PopulationConfig(n=4, cohort=2, max_staleness=INF,
+                                    delay_model="trace",
+                                    trace_file=str(path))
+    r = d.run(24, eval_every=8)
+    assert np.isfinite(r.grad_norm).all()
+    assert d.staleness_hist.size <= 3            # taus in {1, 2} only
+    assert d.staleness_hist.sum() > 0
+
+
+def test_save_trace_roundtrips_delays(tmp_path):
+    path = str(tmp_path / "t.jsonl")
+    up = np.ones((4, 3), bool)
+    delays = np.asarray([[2, 1, 5], [2, 1, 5], [2, 3, 5], [2, 3, 5]])
+    save_trace(path, up, delays)
+    np.testing.assert_array_equal(load_delay_trace(path, 3), delays)
+    # scalar form: [n] vector
+    save_trace(path, up, np.asarray([4, 1, 2]))
+    np.testing.assert_array_equal(load_delay_trace(path, 3),
+                                  np.tile([4, 1, 2], (4, 1)))
+
+
+def test_load_delay_trace_defaults_and_validation(tmp_path):
+    path = tmp_path / "d.jsonl"
+    with open(path, "w") as f:
+        f.write(json.dumps({"client": 0, "delay": [4, 2, 7]}) + "\n")
+    tab = load_delay_trace(str(path), 2)
+    assert tab.shape == (3, 2)                   # horizon = longest list
+    np.testing.assert_array_equal(tab[:, 0], [4, 2, 7])
+    np.testing.assert_array_equal(tab[:, 1], 1)  # absent client: delay 1
+    with open(path, "a") as f:
+        f.write(json.dumps({"client": 1, "delay": 0}) + "\n")
+    with pytest.raises(ValueError):
+        load_delay_trace(str(path), 2)
+    # a delay list longer than an explicit horizon must error, not
+    # silently truncate the recorded delays
+    with open(path, "w") as f:
+        f.write(json.dumps({"horizon": 2}) + "\n")
+        f.write(json.dumps({"client": 0, "delay": [1, 1, 9]}) + "\n")
+    with pytest.raises(ValueError, match="horizon"):
+        load_delay_trace(str(path), 2)
+
+
+def test_availability_and_delay_tables_share_one_horizon(tmp_path):
+    """docs/async.md: the two consumers of one trace file must cycle with
+    the SAME period — a delays-only client line loads fine in load_trace
+    (always available), and a long delay list stretches both horizons."""
+    path = tmp_path / "t.jsonl"
+    with open(path, "w") as f:
+        f.write(json.dumps({"client": 0, "up": [[0, 4]],
+                            "delay": [1, 2, 3, 4, 5, 6]}) + "\n")
+        f.write(json.dumps({"client": 1, "delay": 2}) + "\n")
+    up = load_trace(str(path), 2)
+    delays = load_delay_trace(str(path), 2)
+    assert up.shape == delays.shape == (6, 2)
+    np.testing.assert_array_equal(up[:, 0], [1, 1, 1, 1, 0, 0])
+    np.testing.assert_array_equal(up[:, 1], 1)   # delay-only: always up
+    np.testing.assert_array_equal(delays[:, 0], [1, 2, 3, 4, 5, 6])
+    # scalar-delays-only file: both loaders accept it (horizon 1)
+    with open(path, "w") as f:
+        f.write(json.dumps({"client": 0, "delay": 3}) + "\n")
+    assert load_trace(str(path), 2).shape == (1, 2)
+    np.testing.assert_array_equal(load_delay_trace(str(path), 2),
+                                  [[3, 1]])

@@ -447,3 +447,39 @@ def test_trainer_population_round_smoke():
     x0 = np.asarray(jax.tree.leaves(bank)[0][0], np.float32)
     xn = np.asarray(jax.tree.leaves(bank)[0][-1], np.float32)
     np.testing.assert_array_equal(x0, xn)
+
+
+def test_trainer_population_init_derives_params_from_run_key():
+    """Regression: init_population_states hard-coded PRNGKey(0) for the
+    shared (x0, y0), so every run key produced an identical init. Different
+    keys must now give different parameters; the same key must reproduce."""
+    from repro.configs import FedConfig, get_arch, reduced
+    from repro.configs.base import ShapeConfig
+    from repro.fed.runtime import FederatedTrainer, client_batch_specs
+
+    cfg = reduced(get_arch("qwen1.5-4b"))
+    fed = FedConfig(q=2, neumann_k=2)
+    shape = ShapeConfig("t", 16, 2, "train")
+    tr = FederatedTrainer(cfg, fed, shape, mesh=None)
+    n = 3
+    specs_c, _ = client_batch_specs(cfg, shape, 1, fed)
+    specs_n = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n,) + s.shape[1:], s.dtype), specs_c)
+
+    def batch(key):
+        return {k: (jax.random.randint(key, v.shape, 0, cfg.vocab)
+                    if v.dtype == jnp.int32 else jnp.zeros(v.shape, v.dtype))
+                for k, v in specs_n.items()}
+
+    k1, k2 = jax.random.PRNGKey(1), jax.random.PRNGKey(2)
+    b = batch(jax.random.PRNGKey(7))
+    bank1, _, _ = tr.init_population_states(k1, b, n)
+    bank1b, _, _ = tr.init_population_states(k1, b, n)
+    bank2, _, _ = tr.init_population_states(k2, b, n)
+    x1 = np.asarray(jax.tree.leaves(bank1["x"])[0], np.float32)
+    x1b = np.asarray(jax.tree.leaves(bank1b["x"])[0], np.float32)
+    x2 = np.asarray(jax.tree.leaves(bank2["x"])[0], np.float32)
+    np.testing.assert_array_equal(x1, x1b)       # same key reproduces
+    assert (x1 != x2).any()                      # different keys differ
+    # the shared init is still shared: every client starts from the same x
+    np.testing.assert_array_equal(x1[0], x1[-1])
