@@ -160,7 +160,8 @@ def engine_wallclock(rounds=12):
 def population_scale(n=256, c=16, rounds=8, sampler="uniform",
                      max_staleness=0.0, max_delay=1, delay_eta=0.0,
                      delay_model="uniform", tiers=None, delay_mu=0.0,
-                     delay_sigma=0.5):
+                     delay_sigma=0.5, codec="none", codec_bits=8,
+                     topk_frac=0.1, ef=True):
     """Cohort-sampled population vs the same-size plain run: population mode
     keeps N client states banked and computes only the C sampled clients per
     round (gather → fused scan round → scatter), so a round costs what a
@@ -206,7 +207,26 @@ def population_scale(n=256, c=16, rounds=8, sampler="uniform",
     stats["pop"] = steady(dn)
     _row(f"population/pop_n{n}_c{c}_{sampler}", stats["pop"] * 1e6,
          f"q={q};rounds={rounds};gnormT={rn.grad_norm[-1]:.3f};"
+         f"bytes_up={rn.bytes_up[-1]};bytes_down={rn.bytes_down[-1]};"
          f"compile_s={rn.compile_seconds:.2f}")
+
+    if codec != "none":
+        # compressed variant of the same cohort rounds: the wire saving
+        # (exact bytes via repro.fed.compress formulas) vs the convergence
+        # cost, on identical cohorts
+        dc = driver(n)
+        dc.fed = dataclasses.replace(
+            dc.fed, codec=codec, codec_bits=codec_bits,
+            topk_frac=topk_frac, error_feedback=ef)
+        dc.alg = make_algorithm("adafbio", dc.fed, dc.problem)
+        dc.population = PopulationConfig(n=n, cohort=c, sampler=sampler)
+        rc = dc.run(steps, eval_every=steps - 1)
+        level = codec_bits if codec == "int8" else topk_frac
+        _row(f"population/codec_{codec}_{level}", steady(dc) * 1e6,
+             f"q={q};rounds={rounds};gnormT={rc.grad_norm[-1]:.3f};"
+             f"ef={int(ef)};bytes_up={rc.bytes_up[-1]};"
+             f"bytes_down={rc.bytes_down[-1]};"
+             f"up_ratio=x{rn.bytes_up[-1] / max(rc.bytes_up[-1], 1):.1f}")
 
     dm = driver(n)
     dm.engine = "scan"
@@ -333,6 +353,17 @@ def main() -> None:
                     help="lognormal delay model log-latency location")
     ap.add_argument("--delay-sigma", type=float, default=0.5,
                     help="lognormal delay model log-latency scale")
+    ap.add_argument("--codec", default="none",
+                    choices=["none", "int8", "topk"],
+                    help="population benchmark: adds a compressed variant "
+                         "(client→server update codec) reporting exact "
+                         "wire bytes next to the full-precision run")
+    ap.add_argument("--codec-bits", type=int, default=8,
+                    help="int8 codec quantization bit width (2..8)")
+    ap.add_argument("--topk-frac", type=float, default=0.1,
+                    help="topk codec: fraction of entries transmitted")
+    ap.add_argument("--ef", default="on", choices=["on", "off"],
+                    help="error feedback for the compressed variant")
     benches = {
         "table1": table1_complexity,
         "fig_hyperrep": fig1_hyperrep,
@@ -351,7 +382,9 @@ def main() -> None:
         sampler=args.sampler, max_staleness=args.max_staleness,
         max_delay=args.max_delay, delay_eta=args.delay_eta,
         delay_model=args.delay_model, tiers=args.tiers,
-        delay_mu=args.delay_mu, delay_sigma=args.delay_sigma)
+        delay_mu=args.delay_mu, delay_sigma=args.delay_sigma,
+        codec=args.codec, codec_bits=args.codec_bits,
+        topk_frac=args.topk_frac, ef=args.ef == "on")
     ENGINE = args.engine
     print("name,us_per_call,derived")
     if args.only:

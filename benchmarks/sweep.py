@@ -1,27 +1,38 @@
-"""Convergence-vs-staleness sweep harness (``BENCH_async_sweep.json``).
+"""Sweep harness for the paper's two tasks: convergence-vs-staleness
+(``--bench async`` → ``BENCH_async_sweep.json``) and bytes-vs-convergence
+(``--bench compression`` → ``BENCH_compression.json``).
 
-Runs AdaFBiO on the paper's two tasks — federated hyper-representation
-learning (Section 6.1) and federated data hyper-cleaning (Section 6.2) —
-over a grid of asynchronous-execution settings
+Both benches run AdaFBiO on federated hyper-representation learning
+(Section 6.1) and federated data hyper-cleaning (Section 6.2) over a grid
+of settings, writing one machine-readable JSON record per cell through the
+shared :func:`run_cell` helper — final task metric and grad norm, the
+paper's cost counters (#samples with the async masked-dispatch convention,
+#communication rounds), exact wire bytes (``bytes_up``/``bytes_down``, the
+per-codec formulas of ``repro.fed.compress``), and wall-clock. The two
+artifacts share a ``schema`` version field.
 
-    max_staleness  x  delay model  x  delay_eta
-
-plus one synchronous baseline per task, and writes a machine-readable JSON
-record per cell: final task metric and grad norm, the paper's cost counters
-(#samples with the async masked-dispatch convention, #communication
-rounds), the accepted-staleness histogram (split by speed tier for the
-``tiers`` delay model), and wall-clock. The output is the repo's
-convergence-vs-staleness trajectory artifact: CI runs one tiny cell per PR
-and uploads it, and full sweeps accumulate how much staleness each task
-tolerates under each device-heterogeneity regime (docs/async.md).
+  async        — max_staleness x delay model x delay_eta, plus one
+                 synchronous baseline per task; cells add arrival counts
+                 and the accepted-staleness histogram (split by speed tier
+                 for the ``tiers`` delay model). See docs/async.md.
+  compression  — codec x compression level x task over synchronous
+                 population rounds: one cell per ``--codec-grid`` entry
+                 (``none`` = the full-precision baseline; ``int8:<bits>``
+                 = stochastic uniform quantization; ``topk:<frac>`` =
+                 magnitude sparsification), error feedback per ``--ef``.
+                 See docs/compression.md.
 
     PYTHONPATH=src:. python benchmarks/sweep.py --task hyperclean \
         --steps 64 --population 8 --cohort 2 --staleness-grid 2,4,inf \
         --delay-models uniform,tiers --delay-eta-grid 0,0.5
+    PYTHONPATH=src:. python benchmarks/sweep.py --bench compression \
+        --task hyperclean --steps 64 --population 8 --cohort 2 \
+        --codec-grid none,int8:8,int8:4,topk:0.25,topk:0.05
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import math
 import sys
@@ -32,6 +43,12 @@ sys.path.insert(0, "src")
 import jax
 
 TASKS = ("hyperclean", "hyperrep")
+BENCHES = ("async", "compression")
+# bumped whenever a cell/meta field changes shape; shared by BOTH artifacts
+# so downstream consumers can gate on one number
+SCHEMA = 2
+DEFAULT_OUT = {"async": "BENCH_async_sweep.json",
+               "compression": "BENCH_compression.json"}
 
 
 def build_task(name: str, n_clients: int):
@@ -69,10 +86,17 @@ def json_safe(x):
     return x
 
 
-def run_cell(task: str, pcfg, steps: int, seed: int) -> dict:
-    """One sweep cell: a full FedDriver run, returning the JSON record."""
+def run_cell(task: str, pcfg, steps: int, seed: int,
+             fed_overrides: dict = None) -> tuple:
+    """One sweep cell — the run/record core shared by BOTH benches: build
+    the task, apply any FedConfig overrides (the compression bench's codec
+    fields), run the FedDriver, and return ``(cell, driver)`` where
+    ``cell`` carries the schema fields every bench records (task, metrics,
+    the paper's cost counters, exact wire bytes, wall-clock)."""
     from repro.tasks.driver import FedDriver
     fed, kw = build_task(task, pcfg.n)
+    if fed_overrides:
+        fed = dataclasses.replace(fed, **fed_overrides)
     d = FedDriver(kw.pop("problem"), fed, pcfg.n, kw.pop("batch_fn"),
                   kw.pop("init_xy"), algorithm="adafbio", **kw)
     d.population = pcfg
@@ -81,10 +105,6 @@ def run_cell(task: str, pcfg, steps: int, seed: int) -> dict:
               eval_every=max(steps - 1, 1))
     cell = {
         "task": task,
-        "delay_model": pcfg.delay_model,
-        "max_staleness": json_safe(pcfg.max_staleness),
-        "max_delay": pcfg.max_delay,
-        "delay_eta": pcfg.delay_eta,
         "sampler": pcfg.sampler,
         "steps": int(r.steps[-1] + 1),
         "metric0": json_safe(float(r.metric[0])),
@@ -93,8 +113,23 @@ def run_cell(task: str, pcfg, steps: int, seed: int) -> dict:
         "grad_normT": json_safe(float(r.grad_norm[-1])),
         "samples": int(r.samples[-1]),
         "comms": int(r.comms[-1]),
+        "bytes_up": int(r.bytes_up[-1]),
+        "bytes_down": int(r.bytes_down[-1]),
         "seconds": round(time.time() - t0, 3),
     }
+    return cell, d
+
+
+def run_async_cell(task: str, pcfg, steps: int, seed: int) -> dict:
+    """An async-bench cell: the shared record plus the delay-model grid
+    coordinates and the arrival/staleness statistics."""
+    cell, d = run_cell(task, pcfg, steps, seed)
+    cell.update({
+        "delay_model": pcfg.delay_model,
+        "max_staleness": json_safe(pcfg.max_staleness),
+        "max_delay": pcfg.max_delay,
+        "delay_eta": pcfg.delay_eta,
+    })
     if pcfg.asynchronous:
         log = d.staleness_log
         cell.update({
@@ -116,6 +151,82 @@ def run_cell(task: str, pcfg, steps: int, seed: int) -> dict:
 
 def parse_grid(spec: str, cast):
     return tuple(cast(v) for v in spec.split(",") if v)
+
+
+def parse_codec_grid(spec: str):
+    """Parse a ``--codec-grid`` spec — comma list of ``none``,
+    ``int8:<bits>`` or ``topk:<frac>`` — into FedConfig override dicts,
+    e.g. ``none,int8:8,topk:0.25`` → ``[{"codec": "none"}, {"codec":
+    "int8", "codec_bits": 8}, {"codec": "topk", "topk_frac": 0.25}]``."""
+    from repro.configs.base import CODECS, validate_codec
+    out = []
+    for part in spec.split(","):
+        if not part:
+            continue
+        name, _, level = part.partition(":")
+        if name not in CODECS:
+            raise SystemExit(f"unknown codec {name!r} in --codec-grid; "
+                             f"known: {CODECS}")
+        ov = {"codec": name}
+        try:
+            if name == "int8":
+                ov["codec_bits"] = int(level) if level else 8
+            elif name == "topk":
+                ov["topk_frac"] = float(level) if level else 0.1
+            elif level:
+                raise ValueError("codec 'none' takes no level")
+            validate_codec(ov["codec"], ov.get("codec_bits", 8),
+                           ov.get("topk_frac", 0.1))
+        except ValueError as e:
+            raise SystemExit(f"bad --codec-grid entry {part!r}: {e}")
+        out.append(ov)
+    if not out:
+        raise SystemExit("--codec-grid is empty")
+    return out
+
+
+def run_compression_sweep(args) -> dict:
+    """The bytes-vs-convergence grid: per task, one cell per --codec-grid
+    entry over synchronous population rounds (``none`` is the
+    full-precision baseline the compressed cells are compared against)."""
+    from repro.configs.base import PopulationConfig
+    tasks = parse_grid(args.task, str)
+    for task in tasks:
+        if task not in TASKS:
+            raise SystemExit(f"unknown task {task!r}; known: {TASKS}")
+    grid = parse_codec_grid(args.codec_grid)
+    ef = args.ef == "on"
+    cells = []
+    total = len(tasks) * len(grid)
+    for task in tasks:
+        for ov in grid:
+            level = ov.get("codec_bits", ov.get("topk_frac"))
+            print(f"[{len(cells) + 1}/{total}] {task} codec={ov['codec']}"
+                  f"{'' if level is None else f' level={level}'}",
+                  flush=True)
+            pcfg = PopulationConfig(n=args.population, cohort=args.cohort,
+                                    sampler=args.sampler,
+                                    trace_file=args.trace_file)
+            cell, _ = run_cell(task, pcfg, args.steps, args.seed,
+                               fed_overrides={**ov, "error_feedback": ef})
+            cell.update({"codec": ov["codec"], "level": level,
+                         "ef": ef if ov["codec"] != "none" else None})
+            cells.append(cell)
+    return {
+        "bench": "compression",
+        "schema": SCHEMA,
+        "meta": {
+            "tasks": list(tasks),
+            "steps": args.steps,
+            "population": args.population,
+            "cohort": args.cohort,
+            "sampler": args.sampler,
+            "codec_grid": args.codec_grid,
+            "ef": ef,
+            "seed": args.seed,
+        },
+        "cells": cells,
+    }
 
 
 def run_sweep(args) -> dict:
@@ -157,7 +268,7 @@ def run_sweep(args) -> dict:
     for task in tasks:
         print(f"[{len(cells) + 1}/{total}] {task} sync baseline",
               flush=True)
-        cells.append(run_cell(
+        cells.append(run_async_cell(
             task, PopulationConfig(n=args.population, cohort=args.cohort,
                                    sampler=args.sampler,
                                    trace_file=args.trace_file),
@@ -176,10 +287,11 @@ def run_sweep(args) -> dict:
                         delay_sigma=args.delay_sigma,
                         trace_file=args.trace_file,
                         **(tier_kw if model == "tiers" else {}))
-                    cells.append(run_cell(task, pcfg, args.steps,
-                                          args.seed))
+                    cells.append(run_async_cell(task, pcfg, args.steps,
+                                                args.seed))
     return {
         "bench": "async_sweep",
+        "schema": SCHEMA,
         "meta": {
             "tasks": list(tasks),
             "steps": args.steps,
@@ -201,7 +313,11 @@ def run_sweep(args) -> dict:
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(
-        description="convergence-vs-staleness sweep over the paper's tasks")
+        description="convergence-vs-staleness / bytes-vs-convergence "
+                    "sweeps over the paper's tasks")
+    ap.add_argument("--bench", default="async", choices=list(BENCHES),
+                    help="async: convergence-vs-staleness grid; "
+                         "compression: bytes-vs-convergence codec grid")
     ap.add_argument("--task", default="hyperclean,hyperrep",
                     help="comma list of tasks: hyperclean, hyperrep")
     ap.add_argument("--steps", type=int, default=64,
@@ -231,12 +347,23 @@ def main(argv=None) -> None:
                     help="lognormal delay model log-latency scale")
     ap.add_argument("--trace-file", default=None,
                     help="JSONL trace for the trace delay model / sampler")
+    ap.add_argument("--codec-grid", default="none,int8:8,int8:4,"
+                                            "topk:0.25,topk:0.05",
+                    help="compression bench: comma list of none / "
+                         "int8:<bits> / topk:<frac> cells")
+    ap.add_argument("--ef", default="on", choices=["on", "off"],
+                    help="compression bench: error feedback for the lossy "
+                         "cells")
     ap.add_argument("--seed", type=int, default=0,
                     help="run key seed (one key per cell, shared)")
-    ap.add_argument("--out", default="BENCH_async_sweep.json",
-                    help="output JSON path")
+    ap.add_argument("--out", default=None,
+                    help="output JSON path (default: BENCH_async_sweep.json"
+                         " / BENCH_compression.json per --bench)")
     args = ap.parse_args(argv)
-    out = run_sweep(args)
+    if args.out is None:
+        args.out = DEFAULT_OUT[args.bench]
+    out = (run_compression_sweep(args) if args.bench == "compression"
+           else run_sweep(args))
     with open(args.out, "w") as f:
         json.dump(out, f, indent=1, allow_nan=False)
         f.write("\n")

@@ -52,7 +52,7 @@ def readme_sections(readme: pathlib.Path) -> dict:
     return sections
 
 
-DOCS = ("docs/ARCHITECTURE.md", "docs/async.md")
+DOCS = ("docs/ARCHITECTURE.md", "docs/async.md", "docs/compression.md")
 
 
 def main() -> int:

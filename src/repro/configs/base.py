@@ -142,6 +142,24 @@ INPUT_SHAPES = {
 }
 
 
+CODECS = ("none", "int8", "topk")
+
+
+def validate_codec(name: str, bits: int, topk_frac: float) -> None:
+    """Shared codec validation — ``FedConfig`` and
+    ``repro.fed.compress.make_codec`` both call this, so the two
+    construction paths can never drift apart. Raises ``ValueError``."""
+    if name not in CODECS:
+        raise ValueError(f"codec must be one of {CODECS}, got {name!r}")
+    if not 2 <= bits <= 8:
+        raise ValueError(f"codec_bits must be in [2, 8] (levels are shipped "
+                         f"bit-packed, one f32 scale per tensor), "
+                         f"got {bits}")
+    if not 0.0 < topk_frac <= 1.0:
+        raise ValueError(f"topk_frac must be in (0, 1] (1 = keep every "
+                         f"entry), got {topk_frac}")
+
+
 @dataclasses.dataclass(frozen=True)
 class FedConfig:
     """AdaFBiO hyper-parameters (Algorithm 1)."""
@@ -168,6 +186,24 @@ class FedConfig:
     # Pallas kernels on TPU and the per-leaf jnp path elsewhere; "on" forces
     # the flat-buffer path (jnp reference math off-TPU); "off" disables it.
     fused: str = "auto"
+    # ---- communication compression (repro.fed.compress) ----
+    # client→server update codec: "none" (full-precision, bit-identical to
+    # the uncompressed path), "int8" (stochastic uniform quantization to
+    # codec_bits-bit levels, Pallas-fused on TPU), "topk" (magnitude
+    # sparsification keeping a topk_frac fraction of each tensor)
+    codec: str = "none"
+    # int8 codec: quantization bit width b; levels span [-(2^(b-1)-1),
+    # 2^(b-1)-1], shipped bit-packed with one f32 scale per tensor
+    codec_bits: int = 8
+    # topk codec: fraction of each tensor's entries transmitted (1.0 keeps
+    # everything — matches codec="none" up to float rounding)
+    topk_frac: float = 0.1
+    # error feedback: keep the per-client compression residual and fold it
+    # into the next transmission (EF-SGD; lossy codecs only)
+    error_feedback: bool = True
+
+    def __post_init__(self):
+        validate_codec(self.codec, self.codec_bits, self.topk_frac)
 
 
 DELAY_MODELS = ("uniform", "tiers", "lognormal", "trace")

@@ -1,0 +1,256 @@
+"""Communication compression: pluggable client→server update codecs with
+error feedback + bytes-accurate accounting.
+
+AdaFBiO's headline communication complexity is counted in *rounds*; what a
+deployment pays for is *bytes on the wire*. This module makes the
+client↔server legs of every round program codec-aware so the repo can
+measure the bytes-vs-convergence trade-off (communication-efficient
+federated bilevel methods: Li, Huang & Huang, arXiv:2302.06701; momentum
+variants: Gao, arXiv:2204.13299).
+
+What a codec compresses: the client→server message of one sync. Client i
+finished its q local steps at state ``cur_i`` starting from ``ref_i`` — the
+state the server last handed it (broadcast / scatter / init), so the server
+knows ``ref_i`` and the message only needs the update ``Δ_i = cur_i −
+ref_i``. With error feedback (EF-SGD) the client adds its residual ``e_i``
+before encoding and keeps what the codec dropped::
+
+    sent_i  = decode(encode(Δ_i + e_i))        # what the server sees
+    e_i'    = (Δ_i + e_i) − sent_i             # kept for the next sync
+    recon_i = ref_i + sent_i                   # server-side reconstruction
+
+so transmitted + residual telescopes to the true update exactly, and the
+aggregation runs over the ``recon_i`` (the server's view). Three codecs:
+
+  none   — bit-identical passthrough (``client_messages`` returns its
+           inputs untouched; the round programs take their pre-codec path).
+  int8   — stochastic uniform quantization to ``bits``-bit levels with one
+           f32 scale per tensor (per leaf, per client), backed by the
+           pad-to-block Pallas quantize/dequantize kernels
+           (``repro.kernels.quantize``) on TPU and their jnp oracles
+           elsewhere. Unbiased: E[decode(encode(x))] = x; worst-case
+           per-entry error is one quantization step, max|x| / (2^(b-1)-1).
+  topk   — per-tensor magnitude sparsification keeping ``round(topk_frac ·
+           size)`` entries (at least 1); ``topk_frac = 1`` keeps everything
+           and matches ``none`` up to f32 rounding. Deterministic, so EF is
+           what guarantees every coordinate is eventually transmitted.
+
+Bytes accounting (the documented per-codec formulas — ``FedDriver``, both
+launchers, and ``benchmarks/sweep.py`` all report through these helpers):
+
+  state_bytes(tree)            = Σ_leaf size · itemsize          (uplink
+  none:  message_bytes(tree)   = state_bytes(tree)                 = exact)
+  int8:  message_bytes(tree)   = Σ_leaf ceil(size · bits / 8) + 4  (exact;
+         levels bit-packed, one f32 scale per tensor)
+  topk:  message_bytes(tree)   = Σ_leaf k_leaf · (4 + 4)           (index +
+         value cost: one int32 index + one f32 value per kept entry)
+
+The server→client broadcast is NOT compressed (down-compression would
+desynchronize ``ref``); one downlink costs ``state_bytes`` per receiving
+client. Semantics, EF state lifecycle in the population bank, and the
+accounting conventions: docs/compression.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import CODECS, validate_codec
+from repro.kernels import ops
+
+# RNG salt for the stochastic-rounding noise — disjoint from the local-step
+# fold_in(gid)/fold_in(t) stream and the async delay salts, so enabling a
+# codec never perturbs the per-step sample draws
+_CODEC_SALT = 0xC0DEC
+
+
+def _leaf_k(size: int, frac: float) -> int:
+    """Entries the topk codec keeps in a ``size``-element tensor."""
+    return min(max(int(round(frac * size)), 1), size)
+
+
+def state_bytes(tree) -> int:
+    """Uncompressed wire size of one client-state pytree (arrays or
+    ShapeDtypeStructs): Σ_leaf size · itemsize."""
+    return sum(int(np.prod(l.shape, dtype=np.int64)) *
+               jnp.dtype(l.dtype).itemsize for l in jax.tree.leaves(tree))
+
+
+@dataclasses.dataclass(frozen=True)
+class Codec:
+    """One client→server update codec (see the module docstring).
+
+    ``roundtrip`` is the lossy identity decode(encode(·)) over ONE client's
+    update pytree — the simulation never materializes the encoded form, but
+    ``message_bytes`` prices it exactly. Use :func:`make_codec` to build one
+    with validation.
+    """
+    name: str = "none"
+    bits: int = 8
+    topk_frac: float = 0.1
+    error_feedback: bool = True
+
+    @property
+    def lossy(self) -> bool:
+        return self.name != "none"
+
+    @property
+    def stateful(self) -> bool:
+        """True when per-client EF residuals must persist across rounds."""
+        return self.lossy and self.error_feedback
+
+    @property
+    def qmax(self) -> int:
+        """Largest quantization level: 2^(bits-1) - 1 (127 at 8 bits)."""
+        return (1 << (self.bits - 1)) - 1
+
+    # -------------------------------------------------- the lossy identity
+
+    def roundtrip(self, key, tree):
+        """decode(encode(tree)) for one client's update pytree (f32 leaves
+        in, f32 leaves out); ``key`` seeds the stochastic rounding noise
+        (unused by the deterministic codecs)."""
+        if not self.lossy:
+            return tree
+        leaves, treedef = jax.tree.flatten(tree)
+        if self.name == "int8":
+            keys = jax.random.split(key, max(len(leaves), 1))
+            out = [self._int8_leaf(k, l) for k, l in zip(keys, leaves)]
+        else:
+            out = [self._topk_leaf(l) for l in leaves]
+        return jax.tree.unflatten(treedef, out)
+
+    def _int8_leaf(self, key, x):
+        xf = x.astype(jnp.float32).reshape(-1)
+        # the 1e-30 floor only guards the all-zero tensor (q = 0 exactly);
+        # real tensors keep scale = max|x| / qmax, so |error| <= scale
+        scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-30) / self.qmax
+        u = jax.random.uniform(key, xf.shape)
+        q = ops.quantize_stoch(xf, u, scale, qmax=self.qmax,
+                               use_pallas=ops.default_use_pallas(),
+                               interpret=False)
+        return ops.dequantize(q, scale,
+                              use_pallas=ops.default_use_pallas(),
+                              interpret=False).reshape(x.shape)
+
+    def _topk_leaf(self, x):
+        n = int(x.size)
+        k = _leaf_k(n, self.topk_frac)
+        flat = x.astype(jnp.float32).reshape(-1)
+        if k >= n:
+            return flat.reshape(x.shape)
+        _, idx = jax.lax.top_k(jnp.abs(flat), k)
+        return jnp.zeros_like(flat).at[idx].set(flat[idx]).reshape(x.shape)
+
+    # -------------------------------------------------- bytes accounting
+
+    def message_bytes(self, tree) -> int:
+        """Exact uplink cost of one client→server message for a pytree of
+        this shape (arrays or ShapeDtypeStructs) — the documented per-codec
+        formulas (module docstring / docs/compression.md)."""
+        sizes = [int(np.prod(l.shape, dtype=np.int64))
+                 for l in jax.tree.leaves(tree)]
+        if self.name == "int8":
+            return sum(-(-s * self.bits // 8) + 4 for s in sizes)
+        if self.name == "topk":
+            return sum(_leaf_k(s, self.topk_frac) * (4 + 4) for s in sizes)
+        return state_bytes(tree)
+
+    def down_bytes(self, tree) -> int:
+        """Downlink cost per receiving client (broadcast is uncompressed)."""
+        return state_bytes(tree)
+
+
+def make_codec(name: str = "none", *, bits: int = 8, topk_frac: float = 0.1,
+               error_feedback: bool = True) -> Codec:
+    """Build a validated :class:`Codec` (shared validation with
+    ``FedConfig`` — ``repro.configs.base.validate_codec``)."""
+    validate_codec(name, bits, topk_frac)
+    return Codec(name=name, bits=int(bits), topk_frac=float(topk_frac),
+                 error_feedback=bool(error_feedback))
+
+
+def codec_from_config(fed) -> Codec:
+    """The :class:`Codec` a ``FedConfig`` describes."""
+    return make_codec(fed.codec, bits=fed.codec_bits,
+                      topk_frac=fed.topk_frac,
+                      error_feedback=fed.error_feedback)
+
+
+def wire_costs(codec: "Codec", stacked_states) -> Tuple[int, int]:
+    """(uplink bytes per client→server message, downlink bytes per
+    receiving client) for ONE client of a stacked [C/N, ...] client-state
+    pytree (arrays or ShapeDtypeStructs) — the single pricing helper the
+    driver and the launchers share, so reported bytes can never drift."""
+    one = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(tuple(a.shape)[1:], a.dtype),
+        stacked_states)
+    return codec.message_bytes(one), codec.down_bytes(one)
+
+
+# ------------------------------------------------------------ EF residuals
+
+def zeros_ef(codec: Optional[Codec], states):
+    """The stacked error-feedback residual pytree matching a [C/N, ...]
+    client-state pytree (f32 — residuals accumulate sub-precision error),
+    or None when the codec keeps no state (lossless, or EF disabled)."""
+    if codec is None or not codec.stateful:
+        return None
+    return jax.tree.map(lambda a: jnp.zeros(tuple(a.shape), jnp.float32),
+                        states)
+
+
+def mask_rows(keep, new, old):
+    """Per-row select over a leading client axis: row i of ``new`` where
+    ``keep[i]``, else row i of ``old`` (the masked no-op used for clients
+    that did not transmit — inactive, or in flight on the async path)."""
+    if new is None:
+        return None
+
+    def sel(a, b):
+        m = keep.reshape((keep.shape[0],) + (1,) * (a.ndim - 1))
+        return jnp.where(m, a, b)
+    return jax.tree.map(sel, new, old)
+
+
+# ------------------------------------------------------------ the uplink leg
+
+def client_messages(codec: Optional[Codec], key, round_id, ids, ref, cur,
+                    ef=None) -> Tuple[Any, Any]:
+    """Simulate the client→server leg for a batched cohort.
+
+    ``ref``/``cur`` are [C, ...] pytrees (the server-known dispatch states
+    and the post-local-steps states), ``ids`` the [C] global client ids
+    (per-client stochastic-rounding streams fold the GLOBAL id, so a cohort
+    transmission reproduces the same client's full-population one), ``ef``
+    the gathered [C, ...] f32 residuals (None when the codec keeps none).
+
+    Returns ``(recon, new_ef)`` — the server-side reconstructions (leaf
+    dtypes of ``cur``) and the updated residuals. Lossless codecs return
+    ``(cur, ef)`` untouched: the caller's pre-codec program is unchanged
+    and bit-identical.
+    """
+    if codec is None or not codec.lossy:
+        return cur, ef
+    base = jax.random.fold_in(jax.random.fold_in(key, _CODEC_SALT),
+                              round_id)
+
+    def one(gid, r, c, e):
+        delta = jax.tree.map(
+            lambda ci, ri: ci.astype(jnp.float32) - ri.astype(jnp.float32),
+            c, r)
+        if e is not None:
+            delta = jax.tree.map(jnp.add, delta, e)
+        sent = codec.roundtrip(jax.random.fold_in(base, gid), delta)
+        e_new = (jax.tree.map(jnp.subtract, delta, sent)
+                 if e is not None else None)
+        recon = jax.tree.map(
+            lambda ri, s: (ri.astype(jnp.float32) + s).astype(ri.dtype),
+            r, sent)
+        return recon, e_new
+
+    return jax.vmap(one)(ids, ref, cur, ef)

@@ -141,7 +141,8 @@ class ClientPopulation:
 
 def make_population_round(local_step_ids: Callable, sync_update: Callable,
                           q: int, *, sync_mode: str = "broadcast",
-                          staleness_decay: float = 0.0) -> Callable:
+                          staleness_decay: float = 0.0,
+                          codec=None) -> Callable:
     """Build the gather → scan-round → aggregate → scatter program.
 
     ``local_step_ids(states_c, server, batch, key, ids)`` is the per-step
@@ -155,17 +156,24 @@ def make_population_round(local_step_ids: Callable, sync_update: Callable,
     compile per cohort shape [C, ...]: q local steps on the C gathered
     states, a (staleness-weighted) cohort aggregate, the server update, and
     the write-back dictated by ``sync_mode``.
+
+    With a lossy ``codec`` (``repro.fed.compress.Codec``) the cohort's
+    client→server messages pass through the codec before aggregation (the
+    gathered pre-step state is the server-known reference) and the signature
+    grows the stacked error-feedback residual bank: ``round_fn(bank_states,
+    last_sync, ef_bank, server, ids, batches_q, key, round_id) ->
+    (bank_states, last_sync, ef_bank, server)`` (``ef_bank`` is None when
+    ``codec.error_feedback`` is off). A lossless codec (or None) keeps the
+    original signature and program, bit-identically.
     """
     if sync_mode not in SYNC_MODES:
         raise ValueError(f"sync_mode must be one of {SYNC_MODES}, "
                          f"got {sync_mode!r}")
     if q < 1:
         raise ValueError(f"round needs q >= 1 local steps, got {q}")
+    lossy = codec is not None and codec.lossy
 
-    def round_fn(bank_states, last_sync, server, ids, batches_q, key,
-                 round_id):
-        cur = gather(bank_states, ids)
-
+    def run_steps(cur, server, ids, batches_q, key):
         def body(carry, batch):
             st, srv = carry
             st, srv = local_step_ids(st, srv, batch, key, ids)
@@ -173,22 +181,49 @@ def make_population_round(local_step_ids: Callable, sync_update: Callable,
 
         (cur, server), _ = jax.lax.scan(body, (cur, server), batches_q,
                                         length=q)
+        return cur, server
+
+    def write_back(bank_states, last_sync, new_client, ids, round_id):
+        if sync_mode == "broadcast":
+            return (broadcast(bank_states, new_client),
+                    jnp.full_like(last_sync, round_id + 1))
+        c = ids.shape[0]
+        return (scatter(bank_states, ids,
+                        jax.tree.map(lambda v: jnp.broadcast_to(
+                            v[None], (c,) + v.shape), new_client)),
+                last_sync.at[ids].set(round_id + 1))
+
+    def round_fn(bank_states, last_sync, server, ids, batches_q, key,
+                 round_id):
+        cur, server = run_steps(gather(bank_states, ids), server, ids,
+                                batches_q, key)
         w = staleness_weights(last_sync, ids, round_id, staleness_decay)
         new_client, server = sync_update(server, weighted_mean(cur, w))
-        if sync_mode == "broadcast":
-            bank_states = broadcast(bank_states, new_client)
-            last_sync = jnp.full_like(last_sync, round_id + 1)
-        else:
-            c = ids.shape[0]
-            bank_states = scatter(
-                bank_states, ids,
-                jax.tree.map(lambda v: jnp.broadcast_to(v[None],
-                                                        (c,) + v.shape),
-                             new_client))
-            last_sync = last_sync.at[ids].set(round_id + 1)
+        bank_states, last_sync = write_back(bank_states, last_sync,
+                                            new_client, ids, round_id)
         return bank_states, last_sync, server
 
-    return round_fn
+    if not lossy:
+        return round_fn
+
+    from repro.fed.compress import client_messages
+
+    def round_fn_codec(bank_states, last_sync, ef_bank, server, ids,
+                       batches_q, key, round_id):
+        ref = gather(bank_states, ids)   # server-known dispatch states
+        cur, server = run_steps(ref, server, ids, batches_q, key)
+        ef_c = gather(ef_bank, ids) if ef_bank is not None else None
+        recon, ef_c = client_messages(codec, key, round_id, ids, ref, cur,
+                                      ef_c)
+        if ef_bank is not None:
+            ef_bank = scatter(ef_bank, ids, ef_c)
+        w = staleness_weights(last_sync, ids, round_id, staleness_decay)
+        new_client, server = sync_update(server, weighted_mean(recon, w))
+        bank_states, last_sync = write_back(bank_states, last_sync,
+                                            new_client, ids, round_id)
+        return bank_states, last_sync, ef_bank, server
+
+    return round_fn_codec
 
 
 # ------------------------------------------------------------ async execution
@@ -467,7 +502,7 @@ def delay_model_from_config(pcfg) -> DelayModel:
         sigma=pcfg.delay_sigma, table=table)
 
 
-def init_async_state(bank_states, server, n: int) -> dict:
+def init_async_state(bank_states, server, n: int, codec=None) -> dict:
     """Initial async-execution state around a freshly initialized bank.
 
     Keys:
@@ -482,9 +517,12 @@ def init_async_state(bank_states, server, n: int) -> dict:
                       model (last broadcast value; delay-adaptive scaling
                       interpolates toward it)
       server          the algorithm's server state
+      ef              [N, ...] f32 pytree — per-client error-feedback
+                      residuals; present only when ``codec`` is a stateful
+                      ``repro.fed.compress.Codec`` (lossy + error feedback)
     """
     uniform = jnp.full((n,), 1.0 / n, jnp.float32)
-    return {
+    state = {
         "bank": bank_states,
         # a real copy: pending must not alias the bank's buffers, the round
         # program donates both
@@ -496,6 +534,10 @@ def init_async_state(bank_states, server, n: int) -> dict:
         "anchor": weighted_mean(bank_states, uniform),
         "server": server,
     }
+    if codec is not None and codec.stateful:
+        from repro.fed.compress import zeros_ef
+        state["ef"] = zeros_ef(codec, bank_states)
+    return state
 
 
 def make_async_round(local_step_ids: Callable, sync_update: Callable,
@@ -504,7 +546,8 @@ def make_async_round(local_step_ids: Callable, sync_update: Callable,
                      max_staleness: float = float("inf"),
                      max_delay: int = 1,
                      delay_eta: float = 0.0,
-                     delay: Optional[DelayModel] = None) -> Callable:
+                     delay: Optional[DelayModel] = None,
+                     codec=None) -> Callable:
     """Build the asynchronous round program: arrivals → gate → server step →
     dispatch.
 
@@ -545,8 +588,19 @@ def make_async_round(local_step_ids: Callable, sync_update: Callable,
     ``arrived/accepted/dropped`` counts, ``mean_staleness``, ``eta_scale``,
     ``dispatched`` (the number of UNIQUE clients that started work this
     round — a duplicate cohort id occupies two slots but dispatches one
-    client), and the per-client ``staleness`` vector (int32 [N], the
-    accepted arrival's tau, -1 elsewhere) for histogramming.
+    client), ``synced`` (clients that received the new global model this
+    round — the downlink count for bytes accounting), and the per-client
+    ``staleness`` vector (int32 [N], the accepted arrival's tau, -1
+    elsewhere) for histogramming.
+
+    With a lossy ``codec`` (``repro.fed.compress.Codec``) the message a
+    dispatch parks in ``pending`` is the codec's reconstruction of the
+    client's update against its server-known dispatch state — what later
+    arrives and aggregates IS the compressed message — and the per-client
+    EF residuals ride in ``state["ef"]`` (:func:`init_async_state` with the
+    codec), updated only for the clients that actually dispatched: a cohort
+    slot masked out because its client is still in flight is a no-op on the
+    residual too.
     """
     if sync_mode not in SYNC_MODES:
         raise ValueError(f"sync_mode must be one of {SYNC_MODES}, "
@@ -561,12 +615,16 @@ def make_async_round(local_step_ids: Callable, sync_update: Callable,
                          "max_staleness=0 setting)")
     dm = delay if delay is not None else make_delay_model("uniform",
                                                           max_delay)
+    lossy = codec is not None and codec.lossy
+    if lossy:
+        from repro.fed.compress import client_messages
 
     def round_fn(state, ids, batches_q, key, round_id):
         bank, pending = state["bank"], state["pending"]
         last_sync, in_flight = state["last_sync"], state["in_flight"]
         disp, ret = state["dispatch_round"], state["return_round"]
         anchor, server = state["anchor"], state["server"]
+        ef = state.get("ef")
         n = last_sync.shape[0]
 
         # 1. arrivals + 2. bounded-staleness gate
@@ -608,6 +666,7 @@ def make_async_round(local_step_ids: Callable, sync_update: Callable,
         # 4. dispatch the cohort (in-flight members are ineligible)
         eligible = ~in_flight[ids]
         cur = gather(bank, ids)
+        ref = cur                     # server-known dispatch states
 
         def body(carry, batch):
             st, srv = carry
@@ -615,6 +674,16 @@ def make_async_round(local_step_ids: Callable, sync_update: Callable,
             return (st, srv), None
 
         (cur, server), _ = jax.lax.scan(body, (cur, server), batches_q)
+        if lossy:
+            # the message fixed at send time: what arrives (and aggregates)
+            # from `pending` is the codec's reconstruction; residuals update
+            # only where the dispatch actually happened
+            ef_c = gather(ef, ids) if ef is not None else None
+            recon, ef_c_new = client_messages(codec, key, round_id, ids,
+                                              ref, cur, ef_c)
+            cur = recon
+            if ef is not None:
+                ef = scatter_where(ef, ids, ef_c_new, eligible)
         delays = dm.schedule(key, round_id, n)[ids]
         pending = scatter_where(pending, ids, cur, eligible)
         # the bank row mirrors the client's own latest local state (same
@@ -633,12 +702,15 @@ def make_async_round(local_step_ids: Callable, sync_update: Callable,
         state = {"bank": bank, "pending": pending, "last_sync": last_sync,
                  "in_flight": in_flight, "dispatch_round": disp,
                  "return_round": ret, "anchor": anchor, "server": server}
+        if ef is not None:
+            state["ef"] = ef
         stats = {"arrived": arrived.sum().astype(jnp.int32),
                  "accepted": n_acc.astype(jnp.int32),
                  "dropped": (arrived.sum() - n_acc).astype(jnp.int32),
                  "mean_staleness": mean_tau,
                  "eta_scale": scale.astype(jnp.float32),
                  "dispatched": started.sum().astype(jnp.int32),
+                 "synced": sync_rows.sum().astype(jnp.int32),
                  "staleness": jnp.where(accept, tau.astype(jnp.int32), -1)}
         return state, stats
 

@@ -162,6 +162,8 @@ class FederatedTrainer:
             self.ctx = ModelCtx(rules=self.rules, kind="train")
         self.alg: Algorithm = make_algorithm(self.algorithm, self.fed,
                                              self.problem)
+        from repro.fed.compress import codec_from_config
+        self.codec = codec_from_config(self.fed)
         self.specs = model_specs(self.cfg)
         self._axes = axes_tree(self.specs)
         self.client_axes_names = (shlib.client_axes(mesh, self.cfg.fed_mode)
@@ -323,14 +325,28 @@ class FederatedTrainer:
         """Gather → fused scan round → aggregate → scatter over an n-client
         bank: ``round(bank, last_sync, server, ids, batches_q, key,
         round_id)``. Jits once per cohort shape [C, ...]; compute is O(C),
-        the bank writes O(n) memory bandwidth only."""
+        the bank writes O(n) memory bandwidth only.
+
+        With a lossy ``FedConfig.codec`` the signature grows the stacked
+        error-feedback residual bank (``repro.fed.population.
+        make_population_round``): ``round(bank, last_sync, ef_bank, server,
+        ids, batches_q, key, round_id)`` — build ``ef_bank`` with
+        :meth:`init_ef_bank`."""
         from repro.fed.population import make_population_round
         def sync_update(server, avg):
             return self.alg.sync_update(server, avg, n)
         return make_population_round(
             self.cohort_local_step_fn(n), sync_update,
             q if q is not None else self.fed.q,
-            sync_mode=sync_mode, staleness_decay=staleness_decay)
+            sync_mode=sync_mode, staleness_decay=staleness_decay,
+            codec=self.codec)
+
+    def init_ef_bank(self, n: int):
+        """The stacked [n, ...] error-feedback residual bank the lossy
+        population/async round programs carry (zeros; None when
+        ``FedConfig.codec`` keeps no per-client state)."""
+        from repro.fed.compress import zeros_ef
+        return zeros_ef(self.codec, self.abstract_population_states(n))
 
     def abstract_population_states(self, n: int):
         p = abstract_params(self.specs, self.cfg.dtype)
@@ -344,7 +360,7 @@ class FederatedTrainer:
         that ``async_population_round_fn`` advances."""
         from repro.fed.population import init_async_state
         bank, _, server = self.init_population_states(key, batch, n)
-        return init_async_state(bank, server, n)
+        return init_async_state(bank, server, n, codec=self.codec)
 
     def async_population_round_fn(self, n: int, q: Optional[int] = None, *,
                                   sync_mode: str = "broadcast",
@@ -370,7 +386,7 @@ class FederatedTrainer:
             q if q is not None else self.fed.q,
             sync_mode=sync_mode, staleness_decay=staleness_decay,
             max_staleness=max_staleness, max_delay=max_delay,
-            delay_eta=delay_eta, delay=delay_model)
+            delay_eta=delay_eta, delay=delay_model, codec=self.codec)
 
     def population_state_shardings(self, n: int):
         """Bank shardings: the population axis takes the client mesh axes
@@ -428,6 +444,11 @@ class FederatedTrainer:
                                                s.dtype), batch_specs)
                 if batch_specs is not None else None)
             bsh = self.batch_shardings(round_specs, round_axes)
+            # lossy codecs carry the EF residual bank alongside the states;
+            # it shares the bank's layout (same structure/shapes, f32)
+            efsh = None
+            if self.codec.stateful and population_n is not None:
+                efsh = self.population_state_shardings(population_n)
             if which == "round":
                 fn = self.round_step_fn()
                 in_sh = (ss, sv, bsh, rep)
@@ -437,8 +458,12 @@ class FederatedTrainer:
                     raise ValueError("population_round needs population_n")
                 fn = self.population_round_fn(population_n)
                 pss = self.population_state_shardings(population_n)
-                in_sh = (pss, rep, sv, rep, bsh, rep, rep)
-                out_sh = (pss, rep, sv)
+                if self.codec.lossy:
+                    in_sh = (pss, rep, efsh, sv, rep, bsh, rep, rep)
+                    out_sh = (pss, rep, efsh, sv)
+                else:
+                    in_sh = (pss, rep, sv, rep, bsh, rep, rep)
+                    out_sh = (pss, rep, sv)
             else:
                 if population_n is None:
                     raise ValueError("async_population_round needs "
@@ -455,13 +480,21 @@ class FederatedTrainer:
                          "in_flight": rep, "dispatch_round": rep,
                          "return_round": rep, "anchor": one_sh,
                          "server": sv}
+                if self.codec.stateful:
+                    st_sh["ef"] = efsh
                 stats_sh = None if self.mesh is None else {
                     k: rep for k in ("arrived", "accepted", "dropped",
                                      "mean_staleness", "eta_scale",
-                                     "dispatched", "staleness")}
+                                     "dispatched", "synced", "staleness")}
                 in_sh = (st_sh, rep, bsh, rep, rep)
                 out_sh = (st_sh, stats_sh)
             dn = (0,) if donate else ()
+            if (donate and which == "population_round"
+                    and self.codec.stateful):
+                # the EF residual bank is input 2 and output 2 of the lossy
+                # round — as bank-sized as the state bank; without donation
+                # every round would allocate a second [N, ...] f32 copy
+                dn = (0, 2)
         else:
             raise ValueError(which)
         if self.mesh is None:

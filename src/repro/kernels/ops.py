@@ -17,6 +17,8 @@ from repro.core.tree_util import tree_pack, tree_unpack
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.mamba_scan import mamba_scan as _mamba
+from repro.kernels.quantize import dequantize as _deq
+from repro.kernels.quantize import quantize_stoch as _quant
 from repro.kernels.storm_update import adafbio_update as _upd
 from repro.kernels.storm_update import storm_update as _storm
 
@@ -49,6 +51,25 @@ def adafbio_update(p, w, a, lr_eta, rho, *, use_pallas=False, interpret=True):
     if use_pallas:
         return _upd(p, w, a, lr_eta, rho, interpret=interpret)
     return ref.adafbio_update_ref(p, w, a, lr_eta, rho)
+
+
+@functools.partial(jax.jit, static_argnames=("qmax", "use_pallas",
+                                             "interpret"))
+def quantize_stoch(x, u, scale, *, qmax=127, use_pallas=False,
+                   interpret=True):
+    """Stochastic uniform quantization of a 1-D f32 buffer to int8 levels in
+    [-qmax, qmax]; ``u`` is uniform[0, 1) rounding noise."""
+    if use_pallas:
+        return _quant(x, u, scale, qmax, interpret=interpret)
+    return ref.quantize_stoch_ref(x, u, scale, qmax)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def dequantize(q, scale, *, use_pallas=False, interpret=True):
+    """int8 levels * scale back to a 1-D f32 buffer."""
+    if use_pallas:
+        return _deq(q, scale, interpret=interpret)
+    return ref.dequantize_ref(q, scale)
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))

@@ -1,0 +1,86 @@
+"""Pallas TPU stochastic uniform quantize/dequantize (comms compression).
+
+The communication-compression codecs (``repro.fed.compress``) ship client
+updates as b-bit integers + one f32 scale per tensor. The quantize leg is a
+memory-bound elementwise pass (read f32, write int8 — a 4x HBM write saving
+on TPU only if the rounding happens in-register); the dequantize leg is the
+int8-read mirror. Both follow the repo's 1-D pad-to-block idiom
+(``storm_update.py``): lane-aligned blocks over the flattened tensor,
+zero-padded up to a block multiple and sliced back, so any buffer length
+works.
+
+Stochastic rounding noise is an explicit uniform[0, 1) input (drawn with
+``jax.random`` outside the kernel) rather than the in-kernel TPU PRNG, so
+the kernel is a deterministic function of its inputs and bit-matches the
+``ref.quantize_stoch_ref`` oracle everywhere — including interpret mode on
+CPU, where these are validated (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.storm_update import _pad_to_block, _padded
+
+
+def _quantize_kernel(x_ref, u_ref, s_ref, out_ref, *, qmax: int):
+    scale = s_ref[0]
+    x = x_ref[...].astype(jnp.float32)
+    u = u_ref[...].astype(jnp.float32)
+    q = jnp.floor(x / scale + u)
+    out_ref[...] = jnp.clip(q, -qmax, qmax).astype(jnp.int8)
+
+
+def quantize_stoch(x: jax.Array, u: jax.Array, scale, qmax: int, *,
+                   block: int = 65536, interpret: bool = False) -> jax.Array:
+    """q = clip(floor(x / scale + u), -qmax, qmax) as int8, single pass.
+
+    ``x``/``u`` are 1-D (any length; non-divisible lengths are zero-padded to
+    a lane-aligned block multiple and sliced back), ``u`` is uniform[0, 1)
+    rounding noise, ``scale`` a positive scalar. Unbiased:
+    E_u[q * scale] = x whenever |x| <= qmax * scale.
+    """
+    (n,) = x.shape
+    blk, padded = _pad_to_block(n, block)
+    s = jnp.asarray([scale], jnp.float32)
+    kernel = functools.partial(_quantize_kernel, qmax=qmax)
+    out = pl.pallas_call(
+        kernel,
+        grid=(padded // blk,),
+        in_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((padded,), jnp.int8),
+        interpret=interpret,
+    )(_padded(x, padded), _padded(u, padded), s)
+    return out if padded == n else out[:n]
+
+
+def _dequantize_kernel(q_ref, s_ref, out_ref):
+    out_ref[...] = q_ref[...].astype(jnp.float32) * s_ref[0]
+
+
+def dequantize(q: jax.Array, scale, *, block: int = 65536,
+               interpret: bool = False) -> jax.Array:
+    """x = q * scale back to f32, single pass over a 1-D int8 buffer."""
+    (n,) = q.shape
+    blk, padded = _pad_to_block(n, block)
+    s = jnp.asarray([scale], jnp.float32)
+    out = pl.pallas_call(
+        _dequantize_kernel,
+        grid=(padded // blk,),
+        in_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((padded,), jnp.float32),
+        interpret=interpret,
+    )(_padded(q, padded), s)
+    return out if padded == n else out[:n]

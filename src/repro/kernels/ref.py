@@ -48,6 +48,21 @@ def adafbio_update_ref(p: jax.Array, w: jax.Array, a: jax.Array,
     return (p.astype(f) - lr_eta * upd).astype(p.dtype)
 
 
+def quantize_stoch_ref(x: jax.Array, u: jax.Array, scale,
+                       qmax: int) -> jax.Array:
+    """Stochastic uniform quantization: q = clip(floor(x/scale + u), ±qmax)
+    as int8; ``u`` is uniform[0, 1) rounding noise. Unbiased:
+    E_u[q * scale] = x whenever |x| <= qmax * scale."""
+    f = jnp.float32
+    q = jnp.floor(x.astype(f) / scale + u.astype(f))
+    return jnp.clip(q, -qmax, qmax).astype(jnp.int8)
+
+
+def dequantize_ref(q: jax.Array, scale) -> jax.Array:
+    """x = q * scale back to f32."""
+    return q.astype(jnp.float32) * scale
+
+
 def quant_decode_ref(q: jax.Array, k8: jax.Array, k_scale: jax.Array,
                      v8: jax.Array, v_scale: jax.Array, pos) -> jax.Array:
     """Oracle for the fused-dequant decode kernel. q: [B,H,Dh];

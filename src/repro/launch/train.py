@@ -87,6 +87,21 @@ def main():
                          "(rounds)")
     ap.add_argument("--delay-sigma", type=float, default=0.5,
                     help="lognormal delay model: log-latency scale")
+    ap.add_argument("--codec", default="none",
+                    choices=["none", "int8", "topk"],
+                    help="client→server update codec (population modes): "
+                         "none (full precision), int8 (stochastic uniform "
+                         "quantization), topk (magnitude sparsification "
+                         "with error feedback); docs/compression.md")
+    ap.add_argument("--codec-bits", type=int, default=8,
+                    help="int8 codec quantization bit width (2..8; levels "
+                         "shipped bit-packed, one f32 scale per tensor)")
+    ap.add_argument("--topk-frac", type=float, default=0.1,
+                    help="topk codec: fraction of each tensor's entries "
+                         "transmitted (1.0 matches none to float rounding)")
+    ap.add_argument("--ef", default="on", choices=["on", "off"],
+                    help="error feedback: carry per-client compression "
+                         "residuals into the next transmission")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -97,7 +112,15 @@ def main():
             "prod-multi": lambda: make_production_mesh(multi_pod=True)}[args.mesh]
     mesh = mesh() if callable(mesh) else mesh
 
-    fed = FedConfig(q=args.q, neumann_k=args.neumann_k, lr_x=1e-2, lr_y=1e-1)
+    fed = FedConfig(q=args.q, neumann_k=args.neumann_k, lr_x=1e-2, lr_y=1e-1,
+                    codec=args.codec, codec_bits=args.codec_bits,
+                    topk_frac=args.topk_frac,
+                    error_feedback=args.ef == "on")
+    if args.codec != "none" and not args.population:
+        raise SystemExit("--codec int8/topk compresses the bank round "
+                         "programs: run with --population N (the EF "
+                         "residuals live in the population bank, "
+                         "docs/compression.md)")
     shape = ShapeConfig("cli", args.seq, args.batch, "train")
     tr = FederatedTrainer(cfg, fed, shape, mesh=mesh,
                           algorithm=args.algorithm)
@@ -183,13 +206,22 @@ def run_population(args, cfg, fed, shape, tr: FederatedTrainer, key):
                          "execution")
     bank, last_sync, server = tr.init_population_states(
         key, make_client_batch(data, cfg, specs_n, 0), n)
+    lossy = tr.codec.lossy
+    ef = tr.init_ef_bank(n)          # None unless the codec keeps EF state
     start = 0
     if args.resume and args.ckpt:
-        (bank, last_sync, server), start = load_checkpoint(
-            args.ckpt, (bank, last_sync, server))
+        tmpl = (bank, last_sync, ef, server) if lossy else (bank, last_sync,
+                                                            server)
+        loaded, start = load_checkpoint(args.ckpt, tmpl)
+        if lossy:
+            bank, last_sync, ef, server = loaded
+        else:
+            bank, last_sync, server = loaded
         print(f"resumed population run from step {start}")
     round_fn = jax.jit(tr.population_round_fn(n))
     ev = jax.jit(tr.eval_fn())
+    msg_b, down_b = wire_costs(tr, n)
+    bytes_up = bytes_down = 0
 
     start_round = start // fed.q
     n_rounds = max(args.steps // fed.q, start_round + 1)
@@ -208,21 +240,43 @@ def run_population(args, cfg, fed, shape, tr: FederatedTrainer, key):
                                                 ids)
                               for j in range(fed.q)])
         r0 = time.time()
-        bank, last_sync, server = round_fn(bank, last_sync, server, ids,
-                                           batch_q, key, jnp.int32(r))
+        if lossy:
+            bank, last_sync, ef, server = round_fn(
+                bank, last_sync, ef, server, ids, batch_q, key,
+                jnp.int32(r))
+        else:
+            bank, last_sync, server = round_fn(bank, last_sync, server, ids,
+                                               batch_q, key, jnp.int32(r))
         jax.block_until_ready(bank)
         dt = time.time() - r0
+        # make_population_round closes every round with one sync: the cohort
+        # uploads one codec message each, every bank row downloads the
+        # broadcast (sync_mode="broadcast" here)
+        bytes_up += c * msg_b
+        bytes_down += n * down_b
         if r % max(args.eval_every // fed.q, 1) == 0 or r == n_rounds - 1:
             last = jax.tree.map(lambda x: x[-1], batch_q)
             loss = float(ev(bank, last))
             print(f"round {r:4d} (step {t + fed.q - 1:5d})  "
                   f"f(x̄,ȳ) = {loss:.4f}  round={dt*1e3:.1f}ms  "
+                  f"up={bytes_up/1e6:.2f}MB down={bytes_down/1e6:.2f}MB  "
                   f"cohort={np.asarray(ids)[:8].tolist()}...  "
                   f"({time.time()-t0:.1f}s)", flush=True)
+    print(f"wire totals ({tr.codec.name}): bytes_up={bytes_up} "
+          f"bytes_down={bytes_down}", flush=True)
     if args.ckpt:
-        save_checkpoint(args.ckpt, (bank, last_sync, server),
-                        n_rounds * fed.q)
+        state = (bank, last_sync, ef, server) if lossy else (bank, last_sync,
+                                                             server)
+        save_checkpoint(args.ckpt, state, n_rounds * fed.q)
         print(f"saved population checkpoint to {args.ckpt}")
+
+
+def wire_costs(tr: FederatedTrainer, n: int):
+    """(uplink bytes per client→server message, downlink bytes per
+    receiving client) for one client state of this trainer — the shared
+    pricing helper of repro.fed.compress (docs/compression.md)."""
+    from repro.fed.compress import wire_costs as _wire
+    return _wire(tr.codec, tr.abstract_population_states(n))
 
 
 def make_cli_delay_model(args, n: int):
@@ -285,6 +339,8 @@ def run_population_async(args, cfg, fed, tr: FederatedTrainer, key, data,
                if args.delay_model == "tiers" else None)
     hist = np.zeros(0, np.int64)
     hist_by_tier = {}
+    msg_b, down_b = wire_costs(tr, n)
+    bytes_up = bytes_down = 0
     t0 = time.time()
     for r in range(start_round, n_rounds):
         t = r * fed.q
@@ -303,6 +359,10 @@ def run_population_async(args, cfg, fed, tr: FederatedTrainer, key, data,
         if tier_of is not None:
             accum_tier_hists(hist_by_tier, stale, tier_of,
                              len(dm.tier_fracs))
+        # uplink per arrival (dropped ones shipped before the gate),
+        # downlink per row that received the new global model
+        bytes_up += int(stats["arrived"]) * msg_b
+        bytes_down += int(stats["synced"]) * down_b
         if r % max(args.eval_every // fed.q, 1) == 0 or r == n_rounds - 1:
             last = jax.tree.map(lambda x: x[-1], batch_q)
             loss = float(ev(state["bank"], last))
@@ -312,7 +372,10 @@ def run_population_async(args, cfg, fed, tr: FederatedTrainer, key, data,
                   f"dropped={int(stats['dropped'])} "
                   f"tau={float(stats['mean_staleness']):.2f} "
                   f"eta_scale={float(stats['eta_scale']):.3f}  "
+                  f"up={bytes_up/1e6:.2f}MB down={bytes_down/1e6:.2f}MB  "
                   f"({time.time()-t0:.1f}s)", flush=True)
+    print(f"wire totals ({tr.codec.name}): bytes_up={bytes_up} "
+          f"bytes_down={bytes_down}", flush=True)
     print("accepted-staleness histogram (rounds): "
           + " ".join(f"{s}:{int(k)}" for s, k in enumerate(hist) if k),
           flush=True)

@@ -30,8 +30,16 @@ Three participation regimes:
 Tracks the paper's cost metrics exactly: #samples consumed (q(K+2) at init,
 K+2 per local step; async scales each round's increment by the fraction of
 cohort slots that actually dispatched — masked in-flight slots discard
-their compute and must not count) and #communication rounds (1 per sync;
-async counts the rounds in which an aggregation actually happened)."""
+their compute and must not count), #communication rounds (1 per sync;
+async counts the rounds in which an aggregation actually happened), and —
+new with the compression subsystem (``repro.fed.compress``) — the BYTES on
+the wire: ``bytes_up`` accrues one codec-priced message per transmitting
+client at each aggregation (async: per arrival, dropped arrivals included
+— they were shipped before the gate rejected them), ``bytes_down`` one
+full-precision client state per receiver of each server push (broadcast:
+everyone; participants: the cohort; async: the ``synced`` rows). The
+per-codec formulas are ``Codec.message_bytes`` / ``state_bytes``
+(docs/compression.md); all four engines use the same convention."""
 from __future__ import annotations
 
 import dataclasses
@@ -63,6 +71,11 @@ class RunResult:
     # land in FedDriver.round_seconds so eager-vs-scan comparisons aren't
     # skewed by compile time
     compile_seconds: float = 0.0
+    # cumulative wire bytes at each recorded step (repro.fed.compress):
+    # uplink = codec-priced client→server messages, downlink = full-
+    # precision server→client pushes
+    bytes_up: List[int] = dataclasses.field(default_factory=list)
+    bytes_down: List[int] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -103,6 +116,14 @@ class FedDriver:
         # steady-state per-round wall-clock; the first (compile-including)
         # round is reported separately as RunResult.compile_seconds
         self.round_seconds: List[float] = []
+
+    @property
+    def codec(self):
+        """The update codec the run's FedConfig describes — derived from
+        ``alg.fed`` on demand (benchmarks reassign fed/alg after
+        construction, so a cached copy could go stale)."""
+        from repro.fed.compress import codec_from_config
+        return codec_from_config(self.alg.fed)
 
     def _batches(self, step: int):
         per_client = [self.batch_fn(m, step) for m in range(self.n_clients)]
@@ -151,6 +172,23 @@ class FedDriver:
         new_client, new_server = self.alg.sync_update(server, avg, m)
         return tree_bcast_axis0(new_client, m), new_server
 
+    def _sync_body_codec(self, states, server, active, ref, ef, key,
+                         round_id):
+        """The codec-aware sync of the eager/scan engines: client→server
+        messages are priced against ``ref`` (the last broadcast — the
+        server-known dispatch state, shared by every client), EF residuals
+        hold for non-transmitting (inactive) clients, and the aggregation
+        runs over the server-side reconstructions. Returns ``(states,
+        server, ref, ef)`` with the fresh broadcast as the next ``ref``."""
+        from repro.fed.compress import client_messages, mask_rows
+        recon, ef_new = client_messages(self.codec, key, round_id,
+                                        jnp.arange(self.n_clients), ref,
+                                        states, ef)
+        if ef is not None:
+            ef_new = mask_rows(active, ef_new, ef)
+        new_states, new_server = self._sync_body(recon, server, active)
+        return new_states, new_server, new_states, ef_new
+
     def _setup_sampler(self, key):
         """Resolve the run's CohortSampler from the run key (so different
         seeds draw different cohorts — the seed behaviour used a constant
@@ -178,15 +216,24 @@ class FedDriver:
             return jnp.ones((self.n_clients,), bool)
         return self._run_sampler.mask(round_id)
 
-    def _record(self, res: RunResult, states, step, samples, comms):
+    def _record(self, res: RunResult, states, step, samples, comms,
+                bytes_up: int = 0, bytes_down: int = 0):
         avg = tree_mean_axis0(states)
         res.steps.append(step)
         res.samples.append(samples)
         res.comms.append(comms)
+        res.bytes_up.append(int(bytes_up))
+        res.bytes_down.append(int(bytes_down))
         res.metric.append(float(self.metric_fn(avg["x"], avg["y"]))
                           if self.metric_fn else float("nan"))
         res.grad_norm.append(float(self.grad_norm_fn(avg["x"], avg["y"]))
                              if self.grad_norm_fn else float("nan"))
+
+    def _wire_costs(self, states):
+        """(per-message uplink bytes, per-receiver downlink bytes) for one
+        client's state shape — ``states`` carries a leading client axis."""
+        from repro.fed.compress import wire_costs
+        return wire_costs(self.codec, states)
 
     # -------------------------------------------------- run loops
 
@@ -209,9 +256,17 @@ class FedDriver:
         states, server = self._init_run(key)
         samples = fed.q * (fed.neumann_k + 2)
         comms = 0
+        msg_b, down_b = self._wire_costs(states)
+        bytes_up = bytes_down = 0
+        lossy = self.codec.lossy
 
         local = jax.jit(self._local_body)
         sync = jax.jit(self._sync_body)
+        if lossy:
+            from repro.fed.compress import zeros_ef
+            sync_c = jax.jit(self._sync_body_codec)
+            ref = states                      # the server-known init
+            ef = zeros_ef(self.codec, states)
 
         res = RunResult(self.alg.name, [], [], [], [], [], 0.0)
         t0 = time.time()
@@ -225,9 +280,16 @@ class FedDriver:
                     ce = consensus_error(states)
                     self.consensus_log.append(
                         {"step": t, **{k: float(v) for k, v in ce.items()}})
-                states, server = sync(states, server,
-                                      self._active_mask(rnd - 1))
+                active_prev = self._active_mask(rnd - 1)
+                if lossy:
+                    states, server, ref, ef = sync_c(
+                        states, server, active_prev, ref, ef, key,
+                        jnp.int32(rnd - 1))
+                else:
+                    states, server = sync(states, server, active_prev)
                 comms += 1
+                bytes_up += int(active_prev.sum()) * msg_b
+                bytes_down += self.n_clients * down_b
             states, server = local(states, server, self._batches(t), key,
                                    active)
             samples += fed.neumann_k + 2
@@ -237,7 +299,8 @@ class FedDriver:
                 self._log_round(res, time.time() - r0)
                 r0 = time.time()
             if t % eval_every == 0 or t == total_steps - 1:
-                self._record(res, states, t, samples, comms)
+                self._record(res, states, t, samples, comms, bytes_up,
+                             bytes_down)
         res.seconds = time.time() - t0
         res.final_avg_state = tree_mean_axis0(states)
         return res
@@ -260,6 +323,13 @@ class FedDriver:
         states, server = self._init_run(key)
         samples = fed.q * (fed.neumann_k + 2)
         comms = 0
+        msg_b, down_b = self._wire_costs(states)
+        bytes_up = bytes_down = 0
+        lossy = self.codec.lossy
+        if lossy:
+            from repro.fed.compress import zeros_ef
+            ref = states
+            ef = zeros_ef(self.codec, states)
 
         @functools.partial(jax.jit, static_argnames=("n_steps", "sync_first"))
         def segment(states, server, batches_q, kk, active_prev, active, *,
@@ -270,6 +340,23 @@ class FedDriver:
                                                            active)
             return make_round_step(local, lambda st, srv: (st, srv),
                                    n_steps)(states, server, batches_q, kk)
+
+        @functools.partial(jax.jit, static_argnames=("n_steps", "sync_first"))
+        def segment_codec(states, server, ref, ef, batches_q, kk,
+                          active_prev, active, round_id, *, n_steps,
+                          sync_first):
+            # the sync closing round r-1 folds round_id - 1 — the same RNG
+            # stream the eager engine's codec sync uses, so eager and scan
+            # stay parity-comparable under stochastic codecs too
+            if sync_first:
+                states, server, ref, ef = self._sync_body_codec(
+                    states, server, active_prev, ref, ef, kk, round_id - 1)
+            local = lambda st, srv, b, k: self._local_body(st, srv, b, k,
+                                                           active)
+            states, server = make_round_step(
+                local, lambda st, srv: (st, srv), n_steps)(states, server,
+                                                           batches_q, kk)
+            return states, server, ref, ef
 
         full, rem = divmod(total_steps, q)
         lengths = [q] * full + ([rem] if rem else [])
@@ -285,17 +372,25 @@ class FedDriver:
             # current mask instead of computing an unused _active_mask(-1)
             active_prev = self._active_mask(r - 1) if r > 0 else active
             r0 = time.time()
-            states, server = segment(
-                states, server, batches_q, key, active_prev, active,
-                n_steps=n_steps, sync_first=r > 0)
+            if lossy:
+                states, server, ref, ef = segment_codec(
+                    states, server, ref, ef, batches_q, key, active_prev,
+                    active, jnp.int32(r), n_steps=n_steps, sync_first=r > 0)
+            else:
+                states, server = segment(
+                    states, server, batches_q, key, active_prev, active,
+                    n_steps=n_steps, sync_first=r > 0)
             jax.block_until_ready(states)
             self._log_round(res, time.time() - r0)
             t += n_steps
             samples += n_steps * (fed.neumann_k + 2)
             if r > 0:
                 comms += 1
+                bytes_up += int(active_prev.sum()) * msg_b
+                bytes_down += self.n_clients * down_b
             if r % eval_rounds == 0 or r == len(lengths) - 1:
-                self._record(res, states, t - 1, samples, comms)
+                self._record(res, states, t - 1, samples, comms, bytes_up,
+                             bytes_down)
         res.seconds = time.time() - t0
         res.final_avg_state = tree_mean_axis0(states)
         return res
@@ -376,10 +471,15 @@ class FedDriver:
         bank, last_sync = pop.states, pop.last_sync
         samples = fed.q * (fed.neumann_k + 2)
         comms = 0
+        msg_b, down_b = self._wire_costs(bank)
+        bytes_up = bytes_down = 0
+        lossy = self.codec.lossy
+        from repro.fed.compress import client_messages, zeros_ef
+        ef = zeros_ef(self.codec, bank)
 
         @functools.partial(jax.jit, static_argnames=("n_steps", "sync_first"))
-        def segment(bank, last_sync, server, prev_ids, ids, batches_q, kk,
-                    round_id, *, n_steps, sync_first):
+        def segment(bank, last_sync, ef, server, prev_ids, ids, batches_q,
+                    kk, round_id, *, n_steps, sync_first):
             if sync_first:
                 # the sync at the START of round r closes round r-1; a client
                 # stamped at the previous sync (last_sync == r-1) is fully
@@ -399,6 +499,7 @@ class FedDriver:
                         new_client))
                     last_sync = last_sync.at[prev_ids].set(round_id)
             cur = gather(bank, ids)
+            ref = cur                 # server-known dispatch states
             local = self._cohort_local_step(n)
 
             def body(carry, batch):
@@ -408,7 +509,16 @@ class FedDriver:
 
             (cur, server), _ = jax.lax.scan(body, (cur, server), batches_q,
                                             length=n_steps)
-            return scatter(bank, ids, cur), last_sync, server
+            if lossy:
+                # the cohort ships its update through the codec when the
+                # round ends; the bank row becomes the server-side
+                # reconstruction, which the NEXT round's sync aggregates
+                ef_c = gather(ef, ids) if ef is not None else None
+                cur, ef_c = client_messages(self.codec, kk, round_id, ids,
+                                            ref, cur, ef_c)
+                if ef is not None:
+                    ef = scatter(ef, ids, ef_c)
+            return scatter(bank, ids, cur), last_sync, ef, server
 
         full, rem = divmod(total_steps, q)
         lengths = [q] * full + ([rem] if rem else [])
@@ -422,8 +532,8 @@ class FedDriver:
             batches_q = tree_stack([self._cohort_batches(ids, t + j)
                                     for j in range(n_steps)])
             r0 = time.time()
-            bank, last_sync, server = segment(
-                bank, last_sync, server,
+            bank, last_sync, ef, server = segment(
+                bank, last_sync, ef, server,
                 prev_ids if prev_ids is not None else ids, ids, batches_q,
                 key, jnp.int32(r), n_steps=n_steps, sync_first=r > 0)
             jax.block_until_ready(bank)
@@ -433,8 +543,12 @@ class FedDriver:
             samples += n_steps * (fed.neumann_k + 2)
             if r > 0:
                 comms += 1
+                bytes_up += ids.shape[0] * msg_b
+                bytes_down += (n if pcfg.sync_mode == "broadcast"
+                               else ids.shape[0]) * down_b
             if r % eval_rounds == 0 or r == len(lengths) - 1:
-                self._record(res, bank, t - 1, samples, comms)
+                self._record(res, bank, t - 1, samples, comms, bytes_up,
+                             bytes_down)
         res.seconds = time.time() - t0
         res.final_avg_state = tree_mean_axis0(bank)
         return res
@@ -475,9 +589,11 @@ class FedDriver:
         # the round program as constants (same key every round below)
         dm = delay_model_from_config(pcfg).resolve(key, n)
         pop, server = self._init_population(key)
-        state = init_async_state(pop.states, server, n)
+        state = init_async_state(pop.states, server, n, codec=self.codec)
         samples = float(fed.q * (fed.neumann_k + 2))
         comms = 0
+        msg_b, down_b = self._wire_costs(pop.states)
+        bytes_up = bytes_down = 0
         self.staleness_log: List[Dict[str, float]] = []
         self.staleness_hist = np.zeros(0, np.int64)
         self.staleness_hist_by_tier: Dict[int, Any] = {}
@@ -490,7 +606,7 @@ class FedDriver:
             q, sync_mode=pcfg.sync_mode,
             staleness_decay=pcfg.staleness_decay,
             max_staleness=pcfg.max_staleness, max_delay=pcfg.max_delay,
-            delay_eta=pcfg.delay_eta, delay=dm))
+            delay_eta=pcfg.delay_eta, delay=dm, codec=self.codec))
 
         full, rem = divmod(total_steps, q)
         lengths = [q] * full + ([rem] if rem else [])
@@ -520,10 +636,16 @@ class FedDriver:
                 "accepted": int(stats["accepted"]),
                 "dropped": int(stats["dropped"]),
                 "dispatched": int(stats["dispatched"]),
+                "synced": int(stats["synced"]),
                 "mean_staleness": float(stats["mean_staleness"]),
                 "eta_scale": float(stats["eta_scale"]),
             })
             comms += int(int(stats["accepted"]) > 0)
+            # uplink: every arrival shipped one codec message (dropped ones
+            # too — the gate rejects them AFTER transmission); downlink:
+            # the rows that received the new global model this round
+            bytes_up += int(stats["arrived"]) * msg_b
+            bytes_down += int(stats["synced"]) * down_b
             t += n_steps
             # only the dispatched fraction of the cohort computed this
             # round (in-flight slots are masked out and discarded) — the
@@ -532,7 +654,8 @@ class FedDriver:
                         * int(stats["dispatched"]) / c)
             if r % eval_rounds == 0 or r == len(lengths) - 1:
                 self._record(res, state["bank"], t - 1,
-                             int(round(samples)), comms)
+                             int(round(samples)), comms, bytes_up,
+                             bytes_down)
         res.seconds = time.time() - t0
         res.final_avg_state = tree_mean_axis0(state["bank"])
         return res

@@ -4,6 +4,14 @@ import os
 # repro.launch.dryrun). Force deterministic, quiet JAX.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
+# ... except that the host platform is split into TWO devices so the
+# mesh-sharded paths (tests/test_mesh_async.py) run on a real multi-device
+# mesh. Single-device tests are unaffected: default placement stays device 0.
+if "xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=2")
+
 import jax  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)

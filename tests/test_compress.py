@@ -1,0 +1,344 @@
+"""Communication compression subsystem (repro.fed.compress): codec
+semantics, error-feedback telescoping, four-engine parity (codec="none"
+bit-identical, topk at 100% density ≡ none), and bytes accounting against
+the documented per-codec formulas."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import FedConfig, PopulationConfig
+from repro.core.baselines import make_algorithm
+from repro.fed.compress import (Codec, client_messages, codec_from_config,
+                                make_codec, mask_rows, state_bytes,
+                                zeros_ef)
+from repro.fed.population import init_async_state, make_async_round
+from repro.fed.sampling import UniformSampler
+from tests.test_system import _quad_driver
+
+INF = float("inf")
+
+
+def _tree(key, dtype=jnp.float32, c=3):
+    """Batched [c, ...] pytree with odd leaf sizes."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"x": jax.random.normal(k1, (c, 13), jnp.float32).astype(dtype),
+            "y": {"w": jax.random.normal(k2, (c, 5, 7), jnp.float32)
+                  .astype(dtype),
+                  "b": jax.random.normal(k3, (c, 3), jnp.float32)
+                  .astype(dtype)}}
+
+
+# ------------------------------------------------------------ construction
+
+def test_codec_validation():
+    with pytest.raises(ValueError):
+        make_codec("gzip")
+    with pytest.raises(ValueError):
+        make_codec("int8", bits=1)
+    with pytest.raises(ValueError):
+        make_codec("int8", bits=9)
+    with pytest.raises(ValueError):
+        make_codec("topk", topk_frac=0.0)
+    with pytest.raises(ValueError):
+        make_codec("topk", topk_frac=1.5)
+    with pytest.raises(ValueError):
+        FedConfig(codec="lz4")
+    with pytest.raises(ValueError):
+        FedConfig(codec="topk", topk_frac=-0.1)
+    assert not make_codec("none").lossy
+    assert make_codec("topk").stateful
+    assert not make_codec("int8", error_feedback=False).stateful
+    assert codec_from_config(FedConfig(codec="int8", codec_bits=4)).qmax == 7
+
+
+# ------------------------------------------------------------ roundtrips
+
+@pytest.mark.parametrize("bits", [8, 4, 2])
+def test_int8_roundtrip_error_bound(bits):
+    """|decode(encode(x)) - x| <= scale = max|x| / (2^(b-1) - 1), per leaf
+    per client."""
+    cod = make_codec("int8", bits=bits)
+    tree = _tree(jax.random.PRNGKey(0))
+    one = jax.tree.map(lambda a: a[0], tree)
+    rt = cod.roundtrip(jax.random.PRNGKey(1), one)
+    for got, x in zip(jax.tree.leaves(rt), jax.tree.leaves(one)):
+        scale = float(jnp.max(jnp.abs(x))) / cod.qmax
+        assert np.max(np.abs(np.asarray(got) - np.asarray(x))) <= scale + 1e-6
+
+
+def test_int8_roundtrip_unbiased():
+    """Stochastic rounding is unbiased: the mean over many independent noise
+    draws converges to x (tolerance ~ scale / sqrt(reps))."""
+    cod = make_codec("int8")
+    x = {"x": jax.random.normal(jax.random.PRNGKey(2), (257,))}
+    reps = 512
+    rts = jax.vmap(lambda k: cod.roundtrip(k, x)["x"])(
+        jax.random.split(jax.random.PRNGKey(3), reps))
+    scale = float(jnp.max(jnp.abs(x["x"]))) / 127
+    err = np.abs(np.asarray(rts.mean(0)) - np.asarray(x["x"]))
+    assert err.max() < 5 * scale / np.sqrt(reps)
+
+
+def test_topk_keeps_largest_and_full_density_is_identity():
+    cod = make_codec("topk", topk_frac=0.25)
+    x = {"x": jnp.asarray([0.1, -3.0, 0.2, 2.0, -0.05, 0.4, 1.0, -0.3])}
+    rt = cod.roundtrip(jax.random.PRNGKey(0), x)["x"]
+    np.testing.assert_array_equal(np.asarray(rt),
+                                  [0, -3.0, 0, 2.0, 0, 0, 0, 0])
+    full = make_codec("topk", topk_frac=1.0)
+    y = _tree(jax.random.PRNGKey(1))
+    rt = full.roundtrip(jax.random.PRNGKey(0), y)
+    for a, b in zip(jax.tree.leaves(rt), jax.tree.leaves(y)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("name,kw", [("int8", {}), ("int8", {"bits": 4}),
+                                     ("topk", {"topk_frac": 0.3})])
+def test_error_feedback_telescopes(name, kw):
+    """sent + residual ≡ the true (EF-augmented) update: what the codec
+    dropped this round is exactly what the residual carries forward."""
+    cod = make_codec(name, **kw)
+    key = jax.random.PRNGKey(4)
+    ref = _tree(key)
+    cur = jax.tree.map(
+        lambda a: a + 0.3 * jax.random.normal(jax.random.fold_in(key, 1),
+                                              a.shape), ref)
+    ef = jax.tree.map(
+        lambda a: 0.05 * jax.random.normal(jax.random.fold_in(key, 2),
+                                           a.shape), ref)
+    ids = jnp.arange(3)
+    recon, ef_new = client_messages(cod, key, 7, ids, ref, cur, ef)
+    delta = jax.tree.map(jnp.subtract, cur, ref)
+    sent = jax.tree.map(jnp.subtract, recon, ref)
+    for s, e, d, e0 in zip(jax.tree.leaves(sent), jax.tree.leaves(ef_new),
+                           jax.tree.leaves(delta), jax.tree.leaves(ef)):
+        np.testing.assert_allclose(np.asarray(s + e), np.asarray(d + e0),
+                                   atol=1e-6, rtol=1e-6)
+
+
+def test_client_messages_none_is_passthrough():
+    tree = _tree(jax.random.PRNGKey(5))
+    cur = jax.tree.map(lambda a: a + 1.0, tree)
+    recon, ef = client_messages(make_codec("none"), jax.random.PRNGKey(0),
+                                0, jnp.arange(3), tree, cur, None)
+    assert recon is cur and ef is None
+
+
+def test_client_messages_folds_global_ids():
+    """Per-client stochastic streams fold the GLOBAL id: the same client in
+    a different cohort slot draws the same noise (cohort ≡ population
+    reproducibility, as for the local-step RNG)."""
+    cod = make_codec("int8")
+    key = jax.random.PRNGKey(6)
+    ref, cur = _tree(key, c=2), _tree(jax.random.fold_in(key, 1), c=2)
+    a, _ = client_messages(cod, key, 3, jnp.asarray([4, 9]), ref, cur)
+    swap = lambda t: jax.tree.map(lambda l: l[::-1], t)
+    b, _ = client_messages(cod, key, 3, jnp.asarray([9, 4]), swap(ref),
+                           swap(cur))
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(swap(b))):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_mask_rows_and_zeros_ef():
+    tree = _tree(jax.random.PRNGKey(7))
+    zeros = jax.tree.map(jnp.zeros_like, tree)
+    out = mask_rows(jnp.asarray([True, False, True]), tree, zeros)
+    assert float(jnp.abs(out["x"][1]).max()) == 0.0
+    assert float(jnp.abs(out["x"][0] - tree["x"][0]).max()) == 0.0
+    assert zeros_ef(make_codec("none"), tree) is None
+    assert zeros_ef(make_codec("int8", error_feedback=False), tree) is None
+    ef = zeros_ef(make_codec("topk"), tree)
+    assert all(l.dtype == jnp.float32 and float(jnp.abs(l).max()) == 0
+               for l in jax.tree.leaves(ef))
+
+
+# ------------------------------------------------------------ bytes formulas
+
+def test_message_bytes_formulas():
+    t = {"a": jax.ShapeDtypeStruct((10, 3), jnp.float32),
+         "b": jax.ShapeDtypeStruct((7,), jnp.bfloat16)}
+    assert state_bytes(t) == 30 * 4 + 7 * 2
+    assert make_codec("none").message_bytes(t) == state_bytes(t)
+    # int8: ceil(size * bits / 8) packed levels + one f32 scale per leaf
+    assert make_codec("int8", bits=8).message_bytes(t) == (30 + 4) + (7 + 4)
+    assert make_codec("int8", bits=4).message_bytes(t) == (15 + 4) + (4 + 4)
+    # topk: (int32 index + f32 value) per kept entry, k = round(frac * size)
+    assert make_codec("topk", topk_frac=0.3).message_bytes(t) == 9 * 8 + 2 * 8
+    # downlink is always the uncompressed state
+    assert make_codec("topk").down_bytes(t) == state_bytes(t)
+
+
+# ------------------------------------------------------------ engine parity
+
+def _run(mode, steps=16, m=4, **fed_kw):
+    d = _quad_driver("adafbio", m=m)
+    if fed_kw:
+        d.fed = dataclasses.replace(d.alg.fed, **fed_kw)
+        d.alg = make_algorithm("adafbio", d.fed, d.problem)
+    d.sampler = UniformSampler(m, 2, jax.random.PRNGKey(9))
+    if mode == "population":
+        d.population = PopulationConfig(n=m, cohort=2)
+    elif mode == "async":
+        d.population = PopulationConfig(n=m, cohort=2, max_staleness=INF)
+    else:
+        d.participation = 0.5
+        d.engine = mode
+    return d.run(steps, eval_every=steps), d
+
+
+ENGINES4 = ("eager", "scan", "population", "async")
+
+
+@pytest.mark.parametrize("mode", ENGINES4)
+def test_codec_none_bit_identical(mode):
+    """The acceptance property: codec="none" (the default) is bit-identical
+    to a run that never mentions codecs, on every engine."""
+    base, _ = _run(mode)
+    none, _ = _run(mode, codec="none")
+    for a, b in zip(jax.tree.leaves(base.final_avg_state),
+                    jax.tree.leaves(none.final_avg_state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert base.grad_norm == none.grad_norm
+    assert base.bytes_up == none.bytes_up
+
+
+@pytest.mark.parametrize("mode", ENGINES4)
+def test_topk_full_density_matches_none(mode):
+    """topk at k = 100% transmits everything: the trajectory matches the
+    uncompressed run to 1e-6 on every engine (only float re-association of
+    ref + (cur - ref) separates them)."""
+    base, _ = _run(mode)
+    full, _ = _run(mode, codec="topk", topk_frac=1.0)
+    for a, b in zip(jax.tree.leaves(base.final_avg_state),
+                    jax.tree.leaves(full.final_avg_state)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-6, rtol=1e-6)
+    np.testing.assert_allclose(base.grad_norm, full.grad_norm,
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("codec_kw", [dict(codec="int8"),
+                                      dict(codec="int8", codec_bits=4),
+                                      dict(codec="topk", topk_frac=0.25),
+                                      dict(codec="topk", topk_frac=0.25,
+                                           error_feedback=False)])
+@pytest.mark.parametrize("mode", ENGINES4)
+def test_lossy_codecs_stay_finite(mode, codec_kw):
+    r, _ = _run(mode, steps=24, **codec_kw)
+    assert np.isfinite(r.grad_norm).all()
+
+
+def test_eager_scan_share_stochastic_streams():
+    """The eager and scan engines fold the same codec RNG stream, so even
+    the STOCHASTIC int8 codec produces identical trajectories."""
+    a, _ = _run("eager", codec="int8")
+    b, _ = _run("scan", codec="int8")
+    for x, y in zip(jax.tree.leaves(a.final_avg_state),
+                    jax.tree.leaves(b.final_avg_state)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   atol=1e-6, rtol=1e-6)
+
+
+def test_error_feedback_changes_trajectory():
+    """EF on vs off is a real difference under aggressive sparsification
+    (without it, dropped coordinates would never be transmitted)."""
+    on, _ = _run("population", steps=32, codec="topk", topk_frac=0.1)
+    off, _ = _run("population", steps=32, codec="topk", topk_frac=0.1,
+                  error_feedback=False)
+    a = np.concatenate([np.asarray(l).ravel()
+                        for l in jax.tree.leaves(on.final_avg_state)])
+    b = np.concatenate([np.asarray(l).ravel()
+                        for l in jax.tree.leaves(off.final_avg_state)])
+    assert not np.allclose(a, b, atol=1e-6)
+
+
+# ------------------------------------------------------------ driver bytes
+
+def _one_client_bytes(d, codec):
+    state = {"x": jnp.zeros((8,)), "y": jnp.zeros((6,)),
+             "v": jnp.zeros((6,)), "w": jnp.zeros((8,))}
+    return codec.message_bytes(state), codec.down_bytes(state)
+
+
+@pytest.mark.parametrize("codec_kw", [dict(), dict(codec="int8"),
+                                      dict(codec="topk", topk_frac=0.5)])
+def test_driver_bytes_follow_formulas_sync_engines(codec_kw):
+    """eager / scan / population all record bytes_up = comms x transmitters
+    x message_bytes and bytes_down = comms x receivers x state_bytes."""
+    for mode, tx, rx in (("eager", 2, 4), ("scan", 2, 4),
+                         ("population", 2, 4)):
+        r, d = _run(mode, steps=16, **codec_kw)
+        msg_b, down_b = _one_client_bytes(d, d.codec)
+        comms = r.comms[-1]
+        assert comms > 0
+        assert r.bytes_up[-1] == comms * tx * msg_b, mode
+        assert r.bytes_down[-1] == comms * rx * down_b, mode
+
+
+def test_driver_bytes_follow_formulas_async():
+    """Async: bytes_up counts every ARRIVAL (dropped ones shipped before
+    the gate), bytes_down the per-round synced rows."""
+    d = _quad_driver("adafbio", m=8)
+    d.population = PopulationConfig(n=8, cohort=3, max_staleness=2,
+                                    max_delay=3)
+    r = d.run(48, eval_every=48)
+    msg_b, down_b = _one_client_bytes(d, d.codec)
+    arrived = sum(s["arrived"] for s in d.staleness_log)
+    synced = sum(s["synced"] for s in d.staleness_log)
+    assert arrived > 0 and synced > 0
+    assert r.bytes_up[-1] == arrived * msg_b
+    assert r.bytes_down[-1] == synced * down_b
+    assert sum(s["dropped"] for s in d.staleness_log) > 0   # gate active
+
+
+# ------------------------------------------------------------ async EF bank
+
+def _toy_async(codec, **kw):
+    def local(states, server, batch, key, ids):
+        return jax.tree.map(lambda a: a + 1.0, states), server
+
+    def sync(server, avg):
+        return avg, server
+    return make_async_round(local, sync, q=2, codec=codec, **kw)
+
+
+def test_async_ef_rides_in_state_and_masks_in_flight():
+    """EF residuals persist in state["ef"]; a cohort slot whose client is
+    still in flight is a no-op on the residual as well as the pending
+    update."""
+    cod = make_codec("topk", topk_frac=0.5)
+    round_fn = jax.jit(_toy_async(cod, max_staleness=INF, max_delay=4))
+    state = init_async_state({"x": jnp.zeros((5, 4))}, {}, 5, codec=cod)
+    assert "ef" in state
+    # client 3 is mid-flight with a marked residual; resampling it must
+    # leave both its pending update and its residual untouched
+    state["in_flight"] = state["in_flight"].at[3].set(True)
+    state["dispatch_round"] = state["dispatch_round"].at[3].set(-1)
+    state["return_round"] = state["return_round"].at[3].set(9)
+    state["ef"] = {"x": state["ef"]["x"].at[3].set(42.0)}
+    pend3 = np.asarray(state["pending"]["x"][3]).copy()
+    ids = jnp.asarray([3, 0], jnp.int32)
+    state, stats = round_fn(state, ids, jnp.zeros((2,)),
+                            jax.random.PRNGKey(0), jnp.int32(0))
+    assert int(stats["dispatched"]) == 1            # only client 0 started
+    np.testing.assert_array_equal(np.asarray(state["ef"]["x"][3]), 42.0)
+    np.testing.assert_array_equal(np.asarray(state["pending"]["x"][3]),
+                                  pend3)
+    # the dispatched client's pending row holds the codec reconstruction:
+    # topk at 50% of a uniform +2 update keeps half the entries
+    sent = np.asarray(state["pending"]["x"][0])
+    assert (sent == 2.0).sum() == 2 and (sent == 0.0).sum() == 2
+    # and its residual carries exactly what was dropped
+    np.testing.assert_allclose(np.asarray(state["ef"]["x"][0]) + sent,
+                               2.0, atol=1e-6)
+
+
+def test_async_codec_none_state_has_no_ef():
+    state = init_async_state({"x": jnp.zeros((4, 2))}, {}, 4,
+                             codec=make_codec("none"))
+    assert "ef" not in state
+    state = init_async_state({"x": jnp.zeros((4, 2))}, {}, 4)
+    assert "ef" not in state

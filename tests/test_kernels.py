@@ -81,6 +81,66 @@ def test_storm_update_nondivisible(n, block):
                                rtol=1e-6)
 
 
+@pytest.mark.parametrize("n", [1024, 65536 * 2])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("bits", [8, 4])
+def test_quantize_stoch(n, dtype, bits):
+    from repro.kernels.quantize import dequantize, quantize_stoch
+    key = jax.random.PRNGKey(11)
+    x = jax.random.normal(key, (n,), jnp.float32).astype(dtype)
+    u = jax.random.uniform(jax.random.fold_in(key, 1), (n,))
+    qmax = (1 << (bits - 1)) - 1
+    scale = float(jnp.max(jnp.abs(x.astype(jnp.float32)))) / qmax
+    got = quantize_stoch(x, u, scale, qmax, interpret=True)
+    want = ref.quantize_stoch_ref(x, u, scale, qmax)
+    assert got.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert np.abs(np.asarray(got)).max() <= qmax
+    deq = dequantize(got, scale, interpret=True)
+    np.testing.assert_array_equal(np.asarray(deq),
+                                  np.asarray(ref.dequantize_ref(want,
+                                                                scale)))
+    # quantize -> dequantize error is at most one step
+    err = np.abs(np.asarray(deq) - np.asarray(x, np.float32))
+    assert err.max() <= scale + (1e-6 if dtype == jnp.float32 else 2e-2)
+
+
+@pytest.mark.parametrize("n,block", [
+    (1000, 256),       # n not a multiple of the block
+    (130, 128),        # barely over one lane
+    (5, 65536),        # smaller than one lane
+])
+def test_quantize_stoch_nondivisible(n, block):
+    from repro.kernels.quantize import dequantize, quantize_stoch
+    key = jax.random.PRNGKey(12)
+    x = jax.random.normal(key, (n,))
+    u = jax.random.uniform(jax.random.fold_in(key, 1), (n,))
+    scale = float(jnp.max(jnp.abs(x))) / 127
+    got = quantize_stoch(x, u, scale, 127, block=block, interpret=True)
+    want = ref.quantize_stoch_ref(x, u, scale, 127)
+    assert got.shape == (n,)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    deq = dequantize(got, scale, block=block, interpret=True)
+    assert deq.shape == (n,) and deq.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(deq), np.asarray(x), atol=scale,
+                               rtol=0)
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_quantize_ops_wrappers(use_pallas):
+    key = jax.random.PRNGKey(13)
+    x = jax.random.normal(key, (333,))
+    u = jax.random.uniform(jax.random.fold_in(key, 1), (333,))
+    scale = float(jnp.max(jnp.abs(x))) / 127
+    got = ops.quantize_stoch(x, u, scale, use_pallas=use_pallas)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(ref.quantize_stoch_ref(x, u, scale,
+                                                           127)))
+    deq = ops.dequantize(got, scale, use_pallas=use_pallas)
+    np.testing.assert_array_equal(
+        np.asarray(deq), np.asarray(ref.dequantize_ref(got, scale)))
+
+
 @pytest.mark.parametrize("n,block", [(1000, 256), (131, 128), (77, 65536)])
 def test_adafbio_update_nondivisible(n, block):
     key = jax.random.PRNGKey(6)

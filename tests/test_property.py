@@ -179,3 +179,51 @@ def test_trace_file_replay_matches_in_memory_trace_sampler(n, period, duty,
         np.testing.assert_array_equal(np.asarray(s.cohort(r)),
                                       np.asarray(tf.cohort(r)),
                                       err_msg=f"round {r}")
+
+
+@given(st.integers(1, 300), st.integers(2, 8), st.integers(0, 2 ** 30))
+def test_int8_quantize_dequantize_error_bound(n, bits, seed):
+    """quantize -> dequantize lands within one quantization step of x:
+    |deq - x| <= scale = max|x| / (2^(b-1) - 1), for every size and width."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (n,))
+    u = jax.random.uniform(jax.random.fold_in(key, 1), (n,))
+    qmax = (1 << (bits - 1)) - 1
+    scale = max(float(jnp.max(jnp.abs(x))), 1e-30) / qmax
+    q = ref.quantize_stoch_ref(x, u, scale, qmax)
+    deq = ref.dequantize_ref(q, scale)
+    assert np.abs(np.asarray(deq) - np.asarray(x)).max() <= scale + 1e-6
+
+
+@given(st.integers(1, 64), st.integers(0, 2 ** 30))
+def test_int8_stochastic_rounding_unbiased(n, seed):
+    """E_u[q * scale] = x: the empirical mean over independent noise draws
+    converges to x at the Monte-Carlo rate."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (n,))
+    scale = max(float(jnp.max(jnp.abs(x))), 1e-30) / 127
+    reps = 256
+    us = jax.random.uniform(jax.random.fold_in(key, 1), (reps, n))
+    deq = jax.vmap(lambda u: ref.dequantize_ref(
+        ref.quantize_stoch_ref(x, u, scale, 127), scale))(us)
+    err = np.abs(np.asarray(deq.mean(0)) - np.asarray(x))
+    assert err.max() < 6 * scale / np.sqrt(reps)
+
+
+@given(st.integers(1, 100), st.floats(0.01, 1.0), st.integers(0, 2 ** 30),
+       st.sampled_from(["int8", "topk"]))
+def test_ef_residual_telescopes(n, frac, seed, name):
+    """Error feedback invariant: transmitted + residual == the true
+    (EF-augmented) update, for every codec, size, and level."""
+    from repro.fed.compress import client_messages, make_codec
+    key = jax.random.PRNGKey(seed)
+    cod = make_codec(name, topk_frac=frac)
+    ref_t = {"x": jax.random.normal(key, (2, n))}
+    cur = {"x": jax.random.normal(jax.random.fold_in(key, 1), (2, n))}
+    ef = {"x": 0.1 * jax.random.normal(jax.random.fold_in(key, 2), (2, n))}
+    recon, ef_new = client_messages(cod, key, 0, jnp.arange(2), ref_t, cur,
+                                    ef)
+    sent = recon["x"] - ref_t["x"]
+    true_upd = cur["x"] - ref_t["x"] + ef["x"]
+    np.testing.assert_allclose(np.asarray(sent + ef_new["x"]),
+                               np.asarray(true_upd), atol=1e-5, rtol=1e-5)

@@ -1,6 +1,8 @@
-"""benchmarks/sweep.py: the convergence-vs-staleness grid harness emits a
-machine-readable BENCH_async_sweep.json with a sync baseline plus one cell
-per (max_staleness x delay model x delay_eta) combination."""
+"""benchmarks/sweep.py: the convergence-vs-staleness grid emits a
+machine-readable BENCH_async_sweep.json (sync baseline + one cell per
+(max_staleness x delay model x delay_eta) combination) and the
+bytes-vs-convergence grid emits BENCH_compression.json — both through the
+shared run_cell helper, with one schema version field."""
 import json
 import sys
 
@@ -28,6 +30,7 @@ def test_tiny_sweep_structure(sweep_main, tmp_path):
                      parse_constant=lambda c: pytest.fail(
                          f"non-RFC8259 token {c} in sweep JSON"))
     assert doc["bench"] == "async_sweep"
+    assert doc["schema"] == 2
     assert doc["meta"]["staleness_grid"] == ["inf"]
     cells = doc["cells"]
     # per task: 1 sync baseline + 1 staleness x 1 model x 1 eta
@@ -36,7 +39,7 @@ def test_tiny_sweep_structure(sweep_main, tmp_path):
     assert sync["max_staleness"] == 0.0 and "staleness_hist" not in sync
     for cell in cells:
         for k in ("task", "delay_model", "metricT", "grad_normT",
-                  "samples", "comms", "seconds"):
+                  "samples", "comms", "bytes_up", "bytes_down", "seconds"):
             assert k in cell, k
         if cell["task"] == "hyperclean":
             assert np.isfinite(cell["grad_normT"])
@@ -53,3 +56,49 @@ def test_tiny_sweep_structure(sweep_main, tmp_path):
                 for k, v in by_tier.items() if v.sum()}
     if 0 in mean_tau and 2 in mean_tau:
         assert mean_tau[0] < mean_tau[2]
+
+
+def test_tiny_compression_sweep_structure(sweep_main, tmp_path):
+    out = tmp_path / "BENCH_compression.json"
+    sweep_main(["--bench", "compression", "--task", "hyperclean",
+                "--steps", "32", "--population", "8", "--cohort", "2",
+                "--codec-grid", "none,int8:4,topk:0.25", "--out", str(out)])
+    doc = json.loads(out.read_text(),
+                     parse_constant=lambda c: pytest.fail(
+                         f"non-RFC8259 token {c} in sweep JSON"))
+    assert doc["bench"] == "compression"
+    assert doc["schema"] == 2                  # shared with the async bench
+    cells = doc["cells"]
+    assert [c["codec"] for c in cells] == ["none", "int8", "topk"]
+    for cell in cells:
+        for k in ("task", "metricT", "grad_normT", "samples", "comms",
+                  "bytes_up", "bytes_down", "seconds", "level", "ef"):
+            assert k in cell, k
+        assert np.isfinite(cell["grad_normT"])
+        assert cell["comms"] > 0 and cell["bytes_down"] > 0
+    none, int4, topk = cells
+    assert none["level"] is None and none["ef"] is None
+    assert int4["level"] == 4 and topk["level"] == 0.25
+    # the wire saving the codecs exist for: both compress the uplink, and
+    # all three cells paid the same uncompressed downlink
+    assert int4["bytes_up"] < none["bytes_up"]
+    assert topk["bytes_up"] < none["bytes_up"]
+    assert len({c["bytes_down"] for c in cells}) == 1
+    # identical runs up to the codec: same sample/round counters
+    assert len({(c["samples"], c["comms"]) for c in cells}) == 1
+
+
+def test_codec_grid_parsing_errors(sweep_main):
+    sys.path.insert(0, ".")
+    from benchmarks.sweep import parse_codec_grid
+    assert parse_codec_grid("none,int8:4,topk:0.5") == [
+        {"codec": "none"}, {"codec": "int8", "codec_bits": 4},
+        {"codec": "topk", "topk_frac": 0.5}]
+    with pytest.raises(SystemExit):
+        parse_codec_grid("gzip")
+    with pytest.raises(SystemExit):
+        parse_codec_grid("none:8")
+    with pytest.raises(SystemExit):
+        parse_codec_grid("int8:77")
+    with pytest.raises(SystemExit):
+        parse_codec_grid("")
