@@ -29,10 +29,15 @@ import jax.numpy as jnp
 import numpy as np
 
 ENGINE = "eager"        # set by --engine; drivers below inherit it
+SEED = 0                # set by --seed; every driver run key derives from it
 
 
 def _row(name, us, derived=""):
     print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def _key():
+    return jax.random.PRNGKey(SEED)
 
 
 # ---------------------------------------------------------------- table 1
@@ -44,7 +49,7 @@ def table1_complexity(eps=0.35, max_steps=400):
         d = _quad_driver(alg)
         d.engine = ENGINE
         t0 = time.time()
-        r = d.run(max_steps, eval_every=10)
+        r = d.run(max_steps, key=_key(), eval_every=10)
         us = (time.time() - t0) / max(r.steps[-1], 1) * 1e6
         hit = next(((s, smp, c) for s, smp, c, g in
                     zip(r.steps, r.samples, r.comms, r.grad_norm)
@@ -71,7 +76,7 @@ def fig1_hyperrep(steps=150):
                       hr["init_xy"], metric_fn=hr["val_loss"], algorithm=alg,
                       engine=ENGINE)
         t0 = time.time()
-        r = d.run(steps, eval_every=max(steps - 1, 1))
+        r = d.run(steps, key=_key(), eval_every=max(steps - 1, 1))
         us = (time.time() - t0) / steps * 1e6
         _row(f"fig_hyperrep/{alg}", us,
              f"val0={r.metric[0]:.4f};valT={r.metric[-1]:.4f};"
@@ -93,7 +98,7 @@ def fig2_hyperclean(steps=150):
                       grad_norm_fn=hc["true_grad_norm"], algorithm=alg,
                       engine=ENGINE)
         t0 = time.time()
-        r = d.run(steps, eval_every=max(steps - 1, 1))
+        r = d.run(steps, key=_key(), eval_every=max(steps - 1, 1))
         us = (time.time() - t0) / steps * 1e6
         _row(f"fig_hyperclean/{alg}", us,
              f"gnorm0={r.grad_norm[0]:.4f};gnormT={r.grad_norm[-1]:.4f};"
@@ -116,7 +121,7 @@ def ablation_adaptive(steps=150):
                       hr["init_xy"], metric_fn=hr["val_loss"],
                       algorithm="adafbio", engine=ENGINE)
         t0 = time.time()
-        r = d.run(steps, eval_every=max(steps - 1, 1))
+        r = d.run(steps, key=_key(), eval_every=max(steps - 1, 1))
         us = (time.time() - t0) / steps * 1e6
         _row(f"ablation_adaptive/{kind}", us,
              f"valT={r.metric[-1]:.4f}")
@@ -138,7 +143,7 @@ def engine_wallclock(rounds=12):
         q = d.fed.q
         steps = rounds * q
         t0 = time.time()
-        r = d.run(steps, eval_every=steps - 1)
+        r = d.run(steps, key=_key(), eval_every=steps - 1)
         total = time.time() - t0
         # round_seconds already excludes the first (compile-including) round
         # — reported as RunResult.compile_seconds — but the sync variant of
@@ -196,14 +201,14 @@ def population_scale(n=256, c=16, rounds=8, sampler="uniform",
     dp.engine = "scan"
     q = dp.fed.q
     steps = rounds * q
-    rp = dp.run(steps, eval_every=steps - 1)
+    rp = dp.run(steps, key=_key(), eval_every=steps - 1)
     stats["plain"] = steady(dp)
     _row(f"population/plain_m{c}", stats["plain"] * 1e6,
          f"q={q};rounds={rounds};gnormT={rp.grad_norm[-1]:.3f}")
 
     dn = driver(n)
     dn.population = PopulationConfig(n=n, cohort=c, sampler=sampler)
-    rn = dn.run(steps, eval_every=steps - 1)
+    rn = dn.run(steps, key=_key(), eval_every=steps - 1)
     stats["pop"] = steady(dn)
     _row(f"population/pop_n{n}_c{c}_{sampler}", stats["pop"] * 1e6,
          f"q={q};rounds={rounds};gnormT={rn.grad_norm[-1]:.3f};"
@@ -220,7 +225,7 @@ def population_scale(n=256, c=16, rounds=8, sampler="uniform",
             topk_frac=topk_frac, error_feedback=ef)
         dc.alg = make_algorithm("adafbio", dc.fed, dc.problem)
         dc.population = PopulationConfig(n=n, cohort=c, sampler=sampler)
-        rc = dc.run(steps, eval_every=steps - 1)
+        rc = dc.run(steps, key=_key(), eval_every=steps - 1)
         level = codec_bits if codec == "int8" else topk_frac
         _row(f"population/codec_{codec}_{level}", steady(dc) * 1e6,
              f"q={q};rounds={rounds};gnormT={rc.grad_norm[-1]:.3f};"
@@ -231,7 +236,7 @@ def population_scale(n=256, c=16, rounds=8, sampler="uniform",
     dm = driver(n)
     dm.engine = "scan"
     dm.participation = c / n
-    rm = dm.run(steps, eval_every=steps - 1)
+    rm = dm.run(steps, key=_key(), eval_every=steps - 1)
     stats["masked"] = steady(dm)
     _row(f"population/masked_m{n}", stats["masked"] * 1e6,
          f"q={q};rounds={rounds};gnormT={rm.grad_norm[-1]:.3f}")
@@ -260,7 +265,7 @@ def population_scale(n=256, c=16, rounds=8, sampler="uniform",
             max_delay=max_delay, delay_eta=delay_eta,
             delay_model=delay_model, delay_mu=delay_mu,
             delay_sigma=delay_sigma, **pop_kw)
-        ra = da.run(steps, eval_every=steps - 1)
+        ra = da.run(steps, key=_key(), eval_every=steps - 1)
         hist = "|".join(f"{s}:{int(k)}" for s, k in
                         enumerate(da.staleness_hist) if k)
         dropped = sum(s["dropped"] for s in da.staleness_log)
@@ -278,7 +283,7 @@ def population_scale(n=256, c=16, rounds=8, sampler="uniform",
 
 def kernel_micro():
     from repro.kernels import ref
-    key = jax.random.PRNGKey(0)
+    key = _key()
     b, h, kv, s, d = 2, 8, 2, 512, 64
     q = jax.random.normal(key, (b, h, s, d), jnp.bfloat16)
     k = jax.random.normal(key, (b, kv, s, d), jnp.bfloat16)
@@ -317,11 +322,14 @@ def roofline_summary():
 
 
 def main() -> None:
-    global ENGINE
+    global ENGINE, SEED
     ap = argparse.ArgumentParser()
     ap.add_argument("--engine", default="eager", choices=["eager", "scan"],
                     help="local-step engine for the driver-based benchmarks "
                          "(engine_wallclock always measures both)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="run PRNG seed: every driver-based benchmark "
+                         "derives its run key from it")
     ap.add_argument("--population", type=int, default=256,
                     help="population size N for the population benchmark")
     ap.add_argument("--cohort", type=int, default=16,
@@ -386,6 +394,7 @@ def main() -> None:
         codec=args.codec, codec_bits=args.codec_bits,
         topk_frac=args.topk_frac, ef=args.ef == "on")
     ENGINE = args.engine
+    SEED = args.seed
     print("name,us_per_call,derived")
     if args.only:
         benches[args.only]()

@@ -35,6 +35,7 @@ import argparse
 import dataclasses
 import json
 import math
+import os
 import sys
 import time
 
@@ -43,12 +44,13 @@ sys.path.insert(0, "src")
 import jax
 
 TASKS = ("hyperclean", "hyperrep")
-BENCHES = ("async", "compression")
-# bumped whenever a cell/meta field changes shape; shared by BOTH artifacts
+BENCHES = ("async", "compression", "bank_scale")
+# bumped whenever a cell/meta field changes shape; shared by ALL artifacts
 # so downstream consumers can gate on one number
 SCHEMA = 2
 DEFAULT_OUT = {"async": "BENCH_async_sweep.json",
-               "compression": "BENCH_compression.json"}
+               "compression": "BENCH_compression.json",
+               "bank_scale": "BENCH_bank_scale.json"}
 
 
 def build_task(name: str, n_clients: int):
@@ -229,6 +231,83 @@ def run_compression_sweep(args) -> dict:
     }
 
 
+def run_bank_scale(args) -> dict:
+    """The bank-sharding scaling grid (``--bench bank_scale`` →
+    ``BENCH_bank_scale.json``): per population size N in ``--n-grid``, run
+    C-cohort synchronous population rounds with the [N, ...] state bank
+    PARTITIONED over a ``--devices``-way client mesh and record steady
+    per-round wall-clock plus measured per-device bank bytes (from the
+    final bank's ``addressable_shards``). Targets (docs/sharding.md):
+    per-round time flat in N at fixed C — compute is O(C), the cohort
+    gather is the only cross-shard op — and per-device bank bytes
+    ∝ N/devices."""
+    from repro.configs.base import PopulationConfig
+    from repro.core.baselines import make_algorithm
+    from tests.test_system import _quad_driver
+
+    devices = min(args.devices, len(jax.devices()))
+    if devices < args.devices:
+        print(f"only {devices} device(s) visible (asked for "
+              f"{args.devices}); set XLA_FLAGS="
+              f"--xla_force_host_platform_device_count or run --bench "
+              f"bank_scale before any other jax use", flush=True)
+    mesh = jax.make_mesh((devices, 1), ("data", "model"))
+    grid = parse_grid(args.n_grid, int)
+    cells = []
+    for i, n in enumerate(grid):
+        if n % devices:
+            print(f"skip N={n}: not divisible by {devices} devices "
+                  f"(the bank would replicate)", flush=True)
+            continue
+        print(f"[{i + 1}/{len(grid)}] N={n} C={args.cohort} "
+              f"devices={devices}", flush=True)
+        # the population_scale recalibration: defaults are tuned for d=8
+        # and diverge at the bigger quadratic
+        d = _quad_driver("adafbio", m=n, d=96, p=64)
+        d.fed = dataclasses.replace(d.alg.fed, lr_x=0.05, lr_y=0.2)
+        d.alg = make_algorithm("adafbio", d.fed, d.problem)
+        d.population = PopulationConfig(n=n, cohort=args.cohort,
+                                        sampler=args.sampler)
+        d.mesh = mesh
+        steps = args.rounds * d.fed.q
+        t0 = time.time()
+        r = d.run(steps, key=jax.random.PRNGKey(args.seed),
+                  eval_every=max(steps - 1, 1))
+        timed = d.round_seconds[1:] or d.round_seconds
+        leaves = jax.tree.leaves(d.final_bank)
+        per_dev = {}
+        for leaf in leaves:
+            for s in leaf.addressable_shards:
+                per_dev[s.device.id] = (per_dev.get(s.device.id, 0)
+                                        + s.data.nbytes)
+        cells.append({
+            "n": n,
+            "cohort": args.cohort,
+            "devices": devices,
+            "rounds": args.rounds,
+            "round_seconds": round(sum(timed) / max(len(timed), 1), 6),
+            "compile_seconds": round(r.compile_seconds, 3),
+            "grad_normT": json_safe(float(r.grad_norm[-1])),
+            "bytes_up": int(r.bytes_up[-1]),
+            "bank_bytes_total": int(sum(l.nbytes for l in leaves)),
+            "bank_bytes_per_device_max": int(max(per_dev.values())),
+            "seconds": round(time.time() - t0, 3),
+        })
+    return {
+        "bench": "bank_scale",
+        "schema": SCHEMA,
+        "meta": {
+            "n_grid": list(grid),
+            "cohort": args.cohort,
+            "devices": devices,
+            "rounds": args.rounds,
+            "sampler": args.sampler,
+            "seed": args.seed,
+        },
+        "cells": cells,
+    }
+
+
 def run_sweep(args) -> dict:
     """The full grid: per task, one sync baseline + every
     (max_staleness, delay_model, delay_eta) combination."""
@@ -317,7 +396,9 @@ def main(argv=None) -> None:
                     "sweeps over the paper's tasks")
     ap.add_argument("--bench", default="async", choices=list(BENCHES),
                     help="async: convergence-vs-staleness grid; "
-                         "compression: bytes-vs-convergence codec grid")
+                         "compression: bytes-vs-convergence codec grid; "
+                         "bank_scale: sharded-bank round time and "
+                         "per-device bytes vs population size N")
     ap.add_argument("--task", default="hyperclean,hyperrep",
                     help="comma list of tasks: hyperclean, hyperrep")
     ap.add_argument("--steps", type=int, default=64,
@@ -354,6 +435,16 @@ def main(argv=None) -> None:
     ap.add_argument("--ef", default="on", choices=["on", "off"],
                     help="compression bench: error feedback for the lossy "
                          "cells")
+    ap.add_argument("--n-grid", default="256,1024,4096",
+                    help="bank_scale bench: comma list of population sizes "
+                         "N (each must divide --devices)")
+    ap.add_argument("--devices", type=int, default=2,
+                    help="bank_scale bench: client-mesh device count (CPU "
+                         "hosts are split via "
+                         "--xla_force_host_platform_device_count, set "
+                         "automatically when possible)")
+    ap.add_argument("--rounds", type=int, default=6,
+                    help="bank_scale bench: timed rounds per cell")
     ap.add_argument("--seed", type=int, default=0,
                     help="run key seed (one key per cell, shared)")
     ap.add_argument("--out", default=None,
@@ -362,8 +453,19 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
     if args.out is None:
         args.out = DEFAULT_OUT[args.bench]
-    out = (run_compression_sweep(args) if args.bench == "compression"
-           else run_sweep(args))
+    if args.bench == "bank_scale":
+        # must land before the first jax backend touch: a CPU host splits
+        # into N devices only via this env flag at initialization
+        flags = os.environ.get("XLA_FLAGS", "")
+        if (args.devices > 1
+                and "xla_force_host_platform_device_count" not in flags):
+            os.environ["XLA_FLAGS"] = (
+                flags + " --xla_force_host_platform_device_count="
+                + str(args.devices))
+        out = run_bank_scale(args)
+    else:
+        out = (run_compression_sweep(args) if args.bench == "compression"
+               else run_sweep(args))
     with open(args.out, "w") as f:
         json.dump(out, f, indent=1, allow_nan=False)
         f.write("\n")

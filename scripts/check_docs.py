@@ -52,7 +52,8 @@ def readme_sections(readme: pathlib.Path) -> dict:
     return sections
 
 
-DOCS = ("docs/ARCHITECTURE.md", "docs/async.md", "docs/compression.md")
+DOCS = ("docs/ARCHITECTURE.md", "docs/async.md", "docs/compression.md",
+        "docs/sharding.md")
 
 
 def main() -> int:

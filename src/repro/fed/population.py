@@ -65,8 +65,34 @@ def gather(bank_states, ids):
     return jax.tree.map(lambda a: jnp.take(a, ids, axis=0), bank_states)
 
 
+def resolve_last_wins(ids, values, keep=None):
+    """Rewrite duplicate-id cohort slots so every writer of a row carries
+    the LAST (kept) slot's value.
+
+    ``.at[ids].set`` with duplicate indices has no ordering guarantee under
+    XLA — which slot lands is backend/compiler-dependent. After this
+    resolution every slot j writing row ``ids[j]`` holds the value of the
+    last slot j' with ``ids[j'] == ids[j]`` (and ``keep[j']``, when a keep
+    mask is given), so the scatter result is order-independent. Returns
+    ``(values, wins)`` where ``wins[j]`` is False only when no kept slot
+    writes row ``ids[j]`` (the row must stay untouched). O(C^2) in the
+    cohort size — negligible next to the round compute."""
+    c = ids.shape[0]
+    pos = jnp.arange(c)
+    same = ids[:, None] == ids[None, :]
+    if keep is not None:
+        same = same & keep[None, :]
+    winner = jnp.max(jnp.where(same, pos[None, :], -1), axis=1)
+    wins = winner >= 0
+    src = jnp.maximum(winner, 0)
+    return jax.tree.map(lambda v: jnp.take(v, src, axis=0), values), wins
+
+
 def scatter(bank_states, ids, values):
-    """Write cohort rows back: bank[ids] = values (later duplicates win)."""
+    """Write cohort rows back: bank[ids] = values; later duplicates win,
+    deterministically (:func:`resolve_last_wins` — a raw duplicate-index
+    ``.at[].set`` could land either slot depending on the backend)."""
+    values, _ = resolve_last_wins(ids, values)
     return jax.tree.map(lambda a, v: a.at[ids].set(v.astype(a.dtype)),
                         bank_states, values)
 
@@ -85,6 +111,15 @@ def weighted_mean(states, w):
                                 axes=1).astype(a.dtype), states)
 
 
+def cohort_staleness_weights(last_sync_c, round_id, decay: float):
+    """:func:`staleness_weights` from the ALREADY-GATHERED cohort slice
+    ``last_sync_c`` (int32 [C]) — the form the host-spill tier uses, where
+    the [N] vector lives in host memory and only the cohort rows travel."""
+    stale = jnp.maximum(round_id - last_sync_c, 0).astype(jnp.float32)
+    w = (1.0 + stale) ** (-decay)
+    return w / jnp.maximum(w.sum(), 1e-12)
+
+
 def staleness_weights(last_sync, ids, round_id, decay: float):
     """Aggregation weights for a cohort, down-weighting stale members.
 
@@ -94,9 +129,7 @@ def staleness_weights(last_sync, ids, round_id, decay: float):
     (or an all-fresh cohort, e.g. broadcast sync mode) recovers the plain
     uniform average.
     """
-    stale = jnp.maximum(round_id - last_sync[ids], 0).astype(jnp.float32)
-    w = (1.0 + stale) ** (-decay)
-    return w / jnp.maximum(w.sum(), 1e-12)
+    return cohort_staleness_weights(last_sync[ids], round_id, decay)
 
 
 # ------------------------------------------------------------ the population
@@ -226,14 +259,74 @@ def make_population_round(local_step_ids: Callable, sync_update: Callable,
     return round_fn_codec
 
 
+def make_cohort_round(local_step_ids: Callable, sync_update: Callable,
+                      q: int, *, staleness_decay: float = 0.0,
+                      codec=None) -> Callable:
+    """The cohort-only core of :func:`make_population_round`, for banks the
+    device cannot materialize: gather and write-back are the CALLER's
+    (``repro.fed.spill.HostSpillBank`` keeps the [N, ...] rows in host
+    memory), this program sees only the [C, ...] cohort.
+
+    ``round_fn(cur, last_sync_c, server, ids, batches_q, key, round_id) ->
+    (new_client, server)`` where ``cur`` is the gathered cohort states and
+    ``last_sync_c`` the gathered int32 [C] slice of the sync bookkeeping.
+    The q scanned local steps, the staleness-weighted aggregate and the
+    server update are the exact ops of :func:`make_population_round`, so a
+    spilled run replays the dense broadcast-mode trajectory (the caller's
+    write-back: broadcast ``new_client`` to every row, stamp ``last_sync =
+    round_id + 1``). With a lossy ``codec`` the signature grows the
+    gathered EF residual slice: ``round_fn(cur, last_sync_c, ef_c, server,
+    ids, batches_q, key, round_id) -> (new_client, ef_c, server)``; the
+    caller scatters ``ef_c`` back into its EF bank."""
+    if q < 1:
+        raise ValueError(f"round needs q >= 1 local steps, got {q}")
+    lossy = codec is not None and codec.lossy
+
+    def run_steps(cur, server, ids, batches_q, key):
+        def body(carry, batch):
+            st, srv = carry
+            st, srv = local_step_ids(st, srv, batch, key, ids)
+            return (st, srv), None
+
+        (cur, server), _ = jax.lax.scan(body, (cur, server), batches_q,
+                                        length=q)
+        return cur, server
+
+    def round_fn(cur, last_sync_c, server, ids, batches_q, key, round_id):
+        cur, server = run_steps(cur, server, ids, batches_q, key)
+        w = cohort_staleness_weights(last_sync_c, round_id, staleness_decay)
+        new_client, server = sync_update(server, weighted_mean(cur, w))
+        return new_client, server
+
+    if not lossy:
+        return round_fn
+
+    from repro.fed.compress import client_messages
+
+    def round_fn_codec(cur, last_sync_c, ef_c, server, ids, batches_q, key,
+                       round_id):
+        ref = cur                     # server-known dispatch states
+        cur, server = run_steps(ref, server, ids, batches_q, key)
+        recon, ef_c = client_messages(codec, key, round_id, ids, ref, cur,
+                                      ef_c)
+        w = cohort_staleness_weights(last_sync_c, round_id, staleness_decay)
+        new_client, server = sync_update(server, weighted_mean(recon, w))
+        return new_client, ef_c, server
+
+    return round_fn_codec
+
+
 # ------------------------------------------------------------ async execution
 
 def scatter_where(bank_states, ids, values, keep):
     """Masked cohort write-back: ``bank[ids[j]] = values[j]`` where
-    ``keep[j]``, rows with ``~keep[j]`` are untouched (later duplicate ids
-    win, as in :func:`scatter`)."""
+    ``keep[j]``; a row none of whose slots are kept stays untouched. The
+    last KEPT duplicate wins, deterministically (:func:`resolve_last_wins`
+    — every slot writing a row carries the same value, so the raw
+    duplicate-index scatter's ordering ambiguity cannot surface)."""
+    values, wins = resolve_last_wins(ids, values, keep)
     def upd(a, v):
-        m = keep.reshape((keep.shape[0],) + (1,) * (v.ndim - 1))
+        m = wins.reshape((wins.shape[0],) + (1,) * (v.ndim - 1))
         return a.at[ids].set(jnp.where(m, v.astype(a.dtype), a[ids]))
     return jax.tree.map(upd, bank_states, values)
 

@@ -389,12 +389,67 @@ class FederatedTrainer:
             delay_eta=delay_eta, delay=delay_model, codec=self.codec)
 
     def population_state_shardings(self, n: int):
-        """Bank shardings: the population axis takes the client mesh axes
-        (same logical layout as the per-round client axis), so gather/scatter
-        between bank and cohort stay local to each client shard."""
+        """Bank shardings: the leading population axis PARTITIONS over the
+        client mesh axes (``pod``/``data`` per ``shlib.client_axes``) — each
+        device holds N/devices rows, so per-device bank bytes shrink with
+        the mesh and the cohort gather is the round's only cross-shard op
+        (docs/sharding.md). Trailing model axes keep their rule-based
+        layout. When N does not divide the client-axes product the leading
+        assignment drops and the bank replicates client-wise (the
+        pre-sharded layout)."""
         return self._shardings(self.client_state_axes(),
                                self.abstract_population_states(n),
                                fallback=("model",))
+
+    def bank_vector_sharding(self, n: int):
+        """Sharding of the int32/bool [N] per-client bookkeeping vectors
+        (``last_sync`` / ``in_flight`` / ``dispatch_round`` /
+        ``return_round``): partitioned like the bank rows, so the async
+        round's arrival/gate masks are computed shard-locally."""
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, shlib.bank_spec(
+            self.mesh, self.cfg.fed_mode, (n,)))
+
+    def async_state_shardings(self, n: int):
+        """Shardings of the :func:`repro.fed.population.init_async_state`
+        dict: bank / pending buffer / EF residuals and the [N] bookkeeping
+        vectors partition over the client mesh axes; the anchor and server
+        state replicate client-wise. None without a mesh."""
+        if self.mesh is None:
+            return None
+        pss = self.population_state_shardings(n)
+        vec = self.bank_vector_sharding(n)
+        one_abs = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype),
+            self.abstract_population_states(n))
+        one_sh = self._shardings(self.one_state_axes(), one_abs,
+                                 fallback=("model",))
+        st_sh = {"bank": pss, "pending": pss, "last_sync": vec,
+                 "in_flight": vec, "dispatch_round": vec,
+                 "return_round": vec, "anchor": one_sh,
+                 "server": self.server_shardings()}
+        if self.codec.stateful:
+            st_sh["ef"] = self.population_state_shardings(n)
+        return st_sh
+
+    def cohort_round_fn(self, n: int, q: Optional[int] = None, *,
+                        staleness_decay: float = 0.0) -> Callable:
+        """The cohort-only round program of the host-spill tier
+        (``repro.fed.spill``, docs/sharding.md): same math as
+        :meth:`population_round_fn` but the [N, ...] bank never enters the
+        program — the caller gathers/writes back the C rows. ``round(cur,
+        last_sync_c, server, ids, batches_q, key, round_id) -> (new_client,
+        server)`` (a lossy codec adds the gathered EF slice, see
+        ``repro.fed.population.make_cohort_round``)."""
+        from repro.fed.population import make_cohort_round
+
+        def sync_update(server, avg):
+            return self.alg.sync_update(server, avg, n)
+        return make_cohort_round(
+            self.cohort_local_step_fn(n), sync_update,
+            q if q is not None else self.fed.q,
+            staleness_decay=staleness_decay, codec=self.codec)
 
     def eval_fn(self) -> Callable:
         """Mean UL loss f(x̄, ȳ) over the clients' val batches."""
@@ -458,30 +513,20 @@ class FederatedTrainer:
                     raise ValueError("population_round needs population_n")
                 fn = self.population_round_fn(population_n)
                 pss = self.population_state_shardings(population_n)
+                vec = self.bank_vector_sharding(population_n)
                 if self.codec.lossy:
-                    in_sh = (pss, rep, efsh, sv, rep, bsh, rep, rep)
-                    out_sh = (pss, rep, efsh, sv)
+                    in_sh = (pss, vec, efsh, sv, rep, bsh, rep, rep)
+                    out_sh = (pss, vec, efsh, sv)
                 else:
-                    in_sh = (pss, rep, sv, rep, bsh, rep, rep)
-                    out_sh = (pss, rep, sv)
+                    in_sh = (pss, vec, sv, rep, bsh, rep, rep)
+                    out_sh = (pss, vec, sv)
             else:
                 if population_n is None:
                     raise ValueError("async_population_round needs "
                                      "population_n")
                 fn = self.async_population_round_fn(population_n,
                                                     **(async_opts or {}))
-                pss = self.population_state_shardings(population_n)
-                one_abs = jax.tree.map(
-                    lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype),
-                    self.abstract_population_states(population_n))
-                one_sh = self._shardings(self.one_state_axes(), one_abs,
-                                         fallback=("model",))
-                st_sh = {"bank": pss, "pending": pss, "last_sync": rep,
-                         "in_flight": rep, "dispatch_round": rep,
-                         "return_round": rep, "anchor": one_sh,
-                         "server": sv}
-                if self.codec.stateful:
-                    st_sh["ef"] = efsh
+                st_sh = self.async_state_shardings(population_n)
                 stats_sh = None if self.mesh is None else {
                     k: rep for k in ("arrived", "accepted", "dropped",
                                      "mean_staleness", "eta_scale",

@@ -1,0 +1,145 @@
+"""Host-spill tier for dormant client bank rows.
+
+The sharded device bank (docs/sharding.md) divides the [N, ...] population
+state over the mesh's client axes, but N is still capped by AGGREGATE device
+memory. For populations beyond that, only the per-round cohort ever needs to
+be resident on device: the other N - C rows are dormant until sampled. This
+module keeps the full bank in HOST memory and moves exactly the cohort
+across the host<->device boundary each round:
+
+  * :meth:`HostSpillBank.gather` device_puts the C sampled rows (the round
+    program is ``repro.fed.population.make_cohort_round`` — the same q-step
+    scan / staleness-weighted aggregate / server update as the dense
+    ``make_population_round``, minus the bank-sized operands);
+  * the write-back is a host-side numpy update. ``broadcast`` (the sync
+    population mode's write-back: every row := the new global state) is
+    LAZY — the bank stores one ``base`` state plus a per-row ``fresh`` mask
+    instead of memcpy-ing N rows, so a broadcast costs O(1) + the O(N) mask
+    clear, and per-round host work stays O(C);
+  * :meth:`HostSpillBank.prefetch` starts the NEXT round's cohort transfer
+    early (``jax.device_put`` dispatches asynchronously), overlapping the
+    host->device copy with the current round's host-side batch building.
+
+Duplicate cohort ids resolve last-wins on write-back, matching the device
+bank's deterministic ``repro.fed.population.scatter`` semantics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _last_wins_mask(ids: np.ndarray) -> np.ndarray:
+    """bool [C]: True at the LAST slot of each distinct id — the slots whose
+    values a deterministic duplicate-resolving scatter writes."""
+    # np.unique returns the FIRST occurrence; reverse to get the last
+    c = ids.shape[0]
+    _, first_of_reversed = np.unique(ids[::-1], return_index=True)
+    keep = np.zeros(c, bool)
+    keep[c - 1 - first_of_reversed] = True
+    return keep
+
+
+@dataclasses.dataclass
+class HostSpillBank:
+    """[N, ...] bank rows resident in host memory; cohorts travel on demand.
+
+    ``rows`` holds every leaf as a numpy array with leading axis N.
+    ``base``/``fresh`` implement the lazy broadcast: row i's authoritative
+    value is ``rows[i]`` when ``fresh[i]`` else ``base`` (the last broadcast
+    global state). ``base is None`` only before the first broadcast, when
+    every row is fresh by construction.
+    """
+    rows: Any                       # pytree of np [N, ...]
+    n: int
+    base: Optional[Any] = None      # pytree of np [...] (one client state)
+    fresh: Optional[np.ndarray] = None   # bool [N]
+
+    def __post_init__(self):
+        if self.fresh is None:
+            self.fresh = np.ones(self.n, bool)
+        self._prefetched: Optional[tuple] = None
+
+    @classmethod
+    def from_device(cls, bank) -> "HostSpillBank":
+        """Move a device bank pytree to host storage (the one O(N) transfer
+        of a spilled run — init still materializes the bank once).
+        np.array (not asarray): device arrays view as read-only numpy, and
+        ``scatter`` writes rows in place."""
+        rows = jax.tree.map(lambda a: np.array(a), bank)
+        n = jax.tree.leaves(rows)[0].shape[0]
+        return cls(rows=rows, n=n)
+
+    @property
+    def nbytes(self) -> int:
+        return sum(leaf.nbytes for leaf in jax.tree.leaves(self.rows))
+
+    def _host_gather(self, ids: np.ndarray):
+        def one(rows_leaf, base_leaf):
+            out = rows_leaf[ids]
+            if base_leaf is not None:
+                stale = ~self.fresh[ids]
+                if stale.any():
+                    out[stale] = base_leaf
+            return out
+        if self.base is None:
+            return jax.tree.map(lambda r: r[ids], self.rows)
+        return jax.tree.map(one, self.rows, self.base)
+
+    def gather(self, ids, device=None):
+        """The cohort rows as device arrays ([C, ...] pytree). Consumes the
+        matching :meth:`prefetch` result when one is pending."""
+        ids = np.asarray(ids)
+        if self._prefetched is not None:
+            key, tree = self._prefetched
+            self._prefetched = None
+            if np.array_equal(key, ids):
+                return tree
+        out = self._host_gather(ids)
+        return jax.device_put(out, device)
+
+    def prefetch(self, ids, device=None) -> None:
+        """Start the host->device transfer of a FUTURE cohort.
+        ``jax.device_put`` dispatches asynchronously, so the copy overlaps
+        whatever host work follows; the next :meth:`gather` with the same
+        ids consumes it. Any bank write drops the prefetch (the rows may
+        have changed)."""
+        ids = np.asarray(ids)
+        self._prefetched = (ids, jax.device_put(self._host_gather(ids),
+                                                device))
+
+    def scatter(self, ids, values) -> None:
+        """Write cohort rows back (host-side). Duplicate ids resolve
+        last-wins, matching ``repro.fed.population.scatter``."""
+        ids = np.asarray(ids)
+        self._prefetched = None
+        keep = _last_wins_mask(ids)
+        win_ids = ids[keep]
+
+        def one(rows_leaf, vals):
+            v = np.asarray(vals)[keep]
+            rows_leaf[win_ids] = v.astype(rows_leaf.dtype)
+        jax.tree.map(one, self.rows, values)
+        self.fresh[win_ids] = True
+
+    def broadcast(self, value) -> None:
+        """Every row := one client state — lazily: store it as ``base`` and
+        clear the ``fresh`` mask instead of writing N rows."""
+        self._prefetched = None
+        self.base = jax.tree.map(np.asarray, value)
+        self.fresh[:] = False
+
+    def materialize(self):
+        """The full dense [N, ...] bank (checkpointing / parity checks) —
+        the only O(N*state) host operation besides construction."""
+        if self.base is None:
+            return jax.tree.map(np.copy, self.rows)
+
+        def one(rows_leaf, base_leaf):
+            out = rows_leaf.copy()
+            out[~self.fresh] = base_leaf.astype(rows_leaf.dtype)
+            return out
+        return jax.tree.map(one, self.rows, self.base)

@@ -44,6 +44,14 @@ def main():
     ap.add_argument("--neumann-k", type=int, default=2)
     ap.add_argument("--mesh", default="none", choices=["none", "local", "prod",
                                                        "prod-multi"])
+    ap.add_argument("--seed", type=int, default=0,
+                    help="run PRNG seed (init, data, samplers, codec "
+                         "dither all derive from it)")
+    ap.add_argument("--spill", default="none", choices=["none", "host"],
+                    help="host: keep the [N, ...] population bank in host "
+                         "memory and move only each round's cohort to "
+                         "device (sync population mode only; "
+                         "docs/sharding.md)")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--eval-every", type=int, default=10)
@@ -124,7 +132,10 @@ def main():
     shape = ShapeConfig("cli", args.seq, args.batch, "train")
     tr = FederatedTrainer(cfg, fed, shape, mesh=mesh,
                           algorithm=args.algorithm)
-    key = jax.random.PRNGKey(0)
+    key = jax.random.PRNGKey(args.seed)
+    if args.spill != "none" and not args.population:
+        raise SystemExit("--spill host spills the population bank: run "
+                         "with --population N")
     if args.population:
         run_population(args, cfg, fed, shape, tr, key)
         return
@@ -190,20 +201,28 @@ def run_population(args, cfg, fed, shape, tr: FederatedTrainer, key):
     n, c = args.population, args.cohort
     # per-client batch sizes derive from the cohort (the compute unit);
     # the bank-init batch reuses the same per-client shapes with leading N
-    specs_c, _ = client_batch_specs(cfg, shape, c, fed)
+    specs_c, axes_c = client_batch_specs(cfg, shape, c, fed)
     specs_n = jax.tree.map(
         lambda s: jax.ShapeDtypeStruct((n,) + s.shape[1:], s.dtype), specs_c)
     data = FederatedLMData(vocab=cfg.vocab, n_clients=n)
     sampler = make_sampler(args.sampler, n, c, jax.random.fold_in(key, 23),
                            trace_file=args.trace_file)
     if args.max_staleness != 0:
+        if args.spill != "none":
+            raise SystemExit("--spill host replays the synchronous "
+                             "broadcast rounds: the async pending buffer "
+                             "is device-resident (set --max-staleness 0)")
         run_population_async(args, cfg, fed, tr, key, data, specs_c,
-                             specs_n, sampler)
+                             axes_c, specs_n, sampler)
         return
     if args.delay_model != "uniform" or args.tiers is not None:
         raise SystemExit("--delay-model / --tiers are async knobs: set "
                          "--max-staleness != 0 to enable asynchronous "
                          "execution")
+    if args.spill != "none":
+        run_population_spill(args, cfg, fed, tr, key, data, specs_c,
+                             specs_n, sampler)
+        return
     bank, last_sync, server = tr.init_population_states(
         key, make_client_batch(data, cfg, specs_n, 0), n)
     lossy = tr.codec.lossy
@@ -218,7 +237,18 @@ def run_population(args, cfg, fed, shape, tr: FederatedTrainer, key):
         else:
             bank, last_sync, server = loaded
         print(f"resumed population run from step {start}")
-    round_fn = jax.jit(tr.population_round_fn(n))
+    if tr.mesh is not None:
+        # partition the bank rows (and EF stack / [N] bookkeeping) over the
+        # mesh's client axes; the jitted round keeps the layout, so the
+        # cohort gather is the only cross-shard op (docs/sharding.md)
+        bank = jax.device_put(bank, tr.population_state_shardings(n))
+        last_sync = jax.device_put(last_sync, tr.bank_vector_sharding(n))
+        if ef is not None:
+            ef = jax.device_put(ef, tr.population_state_shardings(n))
+        round_fn = tr.jitted("population_round", specs_c, axes_c,
+                             population_n=n)
+    else:
+        round_fn = jax.jit(tr.population_round_fn(n))
     ev = jax.jit(tr.eval_fn())
     msg_b, down_b = wire_costs(tr, n)
     bytes_up = bytes_down = 0
@@ -249,10 +279,12 @@ def run_population(args, cfg, fed, shape, tr: FederatedTrainer, key):
                                                batch_q, key, jnp.int32(r))
         jax.block_until_ready(bank)
         dt = time.time() - r0
-        # make_population_round closes every round with one sync: the cohort
-        # uploads one codec message each, every bank row downloads the
-        # broadcast (sync_mode="broadcast" here)
-        bytes_up += c * msg_b
+        # make_population_round closes every round with one sync: each
+        # UNIQUE cohort member uploads one codec message (a duplicate id —
+        # trace shortfall cycling — fills two aggregation slots but one
+        # client shipped one message, docs/sharding.md wire conventions);
+        # every bank row downloads the broadcast (sync_mode="broadcast")
+        bytes_up += int(np.unique(np.asarray(ids)).size) * msg_b
         bytes_down += n * down_b
         if r % max(args.eval_every // fed.q, 1) == 0 or r == n_rounds - 1:
             last = jax.tree.map(lambda x: x[-1], batch_q)
@@ -267,6 +299,111 @@ def run_population(args, cfg, fed, shape, tr: FederatedTrainer, key):
     if args.ckpt:
         state = (bank, last_sync, ef, server) if lossy else (bank, last_sync,
                                                              server)
+        save_checkpoint(args.ckpt, state, n_rounds * fed.q)
+        print(f"saved population checkpoint to {args.ckpt}")
+
+
+def run_population_spill(args, cfg, fed, tr: FederatedTrainer, key, data,
+                         specs_c, specs_n, sampler):
+    """Host-spill population mode (--spill host, docs/sharding.md): the
+    [N, ...] bank lives in HOST memory (``repro.fed.spill.HostSpillBank``),
+    only each round's C sampled rows travel to device, and the round
+    program is the cohort-only ``tr.cohort_round_fn`` — same math as the
+    dense broadcast rounds, so the trajectory matches bit-for-bit. The
+    next round's cohort prefetches (async ``jax.device_put``) while this
+    round's batches build on host. Checkpoints materialize the dense bank,
+    so spilled and dense runs resume from each other's files."""
+    from repro.fed.spill import HostSpillBank
+
+    n, c = args.population, args.cohort
+    bank, last_sync, server = tr.init_population_states(
+        key, make_client_batch(data, cfg, specs_n, 0), n)
+    lossy = tr.codec.lossy
+    ef = tr.init_ef_bank(n)
+    start = 0
+    if args.resume and args.ckpt:
+        tmpl = (bank, last_sync, ef, server) if lossy else (bank, last_sync,
+                                                            server)
+        loaded, start = load_checkpoint(args.ckpt, tmpl)
+        if lossy:
+            bank, last_sync, ef, server = loaded
+        else:
+            bank, last_sync, server = loaded
+        print(f"resumed spilled population run from step {start}")
+    spill = HostSpillBank.from_device(bank)
+    ef_spill = HostSpillBank.from_device(ef) if ef is not None else None
+    del bank, ef                     # host copies are now authoritative
+    last_sync = np.asarray(last_sync).copy()
+    round_fn = jax.jit(tr.cohort_round_fn(n))
+    ev = jax.jit(tr.eval_fn())
+    msg_b, down_b = wire_costs(tr, n)
+    bytes_up = bytes_down = 0
+
+    start_round = start // fed.q
+    n_rounds = max(args.steps // fed.q, start_round + 1)
+    if n_rounds * fed.q != args.steps:
+        print(f"population mode runs whole rounds: {n_rounds * fed.q} steps "
+              f"instead of the requested {args.steps} "
+              f"(use --steps divisible by q={fed.q})", flush=True)
+    print(f"spilled population mode: N={n} clients "
+          f"({spill.nbytes / 1e6:.1f}MB host bank), C={c} cohort/round "
+          f"({args.sampler} sampler), rounds {start_round}..{n_rounds - 1} "
+          f"of q={fed.q}", flush=True)
+    t0 = time.time()
+    ids = np.asarray(sampler.cohort(start_round), np.int32)
+    for r in range(start_round, n_rounds):
+        t = r * fed.q
+        batch_q = tree_stack([make_cohort_batch(data, cfg, specs_c, t + j,
+                                                ids)
+                              for j in range(fed.q)])
+        r0 = time.time()
+        cur = spill.gather(ids)
+        ls_c = jnp.asarray(last_sync[ids])
+        jids = jnp.asarray(ids)
+        if lossy:
+            ef_c = (ef_spill.gather(ids) if ef_spill is not None else None)
+            new_client, ef_c, server = round_fn(cur, ls_c, ef_c, server,
+                                                jids, batch_q, key,
+                                                jnp.int32(r))
+        else:
+            new_client, server = round_fn(cur, ls_c, server, jids, batch_q,
+                                          key, jnp.int32(r))
+        jax.block_until_ready(new_client)
+        # dense broadcast write-back, host-side: every row := new_client
+        # (lazy base + fresh-mask clear), stamp last_sync = r + 1
+        spill.broadcast(new_client)
+        last_sync[:] = r + 1
+        if lossy and ef_spill is not None:
+            ef_spill.scatter(ids, ef_c)
+        next_ids = (np.asarray(sampler.cohort(r + 1), np.int32)
+                    if r + 1 < n_rounds else None)
+        if next_ids is not None:
+            # overlap the next cohort's host->device copy with this round's
+            # logging and the next round's host batch building
+            spill.prefetch(next_ids)
+            if ef_spill is not None:
+                ef_spill.prefetch(next_ids)
+        dt = time.time() - r0
+        bytes_up += int(np.unique(ids).size) * msg_b
+        bytes_down += n * down_b
+        if r % max(args.eval_every // fed.q, 1) == 0 or r == n_rounds - 1:
+            last = jax.tree.map(lambda x: x[-1], batch_q)
+            loss = float(ev(jax.tree.map(lambda v: v[None], new_client),
+                            last))
+            print(f"round {r:4d} (step {t + fed.q - 1:5d})  "
+                  f"f(x̄,ȳ) = {loss:.4f}  round={dt*1e3:.1f}ms  "
+                  f"up={bytes_up/1e6:.2f}MB down={bytes_down/1e6:.2f}MB  "
+                  f"cohort={ids[:8].tolist()}...  "
+                  f"({time.time()-t0:.1f}s)", flush=True)
+        if next_ids is not None:
+            ids = next_ids
+    print(f"wire totals ({tr.codec.name}): bytes_up={bytes_up} "
+          f"bytes_down={bytes_down}", flush=True)
+    if args.ckpt:
+        bank_d = spill.materialize()
+        ef_d = ef_spill.materialize() if ef_spill is not None else None
+        state = ((bank_d, jnp.asarray(last_sync), ef_d, server) if lossy
+                 else (bank_d, jnp.asarray(last_sync), server))
         save_checkpoint(args.ckpt, state, n_rounds * fed.q)
         print(f"saved population checkpoint to {args.ckpt}")
 
@@ -302,7 +439,7 @@ def make_cli_delay_model(args, n: int):
 
 
 def run_population_async(args, cfg, fed, tr: FederatedTrainer, key, data,
-                         specs_c, specs_n, sampler):
+                         specs_c, axes_c, specs_n, sampler):
     """Asynchronous population mode: overlapping cohorts with delayed
     arrivals (per-client delays from the pluggable --delay-model),
     server-side bounded-staleness gating, delay-adaptive server steps
@@ -319,9 +456,16 @@ def run_population_async(args, cfg, fed, tr: FederatedTrainer, key, data,
     if args.resume and args.ckpt:
         state, start = load_checkpoint(args.ckpt, state)
         print(f"resumed async population run from step {start}")
-    round_fn = jax.jit(tr.async_population_round_fn(
-        n, max_staleness=args.max_staleness, max_delay=args.max_delay,
-        delay_eta=args.delay_eta, delay_model=dm))
+    opts = dict(max_staleness=args.max_staleness, max_delay=args.max_delay,
+                delay_eta=args.delay_eta, delay_model=dm)
+    if tr.mesh is not None:
+        # bank / pending buffer / EF stack / [N] bookkeeping partition over
+        # the client mesh axes; arrival masks compute shard-locally
+        state = jax.device_put(state, tr.async_state_shardings(n))
+        round_fn = tr.jitted("async_population_round", specs_c, axes_c,
+                             population_n=n, async_opts=opts)
+    else:
+        round_fn = jax.jit(tr.async_population_round_fn(n, **opts))
     ev = jax.jit(tr.eval_fn())
 
     start_round = start // fed.q

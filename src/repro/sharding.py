@@ -52,6 +52,29 @@ def n_clients(mesh: Mesh, fed_mode: str) -> int:
     return max(m, 1)
 
 
+def bank_spec(mesh: Mesh, fed_mode: str, shape: Tuple[int, ...]) -> P:
+    """PartitionSpec of one population-bank leaf ([N, ...] state rows, [N]
+    bookkeeping vectors): the leading population axis partitions over the
+    client mesh axes when N divides their product, else the leaf replicates.
+    Only the leading axis is assigned here — trailing model axes come from
+    the logical-axis rules (``repro.fed.runtime.FederatedTrainer.
+    population_state_shardings``); this bare form serves callers without a
+    logical-axes tree (``FedDriver``, the bank-scale bench)."""
+    axes = client_axes(mesh, fed_mode)
+    if axes and _fits(mesh, axes, shape[0]):
+        return P(axes[0] if len(axes) == 1 else axes)
+    return P()
+
+
+def bank_shardings(mesh: Mesh, tree, fed_mode: str = "replica"):
+    """NamedSharding pytree partitioning every leaf's leading population
+    axis over the client mesh axes (:func:`bank_spec` per leaf). ``tree``
+    leaves are arrays or ShapeDtypeStructs with leading axis N."""
+    return jax.tree.map(
+        lambda a: NamedSharding(mesh, bank_spec(mesh, fed_mode,
+                                                tuple(a.shape))), tree)
+
+
 def _sizes_of(mesh: Mesh) -> Dict[str, int]:
     return dict(zip(mesh.axis_names, mesh.devices.shape))
 

@@ -49,6 +49,7 @@ from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import FedConfig, PopulationConfig
 from repro.core.baselines import Algorithm, make_algorithm
@@ -104,6 +105,12 @@ class FedDriver:
     # "scan":  the fused round engine — q local steps + sync compiled as ONE
     #          program per communication round (repro.fed.round).
     engine: str = "eager"
+    # optional device mesh for the population/async engines: the bank, EF
+    # residuals, pending buffer and [N] bookkeeping vectors partition their
+    # leading population axis over the mesh's client axes (pod/data), so
+    # per-device bank bytes scale as N/devices (docs/sharding.md). The
+    # masked eager/scan engines ignore it (they are vmap-scale by design).
+    mesh: Optional[Any] = None
 
     def __post_init__(self):
         from repro.fed.round import ENGINES
@@ -234,6 +241,40 @@ class FedDriver:
         client's state shape — ``states`` carries a leading client axis."""
         from repro.fed.compress import wire_costs
         return wire_costs(self.codec, states)
+
+    # -------------------------------------------------- bank sharding
+
+    def _bank_shardings(self, tree):
+        """NamedSharding pytree partitioning each leaf's leading population
+        axis over the mesh's client axes (``repro.sharding.bank_spec``);
+        None without a mesh. Applies to the bank / pending / EF stacks and
+        the [N] bookkeeping vectors alike."""
+        if self.mesh is None:
+            return None
+        from jax.sharding import NamedSharding
+        from repro import sharding as shlib
+        return jax.tree.map(
+            lambda a: NamedSharding(self.mesh, shlib.bank_spec(
+                self.mesh, "replica", tuple(a.shape))), tree)
+
+    def _replicated(self):
+        from jax.sharding import NamedSharding, PartitionSpec
+        return NamedSharding(self.mesh, PartitionSpec())
+
+    def _async_state_shardings(self, state):
+        """Shardings of the async-state dict: bank-shaped entries partition
+        over the client axes, the anchor/server replicate."""
+        if self.mesh is None:
+            return None
+        rep = self._replicated()
+        sh = {}
+        for k, v in state.items():
+            if k in ("bank", "pending", "ef", "last_sync", "in_flight",
+                     "dispatch_round", "return_round"):
+                sh[k] = self._bank_shardings(v)
+            else:
+                sh[k] = jax.tree.map(lambda _: rep, v)
+        return sh
 
     # -------------------------------------------------- run loops
 
@@ -476,10 +517,19 @@ class FedDriver:
         lossy = self.codec.lossy
         from repro.fed.compress import client_messages, zeros_ef
         ef = zeros_ef(self.codec, bank)
+        bank_sh = self._bank_shardings(bank)
+        vec_sh = self._bank_shardings(last_sync)
+        ef_sh = self._bank_shardings(ef) if ef is not None else None
+        if self.mesh is not None:
+            # commit the bank layout up front: each device holds N/devices
+            # rows of the bank (and EF stack), the round program keeps it
+            bank = jax.device_put(bank, bank_sh)
+            last_sync = jax.device_put(last_sync, vec_sh)
+            if ef is not None:
+                ef = jax.device_put(ef, ef_sh)
 
-        @functools.partial(jax.jit, static_argnames=("n_steps", "sync_first"))
-        def segment(bank, last_sync, ef, server, prev_ids, ids, batches_q,
-                    kk, round_id, *, n_steps, sync_first):
+        def segment_fn(bank, last_sync, ef, server, prev_ids, ids, batches_q,
+                       kk, round_id, *, n_steps, sync_first):
             if sync_first:
                 # the sync at the START of round r closes round r-1; a client
                 # stamped at the previous sync (last_sync == r-1) is fully
@@ -520,6 +570,27 @@ class FedDriver:
                     ef = scatter(ef, ids, ef_c)
             return scatter(bank, ids, cur), last_sync, ef, server
 
+        if self.mesh is None:
+            segment = jax.jit(segment_fn,
+                              static_argnames=("n_steps", "sync_first"))
+        else:
+            # pjit rejects kwargs alongside in_shardings: close over the
+            # static pair and cache one jitted program per combination
+            # (at most {(q, False), (q, True), (rem, True)})
+            rep = self._replicated()
+            seg_cache = {}
+
+            def segment(*a, n_steps, sync_first):
+                k = (n_steps, sync_first)
+                if k not in seg_cache:
+                    seg_cache[k] = jax.jit(
+                        functools.partial(segment_fn, n_steps=n_steps,
+                                          sync_first=sync_first),
+                        in_shardings=(bank_sh, vec_sh, ef_sh, rep, rep,
+                                      rep, rep, rep, rep),
+                        out_shardings=(bank_sh, vec_sh, ef_sh, rep))
+                return seg_cache[k](*a)
+
         full, rem = divmod(total_steps, q)
         lengths = [q] * full + ([rem] if rem else [])
         eval_rounds = max(eval_every // q, 1)
@@ -529,12 +600,14 @@ class FedDriver:
         prev_ids = None
         for r, n_steps in enumerate(lengths):
             ids = jnp.asarray(self._run_sampler.cohort(r), jnp.int32)
+            # the sync opening round r aggregates (and bills) the PREVIOUS
+            # round's cohort — the clients whose updates are on the wire
+            sync_ids = prev_ids if prev_ids is not None else ids
             batches_q = tree_stack([self._cohort_batches(ids, t + j)
                                     for j in range(n_steps)])
             r0 = time.time()
             bank, last_sync, ef, server = segment(
-                bank, last_sync, ef, server,
-                prev_ids if prev_ids is not None else ids, ids, batches_q,
+                bank, last_sync, ef, server, sync_ids, ids, batches_q,
                 key, jnp.int32(r), n_steps=n_steps, sync_first=r > 0)
             jax.block_until_ready(bank)
             self._log_round(res, time.time() - r0)
@@ -543,13 +616,20 @@ class FedDriver:
             samples += n_steps * (fed.neumann_k + 2)
             if r > 0:
                 comms += 1
-                bytes_up += ids.shape[0] * msg_b
+                # wire convention (docs/sharding.md): uplink bills UNIQUE
+                # transmitters — a duplicate cohort id (trace shortfall
+                # cycling) occupies two aggregation slots but one client
+                # computed and shipped one message; participants-mode
+                # downlink likewise reaches each member once
+                tx = int(np.unique(np.asarray(sync_ids)).size)
+                bytes_up += tx * msg_b
                 bytes_down += (n if pcfg.sync_mode == "broadcast"
-                               else ids.shape[0]) * down_b
+                               else tx) * down_b
             if r % eval_rounds == 0 or r == len(lengths) - 1:
                 self._record(res, bank, t - 1, samples, comms, bytes_up,
                              bytes_down)
         res.seconds = time.time() - t0
+        self.final_bank = bank        # benchmarks inspect per-device bytes
         res.final_avg_state = tree_mean_axis0(bank)
         return res
 
@@ -572,7 +652,6 @@ class FedDriver:
         increment scales by ``dispatched / cohort`` — the fraction of
         UNIQUE cohort clients that actually started work (docs/async.md).
         """
-        import numpy as np
         from repro.fed.population import (accum_staleness_hist,
                                           accum_tier_hists,
                                           delay_model_from_config,
@@ -600,13 +679,29 @@ class FedDriver:
         tier_of = (np.asarray(dm.tiers(key, n))
                    if pcfg.delay_model == "tiers" else None)
 
-        segment = jax.jit(make_async_round(
+        round_fn = make_async_round(
             self._cohort_local_step(n),
             lambda srv, avg: self.alg.sync_update(srv, avg, n),
             q, sync_mode=pcfg.sync_mode,
             staleness_decay=pcfg.staleness_decay,
             max_staleness=pcfg.max_staleness, max_delay=pcfg.max_delay,
-            delay_eta=pcfg.delay_eta, delay=dm, codec=self.codec))
+            delay_eta=pcfg.delay_eta, delay=dm, codec=self.codec)
+        if self.mesh is None:
+            segment = jax.jit(round_fn)
+        else:
+            # bank + pending buffer + EF + [N] bookkeeping all partition
+            # their population axis over the mesh; stats come back
+            # replicated (the host reads them every round anyway)
+            st_sh = self._async_state_shardings(state)
+            rep = self._replicated()
+            stats_sh = {k: rep for k in ("arrived", "accepted", "dropped",
+                                         "mean_staleness", "eta_scale",
+                                         "dispatched", "synced",
+                                         "staleness")}
+            state = jax.device_put(state, st_sh)
+            segment = jax.jit(round_fn, in_shardings=(st_sh, rep, rep, rep,
+                                                      rep),
+                              out_shardings=(st_sh, stats_sh))
 
         full, rem = divmod(total_steps, q)
         lengths = [q] * full + ([rem] if rem else [])
@@ -657,5 +752,6 @@ class FedDriver:
                              int(round(samples)), comms, bytes_up,
                              bytes_down)
         res.seconds = time.time() - t0
+        self.final_bank = state["bank"]   # benchmarks inspect device bytes
         res.final_avg_state = tree_mean_axis0(state["bank"])
         return res

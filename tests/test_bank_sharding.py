@@ -1,0 +1,272 @@
+"""Sharded client banks (docs/sharding.md): deterministic last-wins
+scatter semantics, bank partitioning over the mesh's client axes through
+the FedDriver population/async engines, and the host-spill tier
+(``repro.fed.spill``) replaying the dense trajectory."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import PopulationConfig
+from repro.core.baselines import make_algorithm
+from repro.fed.compress import make_codec, zeros_ef
+from repro.fed.population import (make_cohort_round, make_population_round,
+                                  resolve_last_wins, scatter, scatter_where)
+from repro.fed.spill import HostSpillBank, _last_wins_mask
+from tests.test_system import _quad_driver
+
+INF = float("inf")
+
+
+# ------------------------------------------------------- last-wins scatter
+
+def _bank(n=5, d=3):
+    return {"x": jnp.arange(n * d, dtype=jnp.float32).reshape(n, d)}
+
+
+def test_scatter_duplicates_last_wins():
+    """The documented contract: with DIFFERENT values on duplicate slots,
+    the last slot's value lands — explicitly resolved, not left to XLA's
+    unspecified duplicate-index ordering."""
+    bank = _bank()
+    ids = jnp.asarray([1, 1, 2], jnp.int32)
+    vals = {"x": jnp.stack([jnp.full((3,), 10.0), jnp.full((3,), 20.0),
+                            jnp.full((3,), 30.0)])}
+    out = scatter(bank, ids, vals)
+    np.testing.assert_array_equal(out["x"][1], np.full(3, 20.0))
+    np.testing.assert_array_equal(out["x"][2], np.full(3, 30.0))
+    np.testing.assert_array_equal(out["x"][0], np.asarray(bank["x"][0]))
+
+
+def test_scatter_where_last_KEPT_duplicate_wins():
+    """scatter_where: the winner among duplicates is the last slot whose
+    keep flag is True; rows with no kept slot stay untouched."""
+    bank = _bank()
+    ids = jnp.asarray([1, 1, 2], jnp.int32)
+    vals = {"x": jnp.stack([jnp.full((3,), 10.0), jnp.full((3,), 20.0),
+                            jnp.full((3,), 30.0)])}
+    out = scatter_where(bank, ids, vals,
+                        jnp.asarray([True, False, False]))
+    np.testing.assert_array_equal(out["x"][1], np.full(3, 10.0))
+    np.testing.assert_array_equal(out["x"][2], np.asarray(bank["x"][2]))
+
+
+def test_resolve_last_wins_jit_deterministic():
+    """resolve_last_wins makes every duplicate slot carry the winning
+    value, so any .at[ids].set ordering produces the same bank."""
+    ids = jnp.asarray([0, 3, 0, 3, 3], jnp.int32)
+    vals = {"x": jnp.arange(5.0)[:, None] * jnp.ones((1, 2))}
+    res, wins = jax.jit(resolve_last_wins)(ids, vals)
+    np.testing.assert_array_equal(np.asarray(wins), np.ones(5, bool))
+    # every slot of id 0 carries slot 2's value; of id 3, slot 4's
+    np.testing.assert_array_equal(np.asarray(res["x"][:, 0]),
+                                  [2.0, 4.0, 2.0, 4.0, 4.0])
+
+
+# ------------------------------------------------------- driver mesh parity
+
+def _pop_driver(codec, max_staleness, mesh, m=8, steps=12):
+    d = _quad_driver("adafbio", m=m)
+    if codec != "none":
+        d.fed = dataclasses.replace(d.alg.fed, codec=codec, topk_frac=0.5)
+        d.alg = make_algorithm("adafbio", d.fed, d.problem)
+    d.population = PopulationConfig(
+        n=m, cohort=2, max_staleness=max_staleness,
+        max_delay=2 if max_staleness else 1)
+    d.mesh = mesh
+    r = d.run(steps, key=jax.random.PRNGKey(1), eval_every=4)
+    return d, r
+
+
+@pytest.fixture(scope="module")
+def two_devices():
+    if len(jax.devices()) < 2:
+        pytest.skip("needs the 2-way forced host platform (conftest.py)")
+    return jax.make_mesh((2, 1), ("data", "model"))
+
+
+@pytest.mark.parametrize("codec,ms", [
+    ("none", 0.0), ("none", INF),
+    pytest.param("topk", 0.0, marks=pytest.mark.slow),
+    pytest.param("topk", INF, marks=pytest.mark.slow)])
+def test_driver_population_mesh_parity(two_devices, codec, ms):
+    """FedDriver population/async engines on a 2-device client mesh: same
+    trajectory and wire accounting as mesh=None, and the final bank rows
+    genuinely partition across the devices (N/2 rows, half the bytes
+    each)."""
+    d0, r0 = _pop_driver(codec, ms, None)
+    d1, r1 = _pop_driver(codec, ms, two_devices)
+    np.testing.assert_allclose(np.asarray(r0.grad_norm),
+                               np.asarray(r1.grad_norm),
+                               rtol=1e-6, atol=1e-7)
+    assert r0.bytes_up == r1.bytes_up
+    assert r0.bytes_down == r1.bytes_down
+    assert r0.comms == r1.comms
+    for a, b in zip(jax.tree.leaves(d0.final_bank),
+                    jax.tree.leaves(d1.final_bank)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-7)
+    n = 8
+    for leaf in jax.tree.leaves(d1.final_bank):
+        shards = leaf.addressable_shards
+        assert len(shards) == 2
+        assert sorted(s.data.shape[0] for s in shards) == [n // 2] * 2
+        assert sum(s.data.nbytes for s in shards) == leaf.nbytes
+
+
+def test_driver_population_duplicate_ids_unique_billing():
+    """Wire convention: a duplicate cohort id fills two aggregation slots
+    but bills ONE uplink message (docs/sharding.md)."""
+    d = _quad_driver("adafbio", m=4)
+    d.population = PopulationConfig(n=4, cohort=2)
+
+    class Dup:
+        def cohort(self, r):
+            return jnp.asarray([1, 1], jnp.int32)
+    d.sampler = Dup()
+    r = d.run(16, eval_every=16)
+    from repro.fed.compress import make_codec as _mk
+    state = {"x": jnp.zeros((8,)), "y": jnp.zeros((6,)),
+             "v": jnp.zeros((6,)), "w": jnp.zeros((8,))}
+    msg_b = _mk("none").message_bytes(state)
+    comms = r.comms[-1]
+    assert comms > 0
+    assert r.bytes_up[-1] == comms * 1 * msg_b   # 1 unique transmitter
+
+
+# ------------------------------------------------------------- host spill
+
+def test_last_wins_mask():
+    mask = _last_wins_mask(np.asarray([3, 1, 3, 2, 1]))
+    np.testing.assert_array_equal(mask, [False, False, True, True, True])
+
+
+def _np_bank(n=6, d=2):
+    return {"x": np.arange(n * d, dtype=np.float32).reshape(n, d)}
+
+
+def test_spill_scatter_gather_duplicates():
+    b = HostSpillBank(rows=_np_bank(), n=6)
+    b.scatter(np.asarray([4, 4]),
+              {"x": np.stack([np.full(2, 7.0), np.full(2, 9.0)])})
+    out = b.gather(np.asarray([4, 0]))
+    np.testing.assert_array_equal(np.asarray(out["x"][0]), np.full(2, 9.0))
+    np.testing.assert_array_equal(np.asarray(out["x"][1]), [0.0, 1.0])
+
+
+def test_spill_broadcast_is_lazy_and_materialize_is_dense():
+    b = HostSpillBank(rows=_np_bank(), n=6)
+    before = b.rows["x"].copy()
+    b.broadcast({"x": np.full(2, 5.0)})
+    # lazy: the row storage is untouched, only base/fresh changed
+    np.testing.assert_array_equal(b.rows["x"], before)
+    assert not b.fresh.any()
+    out = b.gather(np.asarray([0, 3]))
+    np.testing.assert_array_equal(np.asarray(out["x"]), np.full((2, 2), 5.0))
+    # a scatter after the broadcast re-freshens exactly its rows
+    b.scatter(np.asarray([2]), {"x": np.full((1, 2), 8.0)})
+    dense = b.materialize()
+    np.testing.assert_array_equal(dense["x"][2], np.full(2, 8.0))
+    np.testing.assert_array_equal(dense["x"][0], np.full(2, 5.0))
+
+
+def test_spill_prefetch_consumed_and_invalidated():
+    b = HostSpillBank(rows=_np_bank(), n=6)
+    b.prefetch(np.asarray([1, 2]))
+    out = b.gather(np.asarray([1, 2]))       # consumes the prefetch
+    np.testing.assert_array_equal(np.asarray(out["x"]),
+                                  b.rows["x"][[1, 2]])
+    b.prefetch(np.asarray([1, 2]))
+    b.scatter(np.asarray([1]), {"x": np.full((1, 2), -1.0)})  # drops it
+    out = b.gather(np.asarray([1, 2]))
+    np.testing.assert_array_equal(np.asarray(out["x"][0]), np.full(2, -1.0))
+    b.prefetch(np.asarray([0, 1]))
+    out = b.gather(np.asarray([3, 4]))       # mismatched ids: fresh gather
+    np.testing.assert_array_equal(np.asarray(out["x"]),
+                                  b.rows["x"][[3, 4]])
+
+
+# ------------------------------------------- spill vs dense round parity
+
+def _toy_round_pieces(lossy=False):
+    """A tiny population round program: the local step moves each cohort
+    state by a deterministic function of (global id, batch); the sync
+    averages and halves."""
+    def local(states, server, batch, key, ids):
+        upd = {"x": states["x"] + batch[:, None] * (ids[:, None] + 1.0)}
+        return upd, server
+
+    def sync_update(server, avg):
+        new_client = {"x": avg["x"] * 0.5 + server["s"]}
+        return new_client, {"s": server["s"] + 1.0}
+
+    codec = make_codec("topk", topk_frac=0.5) if lossy else None
+    return local, sync_update, codec
+
+
+@pytest.mark.parametrize("lossy", [False, True])
+def test_cohort_round_matches_dense_population_round(lossy):
+    """A spilled run (HostSpillBank + make_cohort_round, broadcast
+    write-back on host) replays the dense make_population_round trajectory
+    bit-for-bit — including duplicate-heavy cohorts and the lossy EF
+    path."""
+    n, c, q, rounds = 6, 3, 2, 4
+    local, sync_update, codec = _toy_round_pieces(lossy)
+    dense_round = make_population_round(local, sync_update, q, codec=codec)
+    cohort_round = make_cohort_round(local, sync_update, q, codec=codec)
+    key = jax.random.PRNGKey(0)
+
+    bank0 = {"x": jnp.arange(n * 2, dtype=jnp.float32).reshape(n, 2)}
+    server0 = {"s": jnp.zeros(())}
+    ef0 = zeros_ef(codec, bank0) if lossy else None
+
+    # duplicate-heavy cohorts (trace shortfall cycling)
+    cohorts = [jnp.asarray(v, jnp.int32) for v in
+               ([0, 0, 1], [2, 5, 2], [4, 4, 4], [1, 3, 1])]
+    batches = [jnp.arange(q * c, dtype=jnp.float32).reshape(q, c) + r
+               for r in range(rounds)]
+
+    bank, last_sync, server = bank0, jnp.zeros(n, jnp.int32), server0
+    ef = ef0
+    for r in range(rounds):
+        if lossy:
+            bank, last_sync, ef, server = dense_round(
+                bank, last_sync, ef, server, cohorts[r], batches[r], key,
+                jnp.int32(r))
+        else:
+            bank, last_sync, server = dense_round(
+                bank, last_sync, server, cohorts[r], batches[r], key,
+                jnp.int32(r))
+
+    spill = HostSpillBank.from_device(bank0)
+    ef_spill = HostSpillBank.from_device(ef0) if lossy else None
+    ls = np.zeros(n, np.int32)
+    server_s = server0
+    for r in range(rounds):
+        ids = np.asarray(cohorts[r])
+        cur = spill.gather(ids)
+        if lossy:
+            ef_c = ef_spill.gather(ids)
+            new_client, ef_c, server_s = cohort_round(
+                cur, jnp.asarray(ls[ids]), ef_c, server_s, cohorts[r],
+                batches[r], key, jnp.int32(r))
+            ef_spill.scatter(ids, ef_c)
+        else:
+            new_client, server_s = cohort_round(
+                cur, jnp.asarray(ls[ids]), server_s, cohorts[r],
+                batches[r], key, jnp.int32(r))
+        spill.broadcast(new_client)
+        ls[:] = r + 1
+        if r + 1 < rounds:
+            spill.prefetch(np.asarray(cohorts[r + 1]))
+
+    np.testing.assert_array_equal(np.asarray(bank["x"]),
+                                  spill.materialize()["x"])
+    np.testing.assert_array_equal(np.asarray(last_sync), ls)
+    np.testing.assert_array_equal(np.asarray(server["s"]),
+                                  np.asarray(server_s["s"]))
+    if lossy:
+        np.testing.assert_array_equal(np.asarray(ef["x"]),
+                                      ef_spill.materialize()["x"])

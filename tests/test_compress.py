@@ -278,6 +278,29 @@ def test_driver_bytes_follow_formulas_sync_engines(codec_kw):
         assert r.bytes_down[-1] == comms * rx * down_b, mode
 
 
+@pytest.mark.parametrize("codec_kw", [dict(),
+                                      dict(codec="topk", topk_frac=0.5)])
+def test_driver_bytes_duplicate_cohort_bills_unique_transmitters(codec_kw):
+    """Wire convention (docs/sharding.md): a duplicate cohort id — trace
+    shortfall cycling — fills two aggregation slots but the client computed
+    and shipped ONE message, so bytes_up prices unique transmitters."""
+    class Dup:
+        def cohort(self, r):
+            return jnp.asarray([2, 2], jnp.int32)
+    d = _quad_driver("adafbio", m=4)
+    if codec_kw:
+        d.fed = dataclasses.replace(d.alg.fed, **codec_kw)
+        d.alg = make_algorithm("adafbio", d.fed, d.problem)
+    d.population = PopulationConfig(n=4, cohort=2)
+    d.sampler = Dup()
+    r = d.run(16, eval_every=16)
+    msg_b, down_b = _one_client_bytes(d, d.codec)
+    comms = r.comms[-1]
+    assert comms > 0
+    assert r.bytes_up[-1] == comms * 1 * msg_b      # 1 unique transmitter
+    assert r.bytes_down[-1] == comms * 4 * down_b   # broadcast: all N rows
+
+
 def test_driver_bytes_follow_formulas_async():
     """Async: bytes_up counts every ARRIVAL (dropped ones shipped before
     the gate), bytes_down the per-round synced rows."""

@@ -79,6 +79,22 @@ def test_async_round_on_mesh_matches_single_device(two_devices):
         np.testing.assert_array_equal(a["staleness"], b["staleness"])
 
 
+def test_async_state_is_partitioned_on_mesh(two_devices):
+    """Layout, not just parity: bank and pending rows (and the [N]
+    bookkeeping vectors) PARTITION over the client mesh axis — each device
+    holds N/2 rows and half the bytes (docs/sharding.md)."""
+    s1, _ = _run_async(two_devices)
+    for part in ("bank", "pending"):
+        for leaf in jax.tree.leaves(s1[part]):
+            shards = leaf.addressable_shards
+            assert len(shards) == 2, part
+            assert sorted(s.data.shape[0] for s in shards) == [N // 2] * 2
+            assert sum(s.data.nbytes for s in shards) == leaf.nbytes
+    for vec in ("last_sync", "in_flight", "dispatch_round", "return_round"):
+        shards = s1[vec].addressable_shards
+        assert sorted(s.data.shape[0] for s in shards) == [N // 2] * 2
+
+
 def test_async_round_on_mesh_with_codec(two_devices):
     """The lossy-codec async program (EF bank sharded like the state bank)
     runs on the mesh and matches the single-device codec path."""
@@ -124,6 +140,13 @@ def test_sync_population_round_on_mesh(two_devices):
         np.testing.assert_allclose(np.asarray(a, np.float32),
                                    np.asarray(b, np.float32),
                                    atol=1e-5, rtol=1e-5)
+    # the mesh bank is genuinely PARTITIONED: every leaf splits its leading
+    # population axis across the 2 devices — N/2 rows, half the bytes each
+    for leaf in jax.tree.leaves(outs[1]):
+        shards = leaf.addressable_shards
+        assert len(shards) == 2
+        assert sorted(s.data.shape[0] for s in shards) == [N // 2] * 2
+        assert sum(s.data.nbytes for s in shards) == leaf.nbytes
     # lossy codec: the jitted program donates bank AND EF bank — run two
     # rounds rebinding the outputs (the only legal use of donated args)
     fed = FedConfig(q=2, neumann_k=2, lr_x=1e-2, lr_y=1e-1, codec="topk",
