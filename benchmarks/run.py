@@ -30,10 +30,14 @@ import numpy as np
 
 ENGINE = "eager"        # set by --engine; drivers below inherit it
 SEED = 0                # set by --seed; every driver run key derives from it
+TELE = None             # set by --metrics-out; mirrors rows as bench_row
 
 
 def _row(name, us, derived=""):
     print(f"{name},{us:.1f},{derived}", flush=True)
+    if TELE is not None:
+        TELE.emit({"kind": "bench_row", "name": name,
+                   "us_per_call": round(float(us), 1), "derived": derived})
 
 
 def _key():
@@ -322,7 +326,7 @@ def roofline_summary():
 
 
 def main() -> None:
-    global ENGINE, SEED
+    global ENGINE, SEED, TELE
     ap = argparse.ArgumentParser()
     ap.add_argument("--engine", default="eager", choices=["eager", "scan"],
                     help="local-step engine for the driver-based benchmarks "
@@ -372,6 +376,10 @@ def main() -> None:
                     help="topk codec: fraction of entries transmitted")
     ap.add_argument("--ef", default="on", choices=["on", "off"],
                     help="error feedback for the compressed variant")
+    ap.add_argument("--metrics-out", default=None, metavar="FILE",
+                    help="also write the rows as telemetry JSONL: one "
+                         "manifest record then one bench_row per CSV row "
+                         "(render/validate with scripts/report.py)")
     benches = {
         "table1": table1_complexity,
         "fig_hyperrep": fig1_hyperrep,
@@ -395,12 +403,20 @@ def main() -> None:
         topk_frac=args.topk_frac, ef=args.ef == "on")
     ENGINE = args.engine
     SEED = args.seed
+    if args.metrics_out:
+        from repro.obs import make_telemetry
+        TELE = make_telemetry(args.metrics_out)
+        TELE.manifest(config=vars(args), seed=args.seed)
     print("name,us_per_call,derived")
-    if args.only:
-        benches[args.only]()
-        return
-    for fn in benches.values():
-        fn()
+    try:
+        if args.only:
+            benches[args.only]()
+        else:
+            for fn in benches.values():
+                fn()
+    finally:
+        if TELE is not None:
+            TELE.close()
 
 
 if __name__ == "__main__":

@@ -44,13 +44,15 @@ sys.path.insert(0, "src")
 import jax
 
 TASKS = ("hyperclean", "hyperrep")
-BENCHES = ("async", "compression", "bank_scale")
+BENCHES = ("async", "compression", "bank_scale", "obs_overhead")
 # bumped whenever a cell/meta field changes shape; shared by ALL artifacts
 # so downstream consumers can gate on one number
-SCHEMA = 2
+# 3: every artifact gains a top-level "manifest" header (repro.obs)
+SCHEMA = 3
 DEFAULT_OUT = {"async": "BENCH_async_sweep.json",
                "compression": "BENCH_compression.json",
-               "bank_scale": "BENCH_bank_scale.json"}
+               "bank_scale": "BENCH_bank_scale.json",
+               "obs_overhead": "BENCH_obs_overhead.json"}
 
 
 def build_task(name: str, n_clients: int):
@@ -308,6 +310,94 @@ def run_bank_scale(args) -> dict:
     }
 
 
+def run_obs_overhead(args) -> dict:
+    """Telemetry overhead guardrail (``--bench obs_overhead`` →
+    ``BENCH_obs_overhead.json``): the SAME population-engine run with
+    telemetry off vs on (a live ``Telemetry`` bus + MemorySink + the
+    on-device stat accumulator, drained every ``--metrics-every`` rounds)
+    and the steady per-round wall-clock of each. Records ``overhead_frac``
+    = on/off - 1; the budget (docs/observability.md) is <= 5%. Each mode
+    runs ``--reps`` times and keeps its best mean — per-round means on a
+    busy CPU host are noisy and the overhead is a property of the code
+    path, not of scheduler luck. Also records ``parity``: the final grad
+    norms of the two modes must be bit-identical (telemetry is strictly
+    observational; tests/test_obs.py pins the full trajectory)."""
+    from repro.configs.base import PopulationConfig
+    from repro.core.baselines import make_algorithm
+    from repro.obs import MemorySink, Telemetry
+    from tests.test_system import _quad_driver
+
+    def build():
+        # the population_scale recalibration: defaults are tuned for d=8
+        d = _quad_driver("adafbio", m=args.population, d=96, p=64)
+        d.fed = dataclasses.replace(d.alg.fed, lr_x=0.05, lr_y=0.2)
+        d.alg = make_algorithm("adafbio", d.fed, d.problem)
+        d.population = PopulationConfig(n=args.population,
+                                        cohort=args.cohort,
+                                        sampler=args.sampler)
+        return d
+
+    def measure(with_tele):
+        best, result = None, None
+        for _ in range(max(args.reps, 1)):
+            d = build()
+            tele = None
+            if with_tele:
+                tele = Telemetry([MemorySink()],
+                                 metrics_every=args.metrics_every)
+                d.telemetry = tele
+            steps = args.rounds * d.fed.q
+            r = d.run(steps, key=jax.random.PRNGKey(args.seed),
+                      eval_every=max(steps - 1, 1))
+            if tele is not None:
+                tele.close()
+            timed = d.round_seconds[1:] or d.round_seconds
+            mean = sum(timed) / max(len(timed), 1)
+            if best is None or mean < best:
+                best, result = mean, r
+        return best, result
+
+    print(f"[1/2] baseline (telemetry off): N={args.population} "
+          f"C={args.cohort} rounds={args.rounds} reps={args.reps}",
+          flush=True)
+    off, r_off = measure(False)
+    print(f"[2/2] telemetry on: metrics_every={args.metrics_every}",
+          flush=True)
+    on, r_on = measure(True)
+    overhead = on / max(off, 1e-12) - 1.0
+    print(f"baseline {off * 1e3:.2f}ms/round, telemetry {on * 1e3:.2f}"
+          f"ms/round: overhead {overhead * 100:+.2f}%", flush=True)
+    cells = [
+        {"mode": "baseline",
+         "round_seconds": round(off, 6),
+         "rounds_per_sec": round(1.0 / max(off, 1e-12), 3),
+         "grad_normT": json_safe(float(r_off.grad_norm[-1]))},
+        {"mode": "telemetry",
+         "round_seconds": round(on, 6),
+         "rounds_per_sec": round(1.0 / max(on, 1e-12), 3),
+         "metrics_every": args.metrics_every,
+         "grad_normT": json_safe(float(r_on.grad_norm[-1]))},
+    ]
+    return {
+        "bench": "obs_overhead",
+        "schema": SCHEMA,
+        "meta": {
+            "population": args.population,
+            "cohort": args.cohort,
+            "rounds": args.rounds,
+            "reps": args.reps,
+            "metrics_every": args.metrics_every,
+            "sampler": args.sampler,
+            "seed": args.seed,
+            "overhead_frac": round(overhead, 4),
+            "target_frac": 0.05,
+            "parity": bool(float(r_off.grad_norm[-1])
+                           == float(r_on.grad_norm[-1])),
+        },
+        "cells": cells,
+    }
+
+
 def run_sweep(args) -> dict:
     """The full grid: per task, one sync baseline + every
     (max_staleness, delay_model, delay_eta) combination."""
@@ -398,7 +488,9 @@ def main(argv=None) -> None:
                     help="async: convergence-vs-staleness grid; "
                          "compression: bytes-vs-convergence codec grid; "
                          "bank_scale: sharded-bank round time and "
-                         "per-device bytes vs population size N")
+                         "per-device bytes vs population size N; "
+                         "obs_overhead: telemetry-on vs -off steady "
+                         "round time (budget: <= 5%%)")
     ap.add_argument("--task", default="hyperclean,hyperrep",
                     help="comma list of tasks: hyperclean, hyperrep")
     ap.add_argument("--steps", type=int, default=64,
@@ -444,7 +536,14 @@ def main(argv=None) -> None:
                          "--xla_force_host_platform_device_count, set "
                          "automatically when possible)")
     ap.add_argument("--rounds", type=int, default=6,
-                    help="bank_scale bench: timed rounds per cell")
+                    help="bank_scale / obs_overhead bench: timed rounds "
+                         "per cell")
+    ap.add_argument("--metrics-every", type=int, default=8,
+                    help="obs_overhead bench: stat drain / flush cadence "
+                         "of the telemetry-on run")
+    ap.add_argument("--reps", type=int, default=3,
+                    help="obs_overhead bench: repetitions per mode (the "
+                         "best mean round time wins — wall-clock noise)")
     ap.add_argument("--seed", type=int, default=0,
                     help="run key seed (one key per cell, shared)")
     ap.add_argument("--out", default=None,
@@ -463,9 +562,15 @@ def main(argv=None) -> None:
                 flags + " --xla_force_host_platform_device_count="
                 + str(args.devices))
         out = run_bank_scale(args)
+    elif args.bench == "obs_overhead":
+        out = run_obs_overhead(args)
     else:
         out = (run_compression_sweep(args) if args.bench == "compression"
                else run_sweep(args))
+    # schema 3: every artifact carries the run manifest (repro.obs) — what
+    # produced it: config, git SHA, jax version, device topology, seed
+    from repro.obs import run_manifest
+    out["manifest"] = run_manifest(config=vars(args), seed=args.seed)
     with open(args.out, "w") as f:
         json.dump(out, f, indent=1, allow_nan=False)
         f.write("\n")

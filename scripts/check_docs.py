@@ -28,6 +28,7 @@ TOOLS = {
               "### `python -m repro.launch.train`"),
     "bench": ("benchmarks/run.py", "### `python benchmarks/run.py`"),
     "sweep": ("benchmarks/sweep.py", "### `python benchmarks/sweep.py`"),
+    "report": ("scripts/report.py", "### `python scripts/report.py`"),
 }
 
 ARG_RE = re.compile(r"""add_argument\(\s*["'](--[a-z0-9-]+)["']""")
@@ -53,7 +54,7 @@ def readme_sections(readme: pathlib.Path) -> dict:
 
 
 DOCS = ("docs/ARCHITECTURE.md", "docs/async.md", "docs/compression.md",
-        "docs/sharding.md")
+        "docs/sharding.md", "docs/observability.md")
 
 
 def main() -> int:

@@ -212,26 +212,32 @@ def make_population_round(local_step_ids: Callable, sync_update: Callable,
             st, srv = local_step_ids(st, srv, batch, key, ids)
             return (st, srv), None
 
-        (cur, server), _ = jax.lax.scan(body, (cur, server), batches_q,
-                                        length=q)
+        # named_scope = pure XLA op metadata: the regions show up in a
+        # jax.profiler trace (docs/observability.md), numerics untouched
+        with jax.named_scope("round/local_scan"):
+            (cur, server), _ = jax.lax.scan(body, (cur, server), batches_q,
+                                            length=q)
         return cur, server
 
     def write_back(bank_states, last_sync, new_client, ids, round_id):
-        if sync_mode == "broadcast":
-            return (broadcast(bank_states, new_client),
-                    jnp.full_like(last_sync, round_id + 1))
-        c = ids.shape[0]
-        return (scatter(bank_states, ids,
-                        jax.tree.map(lambda v: jnp.broadcast_to(
-                            v[None], (c,) + v.shape), new_client)),
-                last_sync.at[ids].set(round_id + 1))
+        with jax.named_scope("round/scatter"):
+            if sync_mode == "broadcast":
+                return (broadcast(bank_states, new_client),
+                        jnp.full_like(last_sync, round_id + 1))
+            c = ids.shape[0]
+            return (scatter(bank_states, ids,
+                            jax.tree.map(lambda v: jnp.broadcast_to(
+                                v[None], (c,) + v.shape), new_client)),
+                    last_sync.at[ids].set(round_id + 1))
 
     def round_fn(bank_states, last_sync, server, ids, batches_q, key,
                  round_id):
-        cur, server = run_steps(gather(bank_states, ids), server, ids,
-                                batches_q, key)
-        w = staleness_weights(last_sync, ids, round_id, staleness_decay)
-        new_client, server = sync_update(server, weighted_mean(cur, w))
+        with jax.named_scope("round/gather"):
+            cur = gather(bank_states, ids)
+        cur, server = run_steps(cur, server, ids, batches_q, key)
+        with jax.named_scope("round/aggregate"):
+            w = staleness_weights(last_sync, ids, round_id, staleness_decay)
+            new_client, server = sync_update(server, weighted_mean(cur, w))
         bank_states, last_sync = write_back(bank_states, last_sync,
                                             new_client, ids, round_id)
         return bank_states, last_sync, server
@@ -243,15 +249,18 @@ def make_population_round(local_step_ids: Callable, sync_update: Callable,
 
     def round_fn_codec(bank_states, last_sync, ef_bank, server, ids,
                        batches_q, key, round_id):
-        ref = gather(bank_states, ids)   # server-known dispatch states
+        with jax.named_scope("round/gather"):
+            ref = gather(bank_states, ids)   # server-known dispatch states
         cur, server = run_steps(ref, server, ids, batches_q, key)
-        ef_c = gather(ef_bank, ids) if ef_bank is not None else None
-        recon, ef_c = client_messages(codec, key, round_id, ids, ref, cur,
-                                      ef_c)
-        if ef_bank is not None:
-            ef_bank = scatter(ef_bank, ids, ef_c)
-        w = staleness_weights(last_sync, ids, round_id, staleness_decay)
-        new_client, server = sync_update(server, weighted_mean(recon, w))
+        with jax.named_scope("round/codec"):
+            ef_c = gather(ef_bank, ids) if ef_bank is not None else None
+            recon, ef_c = client_messages(codec, key, round_id, ids, ref,
+                                          cur, ef_c)
+            if ef_bank is not None:
+                ef_bank = scatter(ef_bank, ids, ef_c)
+        with jax.named_scope("round/aggregate"):
+            w = staleness_weights(last_sync, ids, round_id, staleness_decay)
+            new_client, server = sync_update(server, weighted_mean(recon, w))
         bank_states, last_sync = write_back(bank_states, last_sync,
                                             new_client, ids, round_id)
         return bank_states, last_sync, ef_bank, server
@@ -288,14 +297,17 @@ def make_cohort_round(local_step_ids: Callable, sync_update: Callable,
             st, srv = local_step_ids(st, srv, batch, key, ids)
             return (st, srv), None
 
-        (cur, server), _ = jax.lax.scan(body, (cur, server), batches_q,
-                                        length=q)
+        with jax.named_scope("round/local_scan"):
+            (cur, server), _ = jax.lax.scan(body, (cur, server), batches_q,
+                                            length=q)
         return cur, server
 
     def round_fn(cur, last_sync_c, server, ids, batches_q, key, round_id):
         cur, server = run_steps(cur, server, ids, batches_q, key)
-        w = cohort_staleness_weights(last_sync_c, round_id, staleness_decay)
-        new_client, server = sync_update(server, weighted_mean(cur, w))
+        with jax.named_scope("round/aggregate"):
+            w = cohort_staleness_weights(last_sync_c, round_id,
+                                         staleness_decay)
+            new_client, server = sync_update(server, weighted_mean(cur, w))
         return new_client, server
 
     if not lossy:
@@ -307,10 +319,14 @@ def make_cohort_round(local_step_ids: Callable, sync_update: Callable,
                        round_id):
         ref = cur                     # server-known dispatch states
         cur, server = run_steps(ref, server, ids, batches_q, key)
-        recon, ef_c = client_messages(codec, key, round_id, ids, ref, cur,
-                                      ef_c)
-        w = cohort_staleness_weights(last_sync_c, round_id, staleness_decay)
-        new_client, server = sync_update(server, weighted_mean(recon, w))
+        with jax.named_scope("round/codec"):
+            recon, ef_c = client_messages(codec, key, round_id, ids, ref,
+                                          cur, ef_c)
+        with jax.named_scope("round/aggregate"):
+            w = cohort_staleness_weights(last_sync_c, round_id,
+                                         staleness_decay)
+            new_client, server = sync_update(server,
+                                             weighted_mean(recon, w))
         return new_client, ef_c, server
 
     return round_fn_codec
@@ -729,7 +745,8 @@ def make_async_round(local_step_ids: Callable, sync_update: Callable,
         w = accept.astype(jnp.float32) * (1.0 + tau) ** (-staleness_decay)
         w = w / jnp.maximum(w.sum(), 1e-12)
         # no-arrival rounds aggregate the anchor (result discarded below)
-        avg = _tree_where(has, weighted_mean(pending, w), anchor)
+        with jax.named_scope("round/aggregate"):
+            avg = _tree_where(has, weighted_mean(pending, w), anchor)
 
         # 3. server step (+ delay-adaptive scaling of the model movement)
         new_client, new_server = sync_update(server, avg)
@@ -758,7 +775,8 @@ def make_async_round(local_step_ids: Callable, sync_update: Callable,
 
         # 4. dispatch the cohort (in-flight members are ineligible)
         eligible = ~in_flight[ids]
-        cur = gather(bank, ids)
+        with jax.named_scope("round/gather"):
+            cur = gather(bank, ids)
         ref = cur                     # server-known dispatch states
 
         def body(carry, batch):
@@ -766,7 +784,8 @@ def make_async_round(local_step_ids: Callable, sync_update: Callable,
             st, srv = local_step_ids(st, srv, batch, key, ids)
             return (st, srv), None
 
-        (cur, server), _ = jax.lax.scan(body, (cur, server), batches_q)
+        with jax.named_scope("round/local_scan"):
+            (cur, server), _ = jax.lax.scan(body, (cur, server), batches_q)
         if lossy:
             # the message fixed at send time: what arrives (and aggregates)
             # from `pending` is the codec's reconstruction; residuals update
@@ -778,11 +797,12 @@ def make_async_round(local_step_ids: Callable, sync_update: Callable,
             if ef is not None:
                 ef = scatter_where(ef, ids, ef_c_new, eligible)
         delays = dm.schedule(key, round_id, n)[ids]
-        pending = scatter_where(pending, ids, cur, eligible)
-        # the bank row mirrors the client's own latest local state (same
-        # meaning as the sync path's post-round scatter); the server never
-        # reads it before the arrival lands from `pending`
-        bank = scatter_where(bank, ids, cur, eligible)
+        with jax.named_scope("round/scatter"):
+            pending = scatter_where(pending, ids, cur, eligible)
+            # the bank row mirrors the client's own latest local state (same
+            # meaning as the sync path's post-round scatter); the server
+            # never reads it before the arrival lands from `pending`
+            bank = scatter_where(bank, ids, cur, eligible)
         new_flight = in_flight.at[ids].set(True)  # eligible start, rest stay
         # the UNIQUE clients that started work: duplicate cohort ids (trace
         # shortfall cycling) occupy two slots but dispatch one client

@@ -50,9 +50,12 @@ def make_round_step(local_step: Callable, sync_step: Callable,
             st, srv = local_step(st, srv, batch, key)
             return (st, srv), None
 
-        (states, server), _ = jax.lax.scan(body, (states, server), batches_q,
-                                           length=q)
-        return sync_step(states, server)
+        # named_scope: profiler-visible region names (docs/observability.md)
+        with jax.named_scope("round/local_scan"):
+            (states, server), _ = jax.lax.scan(body, (states, server),
+                                               batches_q, length=q)
+        with jax.named_scope("round/sync"):
+            return sync_step(states, server)
 
     return round_step
 

@@ -92,14 +92,18 @@ class HostSpillBank:
     def gather(self, ids, device=None):
         """The cohort rows as device arrays ([C, ...] pytree). Consumes the
         matching :meth:`prefetch` result when one is pending."""
-        ids = np.asarray(ids)
-        if self._prefetched is not None:
-            key, tree = self._prefetched
-            self._prefetched = None
-            if np.array_equal(key, ids):
-                return tree
-        out = self._host_gather(ids)
-        return jax.device_put(out, device)
+        # TraceAnnotation: the host-side spill phases show up as named
+        # regions in a jax.profiler trace (docs/observability.md); no-op
+        # (one cheap object) when no trace is active
+        with jax.profiler.TraceAnnotation("spill_gather"):
+            ids = np.asarray(ids)
+            if self._prefetched is not None:
+                key, tree = self._prefetched
+                self._prefetched = None
+                if np.array_equal(key, ids):
+                    return tree
+            out = self._host_gather(ids)
+            return jax.device_put(out, device)
 
     def prefetch(self, ids, device=None) -> None:
         """Start the host->device transfer of a FUTURE cohort.
@@ -107,23 +111,25 @@ class HostSpillBank:
         whatever host work follows; the next :meth:`gather` with the same
         ids consumes it. Any bank write drops the prefetch (the rows may
         have changed)."""
-        ids = np.asarray(ids)
-        self._prefetched = (ids, jax.device_put(self._host_gather(ids),
-                                                device))
+        with jax.profiler.TraceAnnotation("spill_prefetch"):
+            ids = np.asarray(ids)
+            self._prefetched = (ids, jax.device_put(self._host_gather(ids),
+                                                    device))
 
     def scatter(self, ids, values) -> None:
         """Write cohort rows back (host-side). Duplicate ids resolve
         last-wins, matching ``repro.fed.population.scatter``."""
-        ids = np.asarray(ids)
-        self._prefetched = None
-        keep = _last_wins_mask(ids)
-        win_ids = ids[keep]
+        with jax.profiler.TraceAnnotation("spill_scatter"):
+            ids = np.asarray(ids)
+            self._prefetched = None
+            keep = _last_wins_mask(ids)
+            win_ids = ids[keep]
 
-        def one(rows_leaf, vals):
-            v = np.asarray(vals)[keep]
-            rows_leaf[win_ids] = v.astype(rows_leaf.dtype)
-        jax.tree.map(one, self.rows, values)
-        self.fresh[win_ids] = True
+            def one(rows_leaf, vals):
+                v = np.asarray(vals)[keep]
+                rows_leaf[win_ids] = v.astype(rows_leaf.dtype)
+            jax.tree.map(one, self.rows, values)
+            self.fresh[win_ids] = True
 
     def broadcast(self, value) -> None:
         """Every row := one client state — lazily: store it as ``base`` and

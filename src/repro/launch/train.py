@@ -29,6 +29,7 @@ from repro.fed.runtime import FederatedTrainer, client_batch_specs
 from repro.fed.sampling import SAMPLERS, load_delay_trace, make_sampler
 from repro.core.tree_util import tree_stack
 from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.obs import NULL, StatAccum, make_telemetry, progress_line
 
 
 def main():
@@ -110,6 +111,19 @@ def main():
     ap.add_argument("--ef", default="on", choices=["on", "off"],
                     help="error feedback: carry per-client compression "
                          "residuals into the next transmission")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the run's telemetry stream (manifest + "
+                         "per-round records + on-device stats + summary) "
+                         "to this JSONL file; render/validate it with "
+                         "scripts/report.py (docs/observability.md)")
+    ap.add_argument("--metrics-every", type=int, default=8,
+                    help="drain the on-device stat accumulator (and flush "
+                         "buffered round records) every K rounds — one "
+                         "host transfer per K rounds")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="dump a TensorBoard-viewable jax.profiler trace "
+                         "of the whole run into DIR (gather/round/scatter "
+                         "show up as named regions; docs/observability.md)")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -133,11 +147,22 @@ def main():
     tr = FederatedTrainer(cfg, fed, shape, mesh=mesh,
                           algorithm=args.algorithm)
     key = jax.random.PRNGKey(args.seed)
+    tele = make_telemetry(args.metrics_out, args.metrics_every,
+                          args.profile)
+    tele.manifest(config=vars(args), seed=args.seed, mesh=tr.mesh)
+    try:
+        run_cli(args, cfg, fed, shape, tr, key, tele)
+    finally:
+        # writes the closing summary record and stops the profiler trace
+        tele.close()
+
+
+def run_cli(args, cfg, fed, shape, tr: FederatedTrainer, key, tele):
     if args.spill != "none" and not args.population:
         raise SystemExit("--spill host spills the population bank: run "
                          "with --population N")
     if args.population:
-        run_population(args, cfg, fed, shape, tr, key)
+        run_population(args, cfg, fed, shape, tr, key, tele)
         return
     specs, axes = client_batch_specs(cfg, shape, tr.m, fed)
     data = FederatedLMData(vocab=cfg.vocab, n_clients=tr.m)
@@ -161,20 +186,32 @@ def main():
             print(f"engine=scan runs whole rounds: {steps_done - start} steps "
                   f"instead of the requested {args.steps - start} "
                   f"(use --steps divisible by q={fed.q})", flush=True)
+        acc = (StatAccum.create(states, tele.metrics_every, tele.consensus)
+               if tele.sinks else None)
         for r in range(n_rounds):
             t = start + r * fed.q
-            batch_q = tree_stack([make_client_batch(data, cfg, specs, t + j)
-                                  for j in range(fed.q)])
+            with tele.span("batch_build"):
+                batch_q = tree_stack([make_client_batch(data, cfg, specs,
+                                                        t + j)
+                                      for j in range(fed.q)])
             r0 = time.time()
-            states, server = round_fn(states, server, batch_q, key)
-            jax.block_until_ready(states)
+            with tele.span("round_program"):
+                states, server = round_fn(states, server, batch_q, key)
+                jax.block_until_ready(states)
             dt = time.time() - r0
+            tele.round(r, step=t + fed.q - 1, round_seconds=dt)
+            if acc is not None:
+                acc.update(states)
+                if acc.ready:
+                    tele.stats(**acc.drain())
             if r % max(args.eval_every // fed.q, 1) == 0 or r == n_rounds - 1:
                 last = jax.tree.map(lambda x: x[-1], batch_q)
                 loss = float(ev(states, last))
-                print(f"round {r:4d} (step {t + fed.q - 1:5d})  "
-                      f"f(x̄,ȳ) = {loss:.4f}  round={dt*1e3:.1f}ms  "
-                      f"({time.time()-t0:.1f}s)", flush=True)
+                print(progress_line(loss=loss, elapsed=time.time() - t0,
+                                    step=t + fed.q - 1, round=r,
+                                    round_seconds=dt), flush=True)
+        if acc is not None and acc.pending:
+            tele.stats(**acc.drain())
     else:
         local = jax.jit(tr.local_step_fn())
         sync = jax.jit(tr.sync_step_fn())
@@ -185,14 +222,15 @@ def main():
             states, server = local(states, server, batch, key)
             if t % args.eval_every == 0 or t == args.steps - 1:
                 loss = float(ev(states, batch))
-                print(f"step {t:5d}  f(x̄,ȳ) = {loss:.4f}  "
-                      f"({time.time()-t0:.1f}s)", flush=True)
+                print(progress_line(loss=loss, elapsed=time.time() - t0,
+                                    step=t), flush=True)
     if args.ckpt:
         save_checkpoint(args.ckpt, (states, server), steps_done)
         print(f"saved checkpoint to {args.ckpt} at step {steps_done}")
 
 
-def run_population(args, cfg, fed, shape, tr: FederatedTrainer, key):
+def run_population(args, cfg, fed, shape, tr: FederatedTrainer, key,
+                   tele=NULL):
     """Population mode: N persistent client states, C-client cohort rounds.
 
     Each round: sample C global ids, build ONLY their batches (O(C) host
@@ -213,7 +251,7 @@ def run_population(args, cfg, fed, shape, tr: FederatedTrainer, key):
                              "broadcast rounds: the async pending buffer "
                              "is device-resident (set --max-staleness 0)")
         run_population_async(args, cfg, fed, tr, key, data, specs_c,
-                             axes_c, specs_n, sampler)
+                             axes_c, specs_n, sampler, tele)
         return
     if args.delay_model != "uniform" or args.tiers is not None:
         raise SystemExit("--delay-model / --tiers are async knobs: set "
@@ -221,7 +259,7 @@ def run_population(args, cfg, fed, shape, tr: FederatedTrainer, key):
                          "execution")
     if args.spill != "none":
         run_population_spill(args, cfg, fed, tr, key, data, specs_c,
-                             specs_n, sampler)
+                             specs_n, sampler, tele)
         return
     bank, last_sync, server = tr.init_population_states(
         key, make_client_batch(data, cfg, specs_n, 0), n)
@@ -262,22 +300,27 @@ def run_population(args, cfg, fed, shape, tr: FederatedTrainer, key):
     print(f"population mode: N={n} clients, C={c} cohort/round "
           f"({args.sampler} sampler), rounds {start_round}..{n_rounds - 1} "
           f"of q={fed.q}", flush=True)
+    acc = (StatAccum.create(bank, tele.metrics_every, tele.consensus)
+           if tele.sinks else None)
     t0 = time.time()
     for r in range(start_round, n_rounds):
         t = r * fed.q
         ids = sampler.cohort(r)
-        batch_q = tree_stack([make_cohort_batch(data, cfg, specs_c, t + j,
-                                                ids)
-                              for j in range(fed.q)])
+        with tele.span("batch_build"):
+            batch_q = tree_stack([make_cohort_batch(data, cfg, specs_c,
+                                                    t + j, ids)
+                                  for j in range(fed.q)])
         r0 = time.time()
-        if lossy:
-            bank, last_sync, ef, server = round_fn(
-                bank, last_sync, ef, server, ids, batch_q, key,
-                jnp.int32(r))
-        else:
-            bank, last_sync, server = round_fn(bank, last_sync, server, ids,
-                                               batch_q, key, jnp.int32(r))
-        jax.block_until_ready(bank)
+        with tele.span("round_program"):
+            if lossy:
+                bank, last_sync, ef, server = round_fn(
+                    bank, last_sync, ef, server, ids, batch_q, key,
+                    jnp.int32(r))
+            else:
+                bank, last_sync, server = round_fn(bank, last_sync, server,
+                                                   ids, batch_q, key,
+                                                   jnp.int32(r))
+            jax.block_until_ready(bank)
         dt = time.time() - r0
         # make_population_round closes every round with one sync: each
         # UNIQUE cohort member uploads one codec message (a duplicate id —
@@ -286,14 +329,23 @@ def run_population(args, cfg, fed, shape, tr: FederatedTrainer, key):
         # every bank row downloads the broadcast (sync_mode="broadcast")
         bytes_up += int(np.unique(np.asarray(ids)).size) * msg_b
         bytes_down += n * down_b
+        tele.round(r, step=t + fed.q - 1, round_seconds=dt,
+                   bytes_up=bytes_up, bytes_down=bytes_down)
+        if acc is not None:
+            acc.update(bank)
+            if acc.ready:
+                tele.stats(**acc.drain())
         if r % max(args.eval_every // fed.q, 1) == 0 or r == n_rounds - 1:
             last = jax.tree.map(lambda x: x[-1], batch_q)
             loss = float(ev(bank, last))
-            print(f"round {r:4d} (step {t + fed.q - 1:5d})  "
-                  f"f(x̄,ȳ) = {loss:.4f}  round={dt*1e3:.1f}ms  "
-                  f"up={bytes_up/1e6:.2f}MB down={bytes_down/1e6:.2f}MB  "
-                  f"cohort={np.asarray(ids)[:8].tolist()}...  "
-                  f"({time.time()-t0:.1f}s)", flush=True)
+            print(progress_line(loss=loss, elapsed=time.time() - t0,
+                                step=t + fed.q - 1, round=r,
+                                round_seconds=dt, bytes_up=bytes_up,
+                                bytes_down=bytes_down,
+                                cohort=np.asarray(ids).tolist()),
+                  flush=True)
+    if acc is not None and acc.pending:
+        tele.stats(**acc.drain())
     print(f"wire totals ({tr.codec.name}): bytes_up={bytes_up} "
           f"bytes_down={bytes_down}", flush=True)
     if args.ckpt:
@@ -304,7 +356,7 @@ def run_population(args, cfg, fed, shape, tr: FederatedTrainer, key):
 
 
 def run_population_spill(args, cfg, fed, tr: FederatedTrainer, key, data,
-                         specs_c, specs_n, sampler):
+                         specs_c, specs_n, sampler, tele):
     """Host-spill population mode (--spill host, docs/sharding.md): the
     [N, ...] bank lives in HOST memory (``repro.fed.spill.HostSpillBank``),
     only each round's C sampled rows travel to device, and the round
@@ -353,48 +405,56 @@ def run_population_spill(args, cfg, fed, tr: FederatedTrainer, key, data,
     ids = np.asarray(sampler.cohort(start_round), np.int32)
     for r in range(start_round, n_rounds):
         t = r * fed.q
-        batch_q = tree_stack([make_cohort_batch(data, cfg, specs_c, t + j,
-                                                ids)
-                              for j in range(fed.q)])
+        with tele.span("batch_build"):
+            batch_q = tree_stack([make_cohort_batch(data, cfg, specs_c,
+                                                    t + j, ids)
+                                  for j in range(fed.q)])
         r0 = time.time()
-        cur = spill.gather(ids)
-        ls_c = jnp.asarray(last_sync[ids])
-        jids = jnp.asarray(ids)
-        if lossy:
-            ef_c = (ef_spill.gather(ids) if ef_spill is not None else None)
-            new_client, ef_c, server = round_fn(cur, ls_c, ef_c, server,
-                                                jids, batch_q, key,
-                                                jnp.int32(r))
-        else:
-            new_client, server = round_fn(cur, ls_c, server, jids, batch_q,
-                                          key, jnp.int32(r))
-        jax.block_until_ready(new_client)
-        # dense broadcast write-back, host-side: every row := new_client
-        # (lazy base + fresh-mask clear), stamp last_sync = r + 1
-        spill.broadcast(new_client)
-        last_sync[:] = r + 1
-        if lossy and ef_spill is not None:
-            ef_spill.scatter(ids, ef_c)
+        with tele.span("spill_gather"):
+            cur = spill.gather(ids)
+            ls_c = jnp.asarray(last_sync[ids])
+            jids = jnp.asarray(ids)
+            ef_c = (ef_spill.gather(ids)
+                    if lossy and ef_spill is not None else None)
+        with tele.span("round_program"):
+            if lossy:
+                new_client, ef_c, server = round_fn(cur, ls_c, ef_c, server,
+                                                    jids, batch_q, key,
+                                                    jnp.int32(r))
+            else:
+                new_client, server = round_fn(cur, ls_c, server, jids,
+                                              batch_q, key, jnp.int32(r))
+            jax.block_until_ready(new_client)
+        with tele.span("spill_scatter"):
+            # dense broadcast write-back, host-side: every row := new_client
+            # (lazy base + fresh-mask clear), stamp last_sync = r + 1
+            spill.broadcast(new_client)
+            last_sync[:] = r + 1
+            if lossy and ef_spill is not None:
+                ef_spill.scatter(ids, ef_c)
         next_ids = (np.asarray(sampler.cohort(r + 1), np.int32)
                     if r + 1 < n_rounds else None)
         if next_ids is not None:
             # overlap the next cohort's host->device copy with this round's
             # logging and the next round's host batch building
-            spill.prefetch(next_ids)
-            if ef_spill is not None:
-                ef_spill.prefetch(next_ids)
+            with tele.span("spill_prefetch"):
+                spill.prefetch(next_ids)
+                if ef_spill is not None:
+                    ef_spill.prefetch(next_ids)
         dt = time.time() - r0
         bytes_up += int(np.unique(ids).size) * msg_b
         bytes_down += n * down_b
+        tele.round(r, step=t + fed.q - 1, round_seconds=dt,
+                   bytes_up=bytes_up, bytes_down=bytes_down)
         if r % max(args.eval_every // fed.q, 1) == 0 or r == n_rounds - 1:
             last = jax.tree.map(lambda x: x[-1], batch_q)
             loss = float(ev(jax.tree.map(lambda v: v[None], new_client),
                             last))
-            print(f"round {r:4d} (step {t + fed.q - 1:5d})  "
-                  f"f(x̄,ȳ) = {loss:.4f}  round={dt*1e3:.1f}ms  "
-                  f"up={bytes_up/1e6:.2f}MB down={bytes_down/1e6:.2f}MB  "
-                  f"cohort={ids[:8].tolist()}...  "
-                  f"({time.time()-t0:.1f}s)", flush=True)
+            print(progress_line(loss=loss, elapsed=time.time() - t0,
+                                step=t + fed.q - 1, round=r,
+                                round_seconds=dt, bytes_up=bytes_up,
+                                bytes_down=bytes_down,
+                                cohort=ids.tolist()), flush=True)
         if next_ids is not None:
             ids = next_ids
     print(f"wire totals ({tr.codec.name}): bytes_up={bytes_up} "
@@ -439,7 +499,7 @@ def make_cli_delay_model(args, n: int):
 
 
 def run_population_async(args, cfg, fed, tr: FederatedTrainer, key, data,
-                         specs_c, axes_c, specs_n, sampler):
+                         specs_c, axes_c, specs_n, sampler, tele):
     """Asynchronous population mode: overlapping cohorts with delayed
     arrivals (per-client delays from the pluggable --delay-model),
     server-side bounded-staleness gating, delay-adaptive server steps
@@ -485,16 +545,20 @@ def run_population_async(args, cfg, fed, tr: FederatedTrainer, key, data,
     hist_by_tier = {}
     msg_b, down_b = wire_costs(tr, n)
     bytes_up = bytes_down = 0
+    statacc = (StatAccum.create(state["bank"], tele.metrics_every,
+                                tele.consensus) if tele.sinks else None)
     t0 = time.time()
     for r in range(start_round, n_rounds):
         t = r * fed.q
         ids = sampler.cohort(r)
-        batch_q = tree_stack([make_cohort_batch(data, cfg, specs_c, t + j,
-                                                ids)
-                              for j in range(fed.q)])
+        with tele.span("batch_build"):
+            batch_q = tree_stack([make_cohort_batch(data, cfg, specs_c,
+                                                    t + j, ids)
+                                  for j in range(fed.q)])
         r0 = time.time()
-        state, stats = round_fn(state, ids, batch_q, key, jnp.int32(r))
-        jax.block_until_ready(state)
+        with tele.span("round_program"):
+            state, stats = round_fn(state, ids, batch_q, key, jnp.int32(r))
+            jax.block_until_ready(state)
         dt = time.time() - r0
         stale = np.asarray(stats["staleness"])
         acc = stale[stale >= 0]
@@ -507,17 +571,35 @@ def run_population_async(args, cfg, fed, tr: FederatedTrainer, key, data,
         # downlink per row that received the new global model
         bytes_up += int(stats["arrived"]) * msg_b
         bytes_down += int(stats["synced"]) * down_b
+        tele.round(r, step=t + fed.q - 1, round_seconds=dt,
+                   bytes_up=bytes_up, bytes_down=bytes_down,
+                   arrived=int(stats["arrived"]),
+                   accepted=int(stats["accepted"]),
+                   dropped=int(stats["dropped"]),
+                   dispatched=int(stats["dispatched"]),
+                   synced=int(stats["synced"]),
+                   mean_staleness=float(stats["mean_staleness"]),
+                   eta_scale=float(stats["eta_scale"]))
+        if statacc is not None:
+            statacc.update(state["bank"])
+            if statacc.ready:
+                tele.stats(**statacc.drain())
         if r % max(args.eval_every // fed.q, 1) == 0 or r == n_rounds - 1:
             last = jax.tree.map(lambda x: x[-1], batch_q)
             loss = float(ev(state["bank"], last))
-            print(f"round {r:4d} (step {t + fed.q - 1:5d})  "
-                  f"f(x̄,ȳ) = {loss:.4f}  round={dt*1e3:.1f}ms  "
-                  f"arrived={int(stats['arrived'])} "
-                  f"dropped={int(stats['dropped'])} "
-                  f"tau={float(stats['mean_staleness']):.2f} "
-                  f"eta_scale={float(stats['eta_scale']):.3f}  "
-                  f"up={bytes_up/1e6:.2f}MB down={bytes_down/1e6:.2f}MB  "
-                  f"({time.time()-t0:.1f}s)", flush=True)
+            print(progress_line(loss=loss, elapsed=time.time() - t0,
+                                step=t + fed.q - 1, round=r,
+                                round_seconds=dt,
+                                arrived=int(stats["arrived"]),
+                                dropped=int(stats["dropped"]),
+                                mean_staleness=float(
+                                    stats["mean_staleness"]),
+                                eta_scale=float(stats["eta_scale"]),
+                                bytes_up=bytes_up, bytes_down=bytes_down),
+                  flush=True)
+    if statacc is not None and statacc.pending:
+        tele.stats(**statacc.drain())
+    tele.note(staleness_hist=[int(k) for k in hist])
     print(f"wire totals ({tr.codec.name}): bytes_up={bytes_up} "
           f"bytes_down={bytes_down}", flush=True)
     print("accepted-staleness histogram (rounds): "

@@ -1,0 +1,23 @@
+"""repro.obs — unified telemetry: structured metrics, spans, profiler hooks.
+
+See docs/observability.md for the record schema, span semantics and the
+profiler workflow. Entry points:
+
+  Telemetry / make_telemetry   the bus (sinks, rounds, stats, spans, close)
+  NULL                         shared no-op bus for uninstrumented runs
+  JsonlSink / StdoutSink / MemorySink
+  run_manifest                 the schema-versioned run header
+  StatAccum                    on-device [K, S] stat ring, one transfer per K
+  progress_line                the shared launcher progress formatter
+"""
+from repro.obs.telemetry import (NULL, SCHEMA, JsonlSink, MemorySink,
+                                 NullTelemetry, StdoutSink, Telemetry,
+                                 make_telemetry, run_manifest)
+from repro.obs.devstats import StatAccum
+from repro.obs.progress import progress_line
+
+__all__ = [
+    "NULL", "SCHEMA", "JsonlSink", "MemorySink", "NullTelemetry",
+    "StdoutSink", "Telemetry", "make_telemetry", "run_manifest",
+    "StatAccum", "progress_line",
+]

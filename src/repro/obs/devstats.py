@@ -1,0 +1,123 @@
+"""On-device per-round stat accumulation, drained every K rounds.
+
+The driver round loops are host loops: naively instrumenting them means a
+device→host transfer per round (exactly the pattern the ROADMAP's mega-scan
+item is trying to kill). :class:`StatAccum` instead keeps a ``[K, S]`` f32
+ring on device and appends one row of scalars per round with a single jitted
+update program whose carry is **donated** — per round the host dispatches one
+tiny kernel and transfers nothing. Every K rounds (``--metrics-every``) the
+buffer is drained with ONE host transfer and handed to the telemetry bus as
+a ``stats`` record.
+
+Deliberate design point: the stats are computed by a SEPARATE jitted program
+run on each round's *output* states, not folded into the round programs
+themselves. That keeps the compiled round programs byte-identical whether
+telemetry is on or off — the parity guarantee tests/test_obs.py pins — while
+still meeting the one-transfer-per-K-rounds budget. (Folding them into a
+future R-round mega-scan is then a carry-threading exercise, not a numerics
+change.)
+
+Fields (order = column order in the buffer):
+
+  global_norm   ‖avg(states)‖ over all state leaves (x, y, v, w, lr state)
+  update_norm   ‖avg_t − avg_{t−1}‖ — the per-round server update magnitude
+  consensus     optional: Σ_θ (1/M)Σ_m ‖θ^m − θ̄‖² (Lemmas 20-21's quantity);
+                O(N) work per round, so opt-in via ``consensus=True``
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.metrics import consensus_error
+from repro.core.tree_util import (tree_mean_axis0, tree_norm, tree_sub)
+
+
+class StatAccum:
+    """Device-resident ``[K, S]`` scalar ring + donated-carry update program.
+
+    Usage (one instance per run)::
+
+        acc = StatAccum.create(states, k=8, consensus=False)
+        for r in range(rounds):
+            states = round_program(states, ...)
+            acc.update(states)            # dispatch-only, no transfer
+            if acc.ready:
+                tele.stats(**acc.drain()) # ONE transfer per k rounds
+        if acc.pending:
+            tele.stats(**acc.drain())     # partial tail window
+    """
+
+    def __init__(self, k: int, fields: Tuple[str, ...], carry, update_fn):
+        self.k = k
+        self.fields = fields
+        self._carry = carry
+        self._update = update_fn
+        self.pending = 0          # rows written since last drain
+        self._round0 = 0          # round id of the first pending row
+
+    # ------------------------------------------------------------ factory
+
+    @classmethod
+    def create(cls, states, k: int, consensus: bool = False) -> "StatAccum":
+        """Build the accumulator for a bank/state pytree with leading client
+        axis. ``k`` is the drain window (``--metrics-every``)."""
+        if k < 1:
+            raise ValueError(f"stat window must be >= 1, got {k}")
+        fields = ("global_norm", "update_norm") + (
+            ("consensus",) if consensus else ())
+        s = len(fields)
+
+        def _row(states, prev):
+            avg = tree_mean_axis0(states)
+            cols = [tree_norm(avg), tree_norm(tree_sub(avg, prev))]
+            if consensus:
+                ce = consensus_error(states)
+                cols.append(sum(ce.values()))
+            return jnp.stack([c.astype(jnp.float32) for c in cols]), avg
+
+        def _update(carry, states):
+            row, avg = _row(states, carry["prev"])
+            return {"buf": carry["buf"].at[carry["i"]].set(row),
+                    "i": (carry["i"] + 1) % k,
+                    "prev": avg}
+
+        init_prev = jax.jit(tree_mean_axis0)(states)
+        carry = {"buf": jnp.zeros((k, s), jnp.float32),
+                 "i": jnp.zeros((), jnp.int32),
+                 "prev": init_prev}
+        update_fn = jax.jit(_update, donate_argnums=(0,))
+        return cls(k, fields, carry, update_fn)
+
+    # ------------------------------------------------------------ per round
+
+    def update(self, states) -> None:
+        """Append one row for this round's output states. Dispatch only —
+        nothing crosses to the host here."""
+        self._carry = self._update(self._carry, states)
+        self.pending += 1
+
+    @property
+    def ready(self) -> bool:
+        return self.pending >= self.k
+
+    # ------------------------------------------------------------ drain
+
+    def drain(self) -> Dict[str, Any]:
+        """ONE host transfer: fetch the buffer, return ``round_start`` plus a
+        python list per field (columns of the valid rows, oldest first)."""
+        import numpy as np
+        buf = np.asarray(self._carry["buf"])   # the single transfer
+        n = self.pending
+        i = int(np.asarray(self._carry["i"]))
+        # rows were written at slots (i-n)..(i-1) mod k, oldest first
+        idx = [(i - n + j) % self.k for j in range(n)]
+        rows = buf[idx]
+        out: Dict[str, Any] = {"round_start": self._round0}
+        for c, name in enumerate(self.fields):
+            out[name] = [float(v) for v in rows[:, c]]
+        self._round0 += n
+        self.pending = 0
+        return out

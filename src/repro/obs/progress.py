@@ -1,0 +1,57 @@
+"""One progress formatter for every launcher loop.
+
+``launch/train.py`` used to carry four near-duplicate per-round ``print``
+f-strings (eager, scan, dense population, spilled population, async) that
+drifted independently as engines gained fields. :func:`progress_line`
+renders all of them from the same per-round record the telemetry bus
+receives — optional fields switch the engine-specific segments on, and the
+output strings are pinned character-for-character against the legacy
+formats by tests/test_obs.py.
+
+Layout: segments joined by two spaces, fields within a segment by one —
+
+  round 12 (step 47) | f(x̄,ȳ) = 0.1234 | round=12.3ms
+  [arrived=3 dropped=1 tau=1.50 eta_scale=0.870] [up=0.12MB down=0.45MB]
+  [cohort=[0, 3, 5]...] | (4.2s)
+
+(eager runs render ``step N`` with no round/dt segments).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+
+def progress_line(*, loss: float, elapsed: float, step: int,
+                  round: Optional[int] = None,
+                  round_seconds: Optional[float] = None,
+                  bytes_up: Optional[int] = None,
+                  bytes_down: Optional[int] = None,
+                  cohort: Optional[Sequence[int]] = None,
+                  arrived: Optional[int] = None,
+                  dropped: Optional[int] = None,
+                  mean_staleness: Optional[float] = None,
+                  eta_scale: Optional[float] = None) -> str:
+    """Render one per-round (or per-step) progress line.
+
+    ``round=None`` gives the eager per-step form; ``arrived`` &c. add the
+    async segment; ``bytes_up``/``bytes_down`` the wire segment; ``cohort``
+    the sampled-ids segment. ``cohort`` shows at most its first 8 ids
+    (callers pass the full cohort)."""
+    segs = []
+    if round is None:
+        segs.append(f"step {step:5d}")
+    else:
+        segs.append(f"round {round:4d} (step {step:5d})")
+    segs.append(f"f(x̄,ȳ) = {loss:.4f}")
+    if round_seconds is not None:
+        segs.append(f"round={round_seconds*1e3:.1f}ms")
+    if arrived is not None:
+        segs.append(f"arrived={int(arrived)} dropped={int(dropped)} "
+                    f"tau={float(mean_staleness):.2f} "
+                    f"eta_scale={float(eta_scale):.3f}")
+    if bytes_up is not None:
+        segs.append(f"up={bytes_up/1e6:.2f}MB down={bytes_down/1e6:.2f}MB")
+    if cohort is not None:
+        segs.append(f"cohort={list(cohort[:8])}...")
+    segs.append(f"({elapsed:.1f}s)")
+    return "  ".join(segs)

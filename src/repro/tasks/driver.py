@@ -111,6 +111,11 @@ class FedDriver:
     # per-device bank bytes scale as N/devices (docs/sharding.md). The
     # masked eager/scan engines ignore it (they are vmap-scale by design).
     mesh: Optional[Any] = None
+    # optional repro.obs.Telemetry bus: per-round records, on-device stat
+    # accumulation (drained every telemetry.metrics_every rounds), phase
+    # spans. Strictly observational — attaching it never changes the round
+    # programs, so trajectories stay bit-identical (tests/test_obs.py).
+    telemetry: Optional[Any] = None
 
     def __post_init__(self):
         from repro.fed.round import ENGINES
@@ -276,6 +281,46 @@ class FedDriver:
                 sh[k] = jax.tree.map(lambda _: rep, v)
         return sh
 
+    # -------------------------------------------------- observability
+
+    def _tele(self):
+        """The attached telemetry bus, or the shared no-op one."""
+        from repro.obs import NULL
+        return self.telemetry if self.telemetry is not None else NULL
+
+    def _obs_begin(self, states):
+        """Create the on-device stat ring (repro.obs.devstats) when a
+        telemetry bus with at least one sink is attached; the stats are
+        computed by a separate jitted program on each round's OUTPUT states,
+        so the round programs themselves are untouched."""
+        tele = self._tele()
+        if not tele.sinks:
+            return None
+        from repro.obs import StatAccum
+        return StatAccum.create(states, tele.metrics_every, tele.consensus)
+
+    def _obs_round(self, acc, states, round_id: int, dt: float, step: int,
+                   samples, comms: int, bytes_up: int = 0,
+                   bytes_down: int = 0, **extra):
+        """Per-round telemetry: one buffered record + one on-device stat
+        append; the accumulator drains (the single host transfer) every
+        ``metrics_every`` rounds."""
+        tele = self._tele()
+        tele.round(round_id, step=step, round_seconds=dt, samples=samples,
+                   comms=comms, bytes_up=bytes_up, bytes_down=bytes_down,
+                   **extra)
+        if acc is not None:
+            acc.update(states)
+            if acc.ready:
+                tele.stats(**acc.drain())
+
+    def _obs_end(self, acc):
+        """Drain the partial tail window and flush the sinks."""
+        tele = self._tele()
+        if acc is not None and acc.pending:
+            tele.stats(**acc.drain())
+        tele.flush()
+
     # -------------------------------------------------- run loops
 
     def _log_round(self, res: RunResult, dt: float):
@@ -309,6 +354,7 @@ class FedDriver:
             ref = states                      # the server-known init
             ef = zeros_ef(self.codec, states)
 
+        acc = self._obs_begin(states)
         res = RunResult(self.alg.name, [], [], [], [], [], 0.0)
         t0 = time.time()
         r0 = time.time()
@@ -337,12 +383,16 @@ class FedDriver:
             if (t + 1) % fed.q == 0:
                 # per-round wall-clock, comparable with the scan engine's
                 jax.block_until_ready(states)
-                self._log_round(res, time.time() - r0)
+                dt = time.time() - r0
+                self._log_round(res, dt)
+                self._obs_round(acc, states, rnd, dt, t, samples, comms,
+                                bytes_up, bytes_down)
                 r0 = time.time()
             if t % eval_every == 0 or t == total_steps - 1:
                 self._record(res, states, t, samples, comms, bytes_up,
                              bytes_down)
         res.seconds = time.time() - t0
+        self._obs_end(acc)
         res.final_avg_state = tree_mean_axis0(states)
         return res
 
@@ -402,37 +452,46 @@ class FedDriver:
         full, rem = divmod(total_steps, q)
         lengths = [q] * full + ([rem] if rem else [])
         eval_rounds = max(eval_every // q, 1)
+        tele = self._tele()
+        acc = self._obs_begin(states)
         res = RunResult(self.alg.name, [], [], [], [], [], 0.0)
         t0 = time.time()
         t = 0
         for r, n_steps in enumerate(lengths):
-            batches_q = tree_stack([self._batches(t + j)
-                                    for j in range(n_steps)])
+            with tele.span("batch_build"):
+                batches_q = tree_stack([self._batches(t + j)
+                                        for j in range(n_steps)])
             active = self._active_mask(r)
             # round 0 has no preceding sync (sync_first=False): reuse the
             # current mask instead of computing an unused _active_mask(-1)
             active_prev = self._active_mask(r - 1) if r > 0 else active
             r0 = time.time()
-            if lossy:
-                states, server, ref, ef = segment_codec(
-                    states, server, ref, ef, batches_q, key, active_prev,
-                    active, jnp.int32(r), n_steps=n_steps, sync_first=r > 0)
-            else:
-                states, server = segment(
-                    states, server, batches_q, key, active_prev, active,
-                    n_steps=n_steps, sync_first=r > 0)
-            jax.block_until_ready(states)
-            self._log_round(res, time.time() - r0)
+            with tele.span("round_program"):
+                if lossy:
+                    states, server, ref, ef = segment_codec(
+                        states, server, ref, ef, batches_q, key, active_prev,
+                        active, jnp.int32(r), n_steps=n_steps,
+                        sync_first=r > 0)
+                else:
+                    states, server = segment(
+                        states, server, batches_q, key, active_prev, active,
+                        n_steps=n_steps, sync_first=r > 0)
+                jax.block_until_ready(states)
+            dt = time.time() - r0
+            self._log_round(res, dt)
             t += n_steps
             samples += n_steps * (fed.neumann_k + 2)
             if r > 0:
                 comms += 1
                 bytes_up += int(active_prev.sum()) * msg_b
                 bytes_down += self.n_clients * down_b
+            self._obs_round(acc, states, r, dt, t - 1, samples, comms,
+                            bytes_up, bytes_down)
             if r % eval_rounds == 0 or r == len(lengths) - 1:
                 self._record(res, states, t - 1, samples, comms, bytes_up,
                              bytes_down)
         res.seconds = time.time() - t0
+        self._obs_end(acc)
         res.final_avg_state = tree_mean_axis0(states)
         return res
 
@@ -535,20 +594,25 @@ class FedDriver:
                 # stamped at the previous sync (last_sync == r-1) is fully
                 # fresh — same staleness origin as make_population_round's
                 # end-of-round convention (which stamps round_id + 1)
-                w = staleness_weights(last_sync, prev_ids, round_id - 1,
-                                      pcfg.staleness_decay)
-                avg = weighted_mean(gather(bank, prev_ids), w)
-                new_client, server = self.alg.sync_update(server, avg, n)
+                with jax.named_scope("round/aggregate"):
+                    w = staleness_weights(last_sync, prev_ids, round_id - 1,
+                                          pcfg.staleness_decay)
+                    avg = weighted_mean(gather(bank, prev_ids), w)
+                    new_client, server = self.alg.sync_update(server, avg, n)
                 if pcfg.sync_mode == "broadcast":
-                    bank = broadcast(bank, new_client)
-                    last_sync = jnp.full_like(last_sync, round_id)
+                    with jax.named_scope("round/broadcast"):
+                        bank = broadcast(bank, new_client)
+                        last_sync = jnp.full_like(last_sync, round_id)
                 else:
-                    c = prev_ids.shape[0]
-                    bank = scatter(bank, prev_ids, jax.tree.map(
-                        lambda v: jnp.broadcast_to(v[None], (c,) + v.shape),
-                        new_client))
-                    last_sync = last_sync.at[prev_ids].set(round_id)
-            cur = gather(bank, ids)
+                    with jax.named_scope("round/scatter_sync"):
+                        c = prev_ids.shape[0]
+                        bank = scatter(bank, prev_ids, jax.tree.map(
+                            lambda v: jnp.broadcast_to(v[None],
+                                                       (c,) + v.shape),
+                            new_client))
+                        last_sync = last_sync.at[prev_ids].set(round_id)
+            with jax.named_scope("round/gather"):
+                cur = gather(bank, ids)
             ref = cur                 # server-known dispatch states
             local = self._cohort_local_step(n)
 
@@ -557,18 +621,22 @@ class FedDriver:
                 st, srv = local(st, srv, batch, kk, ids)
                 return (st, srv), None
 
-            (cur, server), _ = jax.lax.scan(body, (cur, server), batches_q,
-                                            length=n_steps)
+            with jax.named_scope("round/local_scan"):
+                (cur, server), _ = jax.lax.scan(body, (cur, server),
+                                                batches_q, length=n_steps)
             if lossy:
                 # the cohort ships its update through the codec when the
                 # round ends; the bank row becomes the server-side
                 # reconstruction, which the NEXT round's sync aggregates
-                ef_c = gather(ef, ids) if ef is not None else None
-                cur, ef_c = client_messages(self.codec, kk, round_id, ids,
-                                            ref, cur, ef_c)
-                if ef is not None:
-                    ef = scatter(ef, ids, ef_c)
-            return scatter(bank, ids, cur), last_sync, ef, server
+                with jax.named_scope("round/codec"):
+                    ef_c = gather(ef, ids) if ef is not None else None
+                    cur, ef_c = client_messages(self.codec, kk, round_id,
+                                                ids, ref, cur, ef_c)
+                    if ef is not None:
+                        ef = scatter(ef, ids, ef_c)
+            with jax.named_scope("round/scatter"):
+                bank = scatter(bank, ids, cur)
+            return bank, last_sync, ef, server
 
         if self.mesh is None:
             segment = jax.jit(segment_fn,
@@ -594,6 +662,8 @@ class FedDriver:
         full, rem = divmod(total_steps, q)
         lengths = [q] * full + ([rem] if rem else [])
         eval_rounds = max(eval_every // q, 1)
+        tele = self._tele()
+        acc = self._obs_begin(bank)
         res = RunResult(self.alg.name, [], [], [], [], [], 0.0)
         t0 = time.time()
         t = 0
@@ -603,14 +673,17 @@ class FedDriver:
             # the sync opening round r aggregates (and bills) the PREVIOUS
             # round's cohort — the clients whose updates are on the wire
             sync_ids = prev_ids if prev_ids is not None else ids
-            batches_q = tree_stack([self._cohort_batches(ids, t + j)
-                                    for j in range(n_steps)])
+            with tele.span("batch_build"):
+                batches_q = tree_stack([self._cohort_batches(ids, t + j)
+                                        for j in range(n_steps)])
             r0 = time.time()
-            bank, last_sync, ef, server = segment(
-                bank, last_sync, ef, server, sync_ids, ids, batches_q,
-                key, jnp.int32(r), n_steps=n_steps, sync_first=r > 0)
-            jax.block_until_ready(bank)
-            self._log_round(res, time.time() - r0)
+            with tele.span("round_program"):
+                bank, last_sync, ef, server = segment(
+                    bank, last_sync, ef, server, sync_ids, ids, batches_q,
+                    key, jnp.int32(r), n_steps=n_steps, sync_first=r > 0)
+                jax.block_until_ready(bank)
+            dt = time.time() - r0
+            self._log_round(res, dt)
             prev_ids = ids
             t += n_steps
             samples += n_steps * (fed.neumann_k + 2)
@@ -625,10 +698,13 @@ class FedDriver:
                 bytes_up += tx * msg_b
                 bytes_down += (n if pcfg.sync_mode == "broadcast"
                                else tx) * down_b
+            self._obs_round(acc, bank, r, dt, t - 1, samples, comms,
+                            bytes_up, bytes_down)
             if r % eval_rounds == 0 or r == len(lengths) - 1:
                 self._record(res, bank, t - 1, samples, comms, bytes_up,
                              bytes_down)
         res.seconds = time.time() - t0
+        self._obs_end(acc)
         self.final_bank = bank        # benchmarks inspect per-device bytes
         res.final_avg_state = tree_mean_axis0(bank)
         return res
@@ -706,17 +782,26 @@ class FedDriver:
         full, rem = divmod(total_steps, q)
         lengths = [q] * full + ([rem] if rem else [])
         eval_rounds = max(eval_every // q, 1)
+        tele = self._tele()
+        statacc = self._obs_begin(state["bank"])
         res = RunResult(self.alg.name, [], [], [], [], [], 0.0)
         t0 = time.time()
         t = 0
         for r, n_steps in enumerate(lengths):
             ids = jnp.asarray(self._run_sampler.cohort(r), jnp.int32)
-            batches_q = tree_stack([self._cohort_batches(ids, t + j)
-                                    for j in range(n_steps)])
+            with tele.span("batch_build"):
+                batches_q = tree_stack([self._cohort_batches(ids, t + j)
+                                        for j in range(n_steps)])
             r0 = time.time()
-            state, stats = segment(state, ids, batches_q, key, jnp.int32(r))
-            jax.block_until_ready(state)
-            self._log_round(res, time.time() - r0)
+            with tele.span("round_program"):
+                state, stats = segment(state, ids, batches_q, key,
+                                       jnp.int32(r))
+                # fence: the dispatch is async — round wall-clock must
+                # measure completion, not dispatch (pinned by
+                # tests/test_obs.py's forced-sleep lower bound)
+                jax.block_until_ready(state)
+            dt = time.time() - r0
+            self._log_round(res, dt)
             stale = np.asarray(stats["staleness"])
             acc = stale[stale >= 0]
             if acc.size:
@@ -747,11 +832,22 @@ class FedDriver:
             # paper's sample-complexity curves must not count them
             samples += (n_steps * (fed.neumann_k + 2)
                         * int(stats["dispatched"]) / c)
+            row = self.staleness_log[-1]
+            self._obs_round(statacc, state["bank"], r, dt, t - 1,
+                            int(round(samples)), comms, bytes_up, bytes_down,
+                            arrived=row["arrived"], accepted=row["accepted"],
+                            dropped=row["dropped"],
+                            dispatched=row["dispatched"],
+                            synced=row["synced"],
+                            mean_staleness=row["mean_staleness"],
+                            eta_scale=row["eta_scale"])
             if r % eval_rounds == 0 or r == len(lengths) - 1:
                 self._record(res, state["bank"], t - 1,
                              int(round(samples)), comms, bytes_up,
                              bytes_down)
         res.seconds = time.time() - t0
+        tele.note(staleness_hist=[int(k) for k in self.staleness_hist])
+        self._obs_end(statacc)
         self.final_bank = state["bank"]   # benchmarks inspect device bytes
         res.final_avg_state = tree_mean_axis0(state["bank"])
         return res

@@ -30,7 +30,10 @@ def test_tiny_sweep_structure(sweep_main, tmp_path):
                      parse_constant=lambda c: pytest.fail(
                          f"non-RFC8259 token {c} in sweep JSON"))
     assert doc["bench"] == "async_sweep"
-    assert doc["schema"] == 2
+    assert doc["schema"] == 3
+    # schema 3: every artifact carries the telemetry run manifest header
+    assert doc["manifest"]["kind"] == "manifest"
+    assert doc["manifest"]["seed"] == 0
     assert doc["meta"]["staleness_grid"] == ["inf"]
     cells = doc["cells"]
     # per task: 1 sync baseline + 1 staleness x 1 model x 1 eta
@@ -67,7 +70,8 @@ def test_tiny_compression_sweep_structure(sweep_main, tmp_path):
                      parse_constant=lambda c: pytest.fail(
                          f"non-RFC8259 token {c} in sweep JSON"))
     assert doc["bench"] == "compression"
-    assert doc["schema"] == 2                  # shared with the async bench
+    assert doc["schema"] == 3                  # shared with the async bench
+    assert doc["manifest"]["kind"] == "manifest"
     cells = doc["cells"]
     assert [c["codec"] for c in cells] == ["none", "int8", "topk"]
     for cell in cells:
