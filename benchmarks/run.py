@@ -170,7 +170,7 @@ def population_scale(n=256, c=16, rounds=8, sampler="uniform",
                      max_staleness=0.0, max_delay=1, delay_eta=0.0,
                      delay_model="uniform", tiers=None, delay_mu=0.0,
                      delay_sigma=0.5, codec="none", codec_bits=8,
-                     topk_frac=0.1, ef=True):
+                     topk_frac=0.1, ef=True, rounds_per_scan=1):
     """Cohort-sampled population vs the same-size plain run: population mode
     keeps N client states banked and computes only the C sampled clients per
     round (gather → fused scan round → scatter), so a round costs what a
@@ -200,30 +200,34 @@ def population_scale(n=256, c=16, rounds=8, sampler="uniform",
                          "population variant")
 
     stats = {}
+    tag = f";R={rounds_per_scan}" if rounds_per_scan > 1 else ""
 
     dp = driver(c)
     dp.engine = "scan"
+    dp.rounds_per_scan = rounds_per_scan
     q = dp.fed.q
     steps = rounds * q
     rp = dp.run(steps, key=_key(), eval_every=steps - 1)
     stats["plain"] = steady(dp)
     _row(f"population/plain_m{c}", stats["plain"] * 1e6,
-         f"q={q};rounds={rounds};gnormT={rp.grad_norm[-1]:.3f}")
+         f"q={q};rounds={rounds};gnormT={rp.grad_norm[-1]:.3f}{tag}")
 
     dn = driver(n)
+    dn.rounds_per_scan = rounds_per_scan
     dn.population = PopulationConfig(n=n, cohort=c, sampler=sampler)
     rn = dn.run(steps, key=_key(), eval_every=steps - 1)
     stats["pop"] = steady(dn)
     _row(f"population/pop_n{n}_c{c}_{sampler}", stats["pop"] * 1e6,
          f"q={q};rounds={rounds};gnormT={rn.grad_norm[-1]:.3f};"
          f"bytes_up={rn.bytes_up[-1]};bytes_down={rn.bytes_down[-1]};"
-         f"compile_s={rn.compile_seconds:.2f}")
+         f"compile_s={rn.compile_seconds:.2f}{tag}")
 
     if codec != "none":
         # compressed variant of the same cohort rounds: the wire saving
         # (exact bytes via repro.fed.compress formulas) vs the convergence
         # cost, on identical cohorts
         dc = driver(n)
+        dc.rounds_per_scan = rounds_per_scan
         dc.fed = dataclasses.replace(
             dc.fed, codec=codec, codec_bits=codec_bits,
             topk_frac=topk_frac, error_feedback=ef)
@@ -264,6 +268,7 @@ def population_scale(n=256, c=16, rounds=8, sampler="uniform",
             fr, td = parse_tier_spec(tiers)
             pop_kw = {"tier_fracs": fr, "tier_delays": td}
         da = driver(n)
+        da.rounds_per_scan = rounds_per_scan
         da.population = PopulationConfig(
             n=n, cohort=c, sampler=sampler, max_staleness=max_staleness,
             max_delay=max_delay, delay_eta=delay_eta,
@@ -343,6 +348,11 @@ def main() -> None:
                     help="cohort sampler for the population benchmark")
     ap.add_argument("--rounds", type=int, default=8,
                     help="timed rounds for the population benchmark")
+    ap.add_argument("--rounds-per-scan", type=int, default=1,
+                    help="population benchmark: fuse R whole rounds into "
+                         "ONE compiled program per chunk (the mega-scan "
+                         "tier, docs/megascan.md; benchmarks/sweep.py "
+                         "--bench megascan sweeps the R grid)")
     ap.add_argument("--max-staleness", type=float, default=0.0,
                     help="population benchmark: > 0 adds an async variant "
                          "dropping arrivals staler than this many rounds "
@@ -400,7 +410,8 @@ def main() -> None:
         delay_model=args.delay_model, tiers=args.tiers,
         delay_mu=args.delay_mu, delay_sigma=args.delay_sigma,
         codec=args.codec, codec_bits=args.codec_bits,
-        topk_frac=args.topk_frac, ef=args.ef == "on")
+        topk_frac=args.topk_frac, ef=args.ef == "on",
+        rounds_per_scan=args.rounds_per_scan)
     ENGINE = args.engine
     SEED = args.seed
     if args.metrics_out:

@@ -44,7 +44,8 @@ sys.path.insert(0, "src")
 import jax
 
 TASKS = ("hyperclean", "hyperrep")
-BENCHES = ("async", "compression", "bank_scale", "obs_overhead")
+BENCHES = ("async", "compression", "bank_scale", "obs_overhead",
+           "megascan")
 # bumped whenever a cell/meta field changes shape; shared by ALL artifacts
 # so downstream consumers can gate on one number
 # 3: every artifact gains a top-level "manifest" header (repro.obs)
@@ -52,7 +53,9 @@ SCHEMA = 3
 DEFAULT_OUT = {"async": "BENCH_async_sweep.json",
                "compression": "BENCH_compression.json",
                "bank_scale": "BENCH_bank_scale.json",
-               "obs_overhead": "BENCH_obs_overhead.json"}
+               "obs_overhead": "BENCH_obs_overhead.json",
+               "megascan": "BENCH_megascan.json"}
+MEGASCAN_ENGINES = ("scan", "population", "async")
 
 
 def build_task(name: str, n_clients: int):
@@ -398,6 +401,106 @@ def run_obs_overhead(args) -> dict:
     }
 
 
+def run_megascan(args) -> dict:
+    """The mega-scan speedup grid (``--bench megascan`` →
+    ``BENCH_megascan.json``): per engine in ``--engines`` and R in
+    ``--r-grid``, run the same quadratic AdaFBiO problem with
+    ``rounds_per_scan=R`` and record the steady per-round wall-clock.
+    The R=1 cell of each engine is the in-run baseline the ``speedup``
+    meta compares against; the acceptance target (docs/megascan.md) is
+    >= 3x steady-state rounds/sec on the population engine. Cells run
+    the small quadratic at ``--q`` local steps per round (default 1 —
+    sync every step, the communication-heaviest setting): that is the
+    dispatch-bound regime the mega-scan tier exists for, where per-round
+    program execution is small next to the per-program host dispatch the
+    fused R-round program amortizes away. Each cell runs 1 + R warm-up
+    rounds (the single-round peel + the first, compiling, R-chunk) plus
+    at least ``--rounds`` steady rounds, so the R-length chunk repeats
+    and ``round_seconds`` is populated."""
+    from repro.configs.base import PopulationConfig
+    from repro.core.baselines import make_algorithm
+    from tests.test_system import _quad_driver
+
+    grid = parse_grid(args.r_grid, int)
+    engines = parse_grid(args.engines, str)
+    for e in engines:
+        if e not in MEGASCAN_ENGINES:
+            raise SystemExit(f"unknown engine {e!r} in --engines; "
+                             f"known: {MEGASCAN_ENGINES}")
+    if 1 not in grid:
+        raise SystemExit("--r-grid must include 1 (the per-engine "
+                         "baseline cell the speedup meta divides by)")
+    if any(r < 1 for r in grid):
+        raise SystemExit("--r-grid values must be >= 1")
+    cells = []
+    total = len(engines) * len(grid)
+    for engine in engines:
+        for R in grid:
+            print(f"[{len(cells) + 1}/{total}] engine={engine} R={R} "
+                  f"N={args.population} C={args.cohort} q={args.q}",
+                  flush=True)
+            d = _quad_driver("adafbio", m=args.population)
+            d.fed = dataclasses.replace(d.alg.fed, q=args.q)
+            d.alg = make_algorithm("adafbio", d.fed, d.problem)
+            if engine != "scan":
+                kw = ({} if engine == "population"
+                      else {"max_staleness": 4.0, "max_delay": 4})
+                d.population = PopulationConfig(n=args.population,
+                                                cohort=args.cohort,
+                                                sampler=args.sampler, **kw)
+            d.rounds_per_scan = R
+            # 1 peeled round + 1 compiling R-chunk + ceil(rounds/R) steady
+            # R-chunks (the only ones _log_chunk counts)
+            rounds_total = 1 + R + R * -(-args.rounds // R)
+            steps = rounds_total * d.fed.q
+            t0 = time.time()
+            r = d.run(steps, key=jax.random.PRNGKey(args.seed),
+                      eval_every=max(steps - 1, 1))
+            timed = d.round_seconds[1:] or d.round_seconds
+            mean = sum(timed) / max(len(timed), 1)
+            cells.append({
+                "engine": engine,
+                "rounds_per_scan": R,
+                "rounds_total": rounds_total,
+                "rounds_timed": len(timed),
+                "round_seconds": round(mean, 6),
+                "rounds_per_sec": round(1.0 / max(mean, 1e-12), 3),
+                "compile_seconds": round(r.compile_seconds, 3),
+                "grad_normT": json_safe(float(r.grad_norm[-1])),
+                "samples": int(r.samples[-1]),
+                "bytes_up": int(r.bytes_up[-1]),
+                "seconds": round(time.time() - t0, 3),
+            })
+    speedup = {}
+    for engine in engines:
+        mine = [c for c in cells if c["engine"] == engine]
+        base = next(c for c in mine if c["rounds_per_scan"] == 1)
+        speedup[engine] = {
+            str(c["rounds_per_scan"]):
+                round(c["rounds_per_sec"] / base["rounds_per_sec"], 3)
+            for c in mine if c["rounds_per_scan"] != 1}
+    best_pop = max(speedup.get("population", {"": 0.0}).values())
+    return {
+        "bench": "megascan",
+        "schema": SCHEMA,
+        "meta": {
+            "engines": list(engines),
+            "r_grid": list(grid),
+            "population": args.population,
+            "cohort": args.cohort,
+            "q": args.q,
+            "rounds": args.rounds,
+            "sampler": args.sampler,
+            "seed": args.seed,
+            "speedup": speedup,
+            "target_speedup": 3.0,
+            "population_speedup_best": round(best_pop, 3),
+            "population_target_met": best_pop >= 3.0,
+        },
+        "cells": cells,
+    }
+
+
 def run_sweep(args) -> dict:
     """The full grid: per task, one sync baseline + every
     (max_staleness, delay_model, delay_eta) combination."""
@@ -490,7 +593,9 @@ def main(argv=None) -> None:
                          "bank_scale: sharded-bank round time and "
                          "per-device bytes vs population size N; "
                          "obs_overhead: telemetry-on vs -off steady "
-                         "round time (budget: <= 5%%)")
+                         "round time (budget: <= 5%%); "
+                         "megascan: steady rounds/sec vs rounds_per_scan "
+                         "R per engine (target: >= 3x on population)")
     ap.add_argument("--task", default="hyperclean,hyperrep",
                     help="comma list of tasks: hyperclean, hyperrep")
     ap.add_argument("--steps", type=int, default=64,
@@ -536,8 +641,18 @@ def main(argv=None) -> None:
                          "--xla_force_host_platform_device_count, set "
                          "automatically when possible)")
     ap.add_argument("--rounds", type=int, default=6,
-                    help="bank_scale / obs_overhead bench: timed rounds "
-                         "per cell")
+                    help="bank_scale / obs_overhead / megascan bench: "
+                         "timed rounds per cell")
+    ap.add_argument("--r-grid", default="1,4,16,32",
+                    help="megascan bench: comma list of rounds_per_scan "
+                         "values R (must include the R=1 baseline)")
+    ap.add_argument("--q", type=int, default=1,
+                    help="megascan bench: local steps per round (1 = sync "
+                         "every step, the dispatch-bound regime the fused "
+                         "program amortizes)")
+    ap.add_argument("--engines", default="scan,population,async",
+                    help="megascan bench: comma list of engines to grid "
+                         "over: scan, population, async")
     ap.add_argument("--metrics-every", type=int, default=8,
                     help="obs_overhead bench: stat drain / flush cadence "
                          "of the telemetry-on run")
@@ -564,6 +679,8 @@ def main(argv=None) -> None:
         out = run_bank_scale(args)
     elif args.bench == "obs_overhead":
         out = run_obs_overhead(args)
+    elif args.bench == "megascan":
+        out = run_megascan(args)
     else:
         out = (run_compression_sweep(args) if args.bench == "compression"
                else run_sweep(args))

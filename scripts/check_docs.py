@@ -54,7 +54,7 @@ def readme_sections(readme: pathlib.Path) -> dict:
 
 
 DOCS = ("docs/ARCHITECTURE.md", "docs/async.md", "docs/compression.md",
-        "docs/sharding.md", "docs/observability.md")
+        "docs/sharding.md", "docs/observability.md", "docs/megascan.md")
 
 
 def main() -> int:

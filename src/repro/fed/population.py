@@ -51,6 +51,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import DELAY_MODELS, validate_delay_model
+from repro.fed.round import make_multi_round
 
 SYNC_MODES = ("broadcast", "participants")
 
@@ -828,3 +829,63 @@ def make_async_round(local_step_ids: Callable, sync_update: Callable,
         return state, stats
 
     return round_fn
+
+
+# ------------------------------------------------------------- mega-scan tier
+#
+# R full rounds compiled into ONE donated-carry program (docs/megascan.md).
+# The per-round programs above already derive everything round-dependent
+# (staleness weights, last_sync stamps, codec RNG folds, delay schedules)
+# from the round_id argument, so fusing is pure carry-threading: wrap a
+# round program into the (carry, ids, batches_q, key, round_id) shape
+# make_multi_round scans.
+
+def make_multi_population_round(round_fn: Callable, *, lossy: bool,
+                                cohort_fn: Callable | None = None
+                                ) -> Callable:
+    """Fuse R synchronous population rounds into one scanned program.
+
+    ``round_fn`` is exactly what :func:`make_population_round` returned
+    (``lossy`` says whether it threads the EF bank). Returns
+    ``multi(bank_states, last_sync[, ef_bank], server, ids_R, batches_R,
+    key, round0)`` -> the same state tuple after rounds ``round0 ..
+    round0 + R - 1``, where ``ids_R`` is [R, C] int32 (or None with a
+    ``cohort_fn`` drawing in-scan) and ``batches_R`` stacks each round's
+    ``batches_q`` on a new leading R axis. Bit-identical to R sequential
+    ``round_fn`` calls (tests/test_megascan.py).
+    """
+    if lossy:
+        def one(carry, ids, batches_q, key, round_id):
+            return round_fn(*carry, ids, batches_q, key, round_id), None
+
+        multi = make_multi_round(one, cohort_fn=cohort_fn)
+
+        def mega(bank_states, last_sync, ef_bank, server, ids_R, batches_R,
+                 key, round0):
+            carry, _ = multi((bank_states, last_sync, ef_bank, server),
+                             ids_R, batches_R, key, round0)
+            return carry
+
+        return mega
+
+    def one(carry, ids, batches_q, key, round_id):
+        return round_fn(*carry, ids, batches_q, key, round_id), None
+
+    multi = make_multi_round(one, cohort_fn=cohort_fn)
+
+    def mega(bank_states, last_sync, server, ids_R, batches_R, key, round0):
+        carry, _ = multi((bank_states, last_sync, server), ids_R, batches_R,
+                         key, round0)
+        return carry
+
+    return mega
+
+
+def make_multi_async_round(round_fn: Callable, *,
+                           cohort_fn: Callable | None = None) -> Callable:
+    """Fuse R asynchronous rounds (:func:`make_async_round` programs) into
+    one scanned program: ``multi(state, ids_R, batches_R, key, round0) ->
+    (state, stats_R)`` with every per-round stats field stacked on a new
+    leading R axis. The async round is already uniform in ``round_id``
+    (round 0 is not special), so the driver chunks from round 0."""
+    return make_multi_round(round_fn, cohort_fn=cohort_fn)

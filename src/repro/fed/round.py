@@ -25,6 +25,7 @@ from __future__ import annotations
 from typing import Any, Callable, Dict, Tuple
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.tree_util import tree_stack
 
@@ -64,3 +65,46 @@ def stack_round_batches(batch_fn: Callable[[int], Any], t0: int, q: int):
     """Stack ``batch_fn(t0) .. batch_fn(t0+q-1)`` on a new leading axis —
     the scanned-input layout ``make_round_step`` expects."""
     return tree_stack([batch_fn(t0 + j) for j in range(q)])
+
+
+def make_multi_round(round_fn: Callable, *,
+                     cohort_fn: Callable | None = None) -> Callable:
+    """Fuse R full rounds into ONE scanned program (the mega-scan tier).
+
+    ``round_fn(carry, ids, batches_q, key, round_id) -> (carry, out)`` is a
+    complete communication round over an opaque ``carry`` pytree. ``ids`` is
+    an arbitrary per-round input pytree (cohort ids, participation masks, an
+    empty tree, ...) and ``out`` is the per-round output pytree (stats rows;
+    ``None`` is fine). ``round_id`` arrives as a traced int32 scalar, so the
+    round body must derive everything round-dependent (staleness weights,
+    codec RNG folds, delay schedules, ``last_sync`` stamps) from it — the
+    existing round programs already do.
+
+    Returns ``multi(carry, ids_R, batches_R, key, round0) -> (carry, outs)``
+    which scans rounds ``round0 .. round0 + R - 1`` where R is the leading
+    axis of ``batches_R``; ``ids_R`` stacks the per-round ``ids`` on the same
+    leading axis and ``outs`` stacks the per-round ``out``. When
+    ``cohort_fn`` is given (a jit-traceable ``round_id -> ids`` draw, see
+    :func:`repro.fed.sampling.in_scan_cohort_fn`) the cohort is drawn INSIDE
+    the scan and ``ids_R`` may be ``None``.
+
+    R = 1 is exactly one ``round_fn`` call inside a length-1 scan: same op
+    graph, same numerics. tests/test_megascan.py pins mega(R) bit-identical
+    to R sequential single-round calls for every engine/codec combination.
+    """
+
+    def multi(carry, ids_R, batches_R, key, round0):
+        r = jax.tree_util.tree_leaves(batches_R)[0].shape[0]
+
+        def body(c, x):
+            i, ids, batches_q = x
+            rid = round0 + i
+            if cohort_fn is not None:
+                ids = cohort_fn(rid)
+            return round_fn(c, ids, batches_q, key, rid)
+
+        xs = (jnp.arange(r, dtype=jnp.int32), ids_R, batches_R)
+        with jax.named_scope("megascan"):
+            return jax.lax.scan(body, carry, xs, length=r)
+
+    return multi

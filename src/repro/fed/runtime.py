@@ -341,6 +341,36 @@ class FederatedTrainer:
             sync_mode=sync_mode, staleness_decay=staleness_decay,
             codec=self.codec)
 
+    def multi_population_round_fn(self, n: int, q: Optional[int] = None, *,
+                                  sync_mode: str = "broadcast",
+                                  staleness_decay: float = 0.0,
+                                  cohort_fn=None) -> Callable:
+        """The mega-scan tier over :meth:`population_round_fn`: R full
+        rounds fused into one scanned program (docs/megascan.md).
+        ``multi(bank, last_sync[, ef_bank], server, ids_R, batches_R, key,
+        round0)`` where ``ids_R`` is [R, C] (or None with a ``cohort_fn``
+        drawing cohorts in-scan, see ``repro.fed.sampling.
+        in_scan_cohort_fn``) and ``batches_R`` stacks each round's
+        ``batches_q`` on a new leading R axis."""
+        from repro.fed.population import make_multi_population_round
+        return make_multi_population_round(
+            self.population_round_fn(n, q, sync_mode=sync_mode,
+                                     staleness_decay=staleness_decay),
+            lossy=self.codec.lossy, cohort_fn=cohort_fn)
+
+    def multi_async_population_round_fn(self, n: int,
+                                        q: Optional[int] = None, *,
+                                        cohort_fn=None,
+                                        **async_opts) -> Callable:
+        """The mega-scan tier over :meth:`async_population_round_fn`:
+        ``multi(state, ids_R, batches_R, key, round0) -> (state, stats_R)``
+        with the per-round stats stacked on a new leading R axis
+        (docs/megascan.md). ``async_opts`` forwards the async knobs."""
+        from repro.fed.population import make_multi_async_round
+        return make_multi_async_round(
+            self.async_population_round_fn(n, q, **async_opts),
+            cohort_fn=cohort_fn)
+
     def init_ef_bank(self, n: int):
         """The stacked [n, ...] error-feedback residual bank the lossy
         population/async round programs carry (zeros; None when
@@ -465,15 +495,73 @@ class FederatedTrainer:
 
     def jitted(self, which: str, batch_specs=None, batch_axes=None,
                donate: bool = True, population_n: Optional[int] = None,
-               async_opts: Optional[Dict[str, Any]] = None):
+               async_opts: Optional[Dict[str, Any]] = None,
+               rounds_per_scan: int = 1, cohort_fn=None):
         """jit with shardings; returns the (lowerable) compiled callable.
 
         ``async_opts`` (async_population_round only) forwards the async
         knobs — sync_mode / staleness_decay / max_staleness / max_delay /
-        delay_eta — to :meth:`async_population_round_fn`."""
+        delay_eta — to :meth:`async_population_round_fn`.
+
+        ``which`` in {"multi_population_round", "multi_async_population_
+        round"} selects the mega-scan tier (docs/megascan.md):
+        ``rounds_per_scan`` sizes the leading R axis of the batch specs the
+        shardings are built from (the compiled program itself re-traces per
+        actual chunk length, so a shorter trailing chunk just compiles a
+        second program), and ``cohort_fn`` optionally moves the cohort draw
+        in-scan (``ids_R`` then passed as None)."""
         ss = self.state_shardings()
         sv = self.server_shardings()
         rep = NamedSharding(self.mesh, P()) if self.mesh else None
+        if which in ("multi_population_round",
+                     "multi_async_population_round"):
+            if population_n is None:
+                raise ValueError(f"{which} needs population_n")
+            is_axes = lambda t: (isinstance(t, tuple) and
+                                 all(u is None or isinstance(u, str)
+                                     for u in t))
+            # scanned batches carry leading (R, q) axes, both unsharded
+            round_axes = (jax.tree.map(lambda a: (None, None) + a,
+                                       batch_axes, is_leaf=is_axes)
+                          if batch_axes is not None else None)
+            round_specs = (jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(
+                    (rounds_per_scan, self.fed.q) + s.shape, s.dtype),
+                batch_specs) if batch_specs is not None else None)
+            bsh = self.batch_shardings(round_specs, round_axes)
+            ids_sh = None if cohort_fn is not None else rep
+            if which == "multi_population_round":
+                fn = self.multi_population_round_fn(population_n,
+                                                    cohort_fn=cohort_fn)
+                pss = self.population_state_shardings(population_n)
+                vec = self.bank_vector_sharding(population_n)
+                if self.codec.lossy:
+                    efsh = (self.population_state_shardings(population_n)
+                            if self.codec.stateful else None)
+                    in_sh = (pss, vec, efsh, sv, ids_sh, bsh, rep, rep)
+                    out_sh = (pss, vec, efsh, sv)
+                    dn = (0, 2) if donate and self.codec.stateful else (
+                        (0,) if donate else ())
+                else:
+                    in_sh = (pss, vec, sv, ids_sh, bsh, rep, rep)
+                    out_sh = (pss, vec, sv)
+                    dn = (0,) if donate else ()
+            else:
+                fn = self.multi_async_population_round_fn(
+                    population_n, cohort_fn=cohort_fn,
+                    **(async_opts or {}))
+                st_sh = self.async_state_shardings(population_n)
+                stats_sh = None if self.mesh is None else {
+                    k: rep for k in ("arrived", "accepted", "dropped",
+                                     "mean_staleness", "eta_scale",
+                                     "dispatched", "synced", "staleness")}
+                in_sh = (st_sh, ids_sh, bsh, rep, rep)
+                out_sh = (st_sh, stats_sh)
+                dn = (0,) if donate else ()
+            if self.mesh is None:
+                return jax.jit(fn, donate_argnums=dn)
+            return jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                           donate_argnums=dn)
         if which == "local":
             fn = self.local_step_fn()
             in_sh = (ss, sv, self.batch_shardings(batch_specs, batch_axes),

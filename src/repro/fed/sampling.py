@@ -319,6 +319,26 @@ class TraceFileSampler(CohortSampler):
                                    round_id, self.c)
 
 
+def in_scan_cohort_fn(sampler: CohortSampler):
+    """A jit-traceable ``round_id -> [c] int32 ids`` draw for the mega-scan
+    tier, or ``None`` when the sampler's draw needs host state.
+
+    Uniform and roundrobin cohorts are pure functions of (key, round_id):
+    ``fold_in`` + ``permutation`` and modular arithmetic both trace fine
+    with a round_id that is a scanned loop variable, and produce draws
+    bit-identical to the host-side ``cohort()`` calls — the equality the
+    hypothesis property in tests/test_property.py pins, and the reason the
+    driver can keep drawing ids on the host (for batch gather and unique-
+    transmitter byte accounting) while the mega program re-draws them
+    in-scan. Trace-backed samplers index a host numpy table per round, so
+    they return ``None`` here and the driver prefetches their cohorts per
+    chunk instead (docs/megascan.md).
+    """
+    if isinstance(sampler, (UniformSampler, RoundRobinSampler)):
+        return sampler.cohort
+    return None
+
+
 def make_sampler(name: str, n: int, c: int, key: jax.Array, *,
                  period: int = 8, duty: float = 0.5,
                  offset: int = 0, trace_file: str = None) -> CohortSampler:

@@ -26,7 +26,8 @@ from repro.fed.population import (DELAY_MODELS, accum_staleness_hist,
                                   parse_tier_spec)
 from repro.fed.round import ENGINES
 from repro.fed.runtime import FederatedTrainer, client_batch_specs
-from repro.fed.sampling import SAMPLERS, load_delay_trace, make_sampler
+from repro.fed.sampling import (SAMPLERS, in_scan_cohort_fn,
+                                load_delay_trace, make_sampler)
 from repro.core.tree_util import tree_stack
 from repro.launch.mesh import make_local_mesh, make_production_mesh
 from repro.obs import NULL, StatAccum, make_telemetry, progress_line
@@ -59,6 +60,11 @@ def main():
     ap.add_argument("--engine", default="scan", choices=list(ENGINES),
                     help="scan: each q-step round + sync compiles as ONE "
                          "program; eager: one jitted call per local step")
+    ap.add_argument("--rounds-per-scan", type=int, default=1,
+                    help="mega-scan tier: compile R full rounds into ONE "
+                         "program and loop over ceil(rounds/R) chunks, "
+                         "draining metrics/stats once per chunk (1 = "
+                         "per-round programs; docs/megascan.md)")
     ap.add_argument("--population", type=int, default=0,
                     help="client population size N: keep N persistent client "
                          "states and compute only a sampled cohort per round "
@@ -161,6 +167,18 @@ def run_cli(args, cfg, fed, shape, tr: FederatedTrainer, key, tele):
     if args.spill != "none" and not args.population:
         raise SystemExit("--spill host spills the population bank: run "
                          "with --population N")
+    if args.rounds_per_scan < 1:
+        raise SystemExit("--rounds-per-scan must be >= 1")
+    if args.rounds_per_scan > 1:
+        if args.spill != "none":
+            raise SystemExit("--spill host streams the bank through host "
+                             "memory round-by-round: the mega-scan tier "
+                             "needs device-resident rounds (set "
+                             "--rounds-per-scan 1 or --spill none)")
+        if not args.population and args.engine != "scan":
+            raise SystemExit("--rounds-per-scan > 1 fuses whole rounds into "
+                             "one program: use --engine scan or a "
+                             "--population mode")
     if args.population:
         run_population(args, cfg, fed, shape, tr, key, tele)
         return
@@ -179,7 +197,6 @@ def run_cli(args, cfg, fed, shape, tr: FederatedTrainer, key, tele):
     steps_done = args.steps
     if args.engine == "scan":
         # fused round engine: q local steps + sync in one program per round
-        round_fn = jax.jit(tr.round_step_fn())
         n_rounds = max((args.steps - start) // fed.q, 1)
         steps_done = start + n_rounds * fed.q
         if steps_done != args.steps:
@@ -188,28 +205,76 @@ def run_cli(args, cfg, fed, shape, tr: FederatedTrainer, key, tele):
                   f"(use --steps divisible by q={fed.q})", flush=True)
         acc = (StatAccum.create(states, tele.metrics_every, tele.consensus)
                if tele.sinks else None)
-        for r in range(n_rounds):
-            t = start + r * fed.q
-            with tele.span("batch_build"):
-                batch_q = tree_stack([make_client_batch(data, cfg, specs,
-                                                        t + j)
-                                      for j in range(fed.q)])
-            r0 = time.time()
-            with tele.span("round_program"):
-                states, server = round_fn(states, server, batch_q, key)
-                jax.block_until_ready(states)
-            dt = time.time() - r0
-            tele.round(r, step=t + fed.q - 1, round_seconds=dt)
-            if acc is not None:
-                acc.update(states)
-                if acc.ready:
-                    tele.stats(**acc.drain())
-            if r % max(args.eval_every // fed.q, 1) == 0 or r == n_rounds - 1:
-                last = jax.tree.map(lambda x: x[-1], batch_q)
-                loss = float(ev(states, last))
-                print(progress_line(loss=loss, elapsed=time.time() - t0,
-                                    step=t + fed.q - 1, round=r,
-                                    round_seconds=dt), flush=True)
+        R = args.rounds_per_scan
+        if R > 1:
+            # mega-scan tier (docs/megascan.md): fuse R whole rounds into
+            # ONE donated-carry program and loop over ceil(rounds/R)
+            # chunks; stats sample chunk boundaries, one row per chunk
+            from repro.fed.round import make_multi_round
+            base = tr.round_step_fn()
+
+            def one(carry, _ids, batch_q, kk, _rid):
+                return base(carry[0], carry[1], batch_q, kk), None
+
+            multi = jax.jit(make_multi_round(one), donate_argnums=(0,))
+            r = 0
+            while r < n_rounds:
+                L = min(R, n_rounds - r)
+                t = start + r * fed.q
+                with tele.span("batch_build"):
+                    batch_R = tree_stack([
+                        tree_stack([make_client_batch(data, cfg, specs,
+                                                      t + j * fed.q + jj)
+                                    for jj in range(fed.q)])
+                        for j in range(L)])
+                r0 = time.time()
+                with tele.span("round_program"):
+                    (states, server), _ = multi((states, server), None,
+                                                batch_R, key, jnp.int32(r))
+                    jax.block_until_ready(states)
+                dt = time.time() - r0
+                for j in range(L):
+                    tele.round(r + j, step=t + j * fed.q + fed.q - 1,
+                               round_seconds=dt / L)
+                if acc is not None:
+                    acc.update(states)
+                    if acc.ready:
+                        tele.stats(**acc.drain())
+                rr = r + L - 1
+                if (any((r + j) % max(args.eval_every // fed.q, 1) == 0
+                        for j in range(L)) or rr == n_rounds - 1):
+                    last = jax.tree.map(lambda x: x[-1, -1], batch_R)
+                    loss = float(ev(states, last))
+                    print(progress_line(loss=loss, elapsed=time.time() - t0,
+                                        step=t + (L - 1) * fed.q + fed.q - 1,
+                                        round=rr, round_seconds=dt / L),
+                          flush=True)
+                r += L
+        else:
+            round_fn = jax.jit(tr.round_step_fn())
+            for r in range(n_rounds):
+                t = start + r * fed.q
+                with tele.span("batch_build"):
+                    batch_q = tree_stack([make_client_batch(data, cfg, specs,
+                                                            t + j)
+                                          for j in range(fed.q)])
+                r0 = time.time()
+                with tele.span("round_program"):
+                    states, server = round_fn(states, server, batch_q, key)
+                    jax.block_until_ready(states)
+                dt = time.time() - r0
+                tele.round(r, step=t + fed.q - 1, round_seconds=dt)
+                if acc is not None:
+                    acc.update(states)
+                    if acc.ready:
+                        tele.stats(**acc.drain())
+                if (r % max(args.eval_every // fed.q, 1) == 0
+                        or r == n_rounds - 1):
+                    last = jax.tree.map(lambda x: x[-1], batch_q)
+                    loss = float(ev(states, last))
+                    print(progress_line(loss=loss, elapsed=time.time() - t0,
+                                        step=t + fed.q - 1, round=r,
+                                        round_seconds=dt), flush=True)
         if acc is not None and acc.pending:
             tele.stats(**acc.drain())
     else:
@@ -275,6 +340,11 @@ def run_population(args, cfg, fed, shape, tr: FederatedTrainer, key,
         else:
             bank, last_sync, server = loaded
         print(f"resumed population run from step {start}")
+    R = args.rounds_per_scan
+    # mega-scan tier: uniform/roundrobin cohorts re-draw inside the scanned
+    # program; host-state samplers (trace/trace-file) stay host-side and
+    # prefetch the chunk's L cohorts up front (docs/megascan.md)
+    cohort_fn = in_scan_cohort_fn(sampler) if R > 1 else None
     if tr.mesh is not None:
         # partition the bank rows (and EF stack / [N] bookkeeping) over the
         # mesh's client axes; the jitted round keeps the layout, so the
@@ -283,8 +353,17 @@ def run_population(args, cfg, fed, shape, tr: FederatedTrainer, key,
         last_sync = jax.device_put(last_sync, tr.bank_vector_sharding(n))
         if ef is not None:
             ef = jax.device_put(ef, tr.population_state_shardings(n))
-        round_fn = tr.jitted("population_round", specs_c, axes_c,
-                             population_n=n)
+        if R > 1:
+            round_fn = tr.jitted("multi_population_round", specs_c, axes_c,
+                                 population_n=n, rounds_per_scan=R,
+                                 cohort_fn=cohort_fn)
+        else:
+            round_fn = tr.jitted("population_round", specs_c, axes_c,
+                                 population_n=n)
+    elif R > 1:
+        round_fn = jax.jit(
+            tr.multi_population_round_fn(n, cohort_fn=cohort_fn),
+            donate_argnums=(0, 2) if tr.codec.stateful else (0,))
     else:
         round_fn = jax.jit(tr.population_round_fn(n))
     ev = jax.jit(tr.eval_fn())
@@ -302,48 +381,105 @@ def run_population(args, cfg, fed, shape, tr: FederatedTrainer, key,
           f"of q={fed.q}", flush=True)
     acc = (StatAccum.create(bank, tele.metrics_every, tele.consensus)
            if tele.sinks else None)
+    eval_rounds = max(args.eval_every // fed.q, 1)
     t0 = time.time()
-    for r in range(start_round, n_rounds):
-        t = r * fed.q
-        ids = sampler.cohort(r)
-        with tele.span("batch_build"):
-            batch_q = tree_stack([make_cohort_batch(data, cfg, specs_c,
-                                                    t + j, ids)
-                                  for j in range(fed.q)])
-        r0 = time.time()
-        with tele.span("round_program"):
-            if lossy:
-                bank, last_sync, ef, server = round_fn(
-                    bank, last_sync, ef, server, ids, batch_q, key,
-                    jnp.int32(r))
-            else:
-                bank, last_sync, server = round_fn(bank, last_sync, server,
-                                                   ids, batch_q, key,
-                                                   jnp.int32(r))
-            jax.block_until_ready(bank)
-        dt = time.time() - r0
-        # make_population_round closes every round with one sync: each
-        # UNIQUE cohort member uploads one codec message (a duplicate id —
-        # trace shortfall cycling — fills two aggregation slots but one
-        # client shipped one message, docs/sharding.md wire conventions);
-        # every bank row downloads the broadcast (sync_mode="broadcast")
-        bytes_up += int(np.unique(np.asarray(ids)).size) * msg_b
-        bytes_down += n * down_b
-        tele.round(r, step=t + fed.q - 1, round_seconds=dt,
-                   bytes_up=bytes_up, bytes_down=bytes_down)
-        if acc is not None:
-            acc.update(bank)
-            if acc.ready:
-                tele.stats(**acc.drain())
-        if r % max(args.eval_every // fed.q, 1) == 0 or r == n_rounds - 1:
-            last = jax.tree.map(lambda x: x[-1], batch_q)
-            loss = float(ev(bank, last))
-            print(progress_line(loss=loss, elapsed=time.time() - t0,
-                                step=t + fed.q - 1, round=r,
-                                round_seconds=dt, bytes_up=bytes_up,
-                                bytes_down=bytes_down,
-                                cohort=np.asarray(ids).tolist()),
-                  flush=True)
+    if R > 1:
+        r = start_round
+        while r < n_rounds:
+            L = min(R, n_rounds - r)
+            # host always draws the cohorts (batch building + wire
+            # accounting need the ids); in-scan draws replay the exact
+            # same sequence (pinned by tests/test_property.py)
+            ids_l = [np.asarray(sampler.cohort(r + j), np.int32)
+                     for j in range(L)]
+            with tele.span("batch_build"):
+                batch_R = tree_stack([
+                    tree_stack([make_cohort_batch(data, cfg, specs_c,
+                                                  (r + j) * fed.q + jj,
+                                                  ids_l[j])
+                                for jj in range(fed.q)])
+                    for j in range(L)])
+            ids_R = (None if cohort_fn is not None
+                     else jnp.asarray(np.stack(ids_l)))
+            r0 = time.time()
+            with tele.span("round_program"):
+                if lossy:
+                    bank, last_sync, ef, server = round_fn(
+                        bank, last_sync, ef, server, ids_R, batch_R, key,
+                        jnp.int32(r))
+                else:
+                    bank, last_sync, server = round_fn(
+                        bank, last_sync, server, ids_R, batch_R, key,
+                        jnp.int32(r))
+                jax.block_until_ready(bank)
+            dt = time.time() - r0
+            for j in range(L):
+                bytes_up += int(np.unique(ids_l[j]).size) * msg_b
+                bytes_down += n * down_b
+                tele.round(r + j, step=(r + j) * fed.q + fed.q - 1,
+                           round_seconds=dt / L, bytes_up=bytes_up,
+                           bytes_down=bytes_down)
+            if acc is not None:
+                # mega mode samples the on-device stats once per chunk
+                acc.update(bank)
+                if acc.ready:
+                    tele.stats(**acc.drain())
+            rr = r + L - 1
+            if (any((r + j) % eval_rounds == 0 for j in range(L))
+                    or rr == n_rounds - 1):
+                last = jax.tree.map(lambda x: x[-1, -1], batch_R)
+                loss = float(ev(bank, last))
+                print(progress_line(loss=loss, elapsed=time.time() - t0,
+                                    step=rr * fed.q + fed.q - 1, round=rr,
+                                    round_seconds=dt / L,
+                                    bytes_up=bytes_up,
+                                    bytes_down=bytes_down,
+                                    cohort=ids_l[-1].tolist()),
+                      flush=True)
+            r += L
+    else:
+        for r in range(start_round, n_rounds):
+            t = r * fed.q
+            ids = sampler.cohort(r)
+            with tele.span("batch_build"):
+                batch_q = tree_stack([make_cohort_batch(data, cfg, specs_c,
+                                                        t + j, ids)
+                                      for j in range(fed.q)])
+            r0 = time.time()
+            with tele.span("round_program"):
+                if lossy:
+                    bank, last_sync, ef, server = round_fn(
+                        bank, last_sync, ef, server, ids, batch_q, key,
+                        jnp.int32(r))
+                else:
+                    bank, last_sync, server = round_fn(bank, last_sync,
+                                                       server, ids, batch_q,
+                                                       key, jnp.int32(r))
+                jax.block_until_ready(bank)
+            dt = time.time() - r0
+            # make_population_round closes every round with one sync: each
+            # UNIQUE cohort member uploads one codec message (a duplicate
+            # id — trace shortfall cycling — fills two aggregation slots
+            # but one client shipped one message, docs/sharding.md wire
+            # conventions); every bank row downloads the broadcast
+            # (sync_mode="broadcast")
+            bytes_up += int(np.unique(np.asarray(ids)).size) * msg_b
+            bytes_down += n * down_b
+            tele.round(r, step=t + fed.q - 1, round_seconds=dt,
+                       bytes_up=bytes_up, bytes_down=bytes_down)
+            if acc is not None:
+                acc.update(bank)
+                if acc.ready:
+                    tele.stats(**acc.drain())
+            if r % eval_rounds == 0 or r == n_rounds - 1:
+                last = jax.tree.map(lambda x: x[-1], batch_q)
+                loss = float(ev(bank, last))
+                print(progress_line(loss=loss, elapsed=time.time() - t0,
+                                    step=t + fed.q - 1, round=r,
+                                    round_seconds=dt, bytes_up=bytes_up,
+                                    bytes_down=bytes_down,
+                                    cohort=np.asarray(ids).tolist()),
+                      flush=True)
     if acc is not None and acc.pending:
         tele.stats(**acc.drain())
     print(f"wire totals ({tr.codec.name}): bytes_up={bytes_up} "
@@ -518,12 +654,24 @@ def run_population_async(args, cfg, fed, tr: FederatedTrainer, key, data,
         print(f"resumed async population run from step {start}")
     opts = dict(max_staleness=args.max_staleness, max_delay=args.max_delay,
                 delay_eta=args.delay_eta, delay_model=dm)
+    R = args.rounds_per_scan
+    cohort_fn = in_scan_cohort_fn(sampler) if R > 1 else None
     if tr.mesh is not None:
         # bank / pending buffer / EF stack / [N] bookkeeping partition over
         # the client mesh axes; arrival masks compute shard-locally
         state = jax.device_put(state, tr.async_state_shardings(n))
-        round_fn = tr.jitted("async_population_round", specs_c, axes_c,
-                             population_n=n, async_opts=opts)
+        if R > 1:
+            round_fn = tr.jitted("multi_async_population_round", specs_c,
+                                 axes_c, population_n=n, async_opts=opts,
+                                 rounds_per_scan=R, cohort_fn=cohort_fn)
+        else:
+            round_fn = tr.jitted("async_population_round", specs_c, axes_c,
+                                 population_n=n, async_opts=opts)
+    elif R > 1:
+        round_fn = jax.jit(
+            tr.multi_async_population_round_fn(n, cohort_fn=cohort_fn,
+                                               **opts),
+            donate_argnums=(0,))
     else:
         round_fn = jax.jit(tr.async_population_round_fn(n, **opts))
     ev = jax.jit(tr.eval_fn())
@@ -547,20 +695,16 @@ def run_population_async(args, cfg, fed, tr: FederatedTrainer, key, data,
     bytes_up = bytes_down = 0
     statacc = (StatAccum.create(state["bank"], tele.metrics_every,
                                 tele.consensus) if tele.sinks else None)
-    t0 = time.time()
-    for r in range(start_round, n_rounds):
-        t = r * fed.q
-        ids = sampler.cohort(r)
-        with tele.span("batch_build"):
-            batch_q = tree_stack([make_cohort_batch(data, cfg, specs_c,
-                                                    t + j, ids)
-                                  for j in range(fed.q)])
-        r0 = time.time()
-        with tele.span("round_program"):
-            state, stats = round_fn(state, ids, batch_q, key, jnp.int32(r))
-            jax.block_until_ready(state)
-        dt = time.time() - r0
-        stale = np.asarray(stats["staleness"])
+    eval_rounds = max(args.eval_every // fed.q, 1)
+
+    def note_round(r, stats_np, dt, idx=None):
+        """Host-side bookkeeping for one round's stats (idx selects a row
+        of a chunk's stacked stats in mega mode): staleness histograms,
+        wire accounting, the tele.round record. Returns the scalar dict
+        the progress line prints."""
+        nonlocal hist, bytes_up, bytes_down
+        pick = (lambda v: v) if idx is None else (lambda v: v[idx])
+        stale = pick(stats_np["staleness"])
         acc = stale[stale >= 0]
         if acc.size:
             hist = accum_staleness_hist(hist, acc)
@@ -569,34 +713,94 @@ def run_population_async(args, cfg, fed, tr: FederatedTrainer, key, data,
                              len(dm.tier_fracs))
         # uplink per arrival (dropped ones shipped before the gate),
         # downlink per row that received the new global model
-        bytes_up += int(stats["arrived"]) * msg_b
-        bytes_down += int(stats["synced"]) * down_b
-        tele.round(r, step=t + fed.q - 1, round_seconds=dt,
-                   bytes_up=bytes_up, bytes_down=bytes_down,
-                   arrived=int(stats["arrived"]),
-                   accepted=int(stats["accepted"]),
-                   dropped=int(stats["dropped"]),
-                   dispatched=int(stats["dispatched"]),
-                   synced=int(stats["synced"]),
-                   mean_staleness=float(stats["mean_staleness"]),
-                   eta_scale=float(stats["eta_scale"]))
-        if statacc is not None:
-            statacc.update(state["bank"])
-            if statacc.ready:
-                tele.stats(**statacc.drain())
-        if r % max(args.eval_every // fed.q, 1) == 0 or r == n_rounds - 1:
-            last = jax.tree.map(lambda x: x[-1], batch_q)
-            loss = float(ev(state["bank"], last))
-            print(progress_line(loss=loss, elapsed=time.time() - t0,
-                                step=t + fed.q - 1, round=r,
-                                round_seconds=dt,
-                                arrived=int(stats["arrived"]),
-                                dropped=int(stats["dropped"]),
-                                mean_staleness=float(
-                                    stats["mean_staleness"]),
-                                eta_scale=float(stats["eta_scale"]),
-                                bytes_up=bytes_up, bytes_down=bytes_down),
-                  flush=True)
+        row = {k: int(pick(stats_np[k])) for k in
+               ("arrived", "accepted", "dropped", "dispatched", "synced")}
+        row["mean_staleness"] = float(pick(stats_np["mean_staleness"]))
+        row["eta_scale"] = float(pick(stats_np["eta_scale"]))
+        bytes_up += row["arrived"] * msg_b
+        bytes_down += row["synced"] * down_b
+        tele.round(r, step=r * fed.q + fed.q - 1,
+                   round_seconds=dt, bytes_up=bytes_up,
+                   bytes_down=bytes_down, **row)
+        return row
+
+    t0 = time.time()
+    if R > 1:
+        r = start_round
+        while r < n_rounds:
+            L = min(R, n_rounds - r)
+            ids_l = [np.asarray(sampler.cohort(r + j), np.int32)
+                     for j in range(L)]
+            with tele.span("batch_build"):
+                batch_R = tree_stack([
+                    tree_stack([make_cohort_batch(data, cfg, specs_c,
+                                                  (r + j) * fed.q + jj,
+                                                  ids_l[j])
+                                for jj in range(fed.q)])
+                    for j in range(L)])
+            ids_R = (None if cohort_fn is not None
+                     else jnp.asarray(np.stack(ids_l)))
+            r0 = time.time()
+            with tele.span("round_program"):
+                state, stats_R = round_fn(state, ids_R, batch_R, key,
+                                          jnp.int32(r))
+                jax.block_until_ready(state)
+            dt = time.time() - r0
+            stats_np = {k2: np.asarray(v) for k2, v in stats_R.items()}
+            for j in range(L):
+                row = note_round(r + j, stats_np, dt / L, idx=j)
+            if statacc is not None:
+                # mega mode samples the on-device stats once per chunk
+                statacc.update(state["bank"])
+                if statacc.ready:
+                    tele.stats(**statacc.drain())
+            rr = r + L - 1
+            if (any((r + j) % eval_rounds == 0 for j in range(L))
+                    or rr == n_rounds - 1):
+                last = jax.tree.map(lambda x: x[-1, -1], batch_R)
+                loss = float(ev(state["bank"], last))
+                print(progress_line(loss=loss, elapsed=time.time() - t0,
+                                    step=rr * fed.q + fed.q - 1, round=rr,
+                                    round_seconds=dt / L,
+                                    arrived=row["arrived"],
+                                    dropped=row["dropped"],
+                                    mean_staleness=row["mean_staleness"],
+                                    eta_scale=row["eta_scale"],
+                                    bytes_up=bytes_up,
+                                    bytes_down=bytes_down), flush=True)
+            r += L
+    else:
+        for r in range(start_round, n_rounds):
+            t = r * fed.q
+            ids = sampler.cohort(r)
+            with tele.span("batch_build"):
+                batch_q = tree_stack([make_cohort_batch(data, cfg, specs_c,
+                                                        t + j, ids)
+                                      for j in range(fed.q)])
+            r0 = time.time()
+            with tele.span("round_program"):
+                state, stats = round_fn(state, ids, batch_q, key,
+                                        jnp.int32(r))
+                jax.block_until_ready(state)
+            dt = time.time() - r0
+            row = note_round(r, {k2: np.asarray(v)
+                                 for k2, v in stats.items()}, dt)
+            if statacc is not None:
+                statacc.update(state["bank"])
+                if statacc.ready:
+                    tele.stats(**statacc.drain())
+            if r % eval_rounds == 0 or r == n_rounds - 1:
+                last = jax.tree.map(lambda x: x[-1], batch_q)
+                loss = float(ev(state["bank"], last))
+                print(progress_line(loss=loss, elapsed=time.time() - t0,
+                                    step=t + fed.q - 1, round=r,
+                                    round_seconds=dt,
+                                    arrived=row["arrived"],
+                                    dropped=row["dropped"],
+                                    mean_staleness=row["mean_staleness"],
+                                    eta_scale=row["eta_scale"],
+                                    bytes_up=bytes_up,
+                                    bytes_down=bytes_down), flush=True)
     if statacc is not None and statacc.pending:
         tele.stats(**statacc.drain())
     tele.note(staleness_hist=[int(k) for k in hist])

@@ -13,11 +13,11 @@ profiler workflow. Entry points:
 from repro.obs.telemetry import (NULL, SCHEMA, JsonlSink, MemorySink,
                                  NullTelemetry, StdoutSink, Telemetry,
                                  make_telemetry, run_manifest)
-from repro.obs.devstats import StatAccum
+from repro.obs.devstats import STAT_FIELDS, StatAccum, stat_row
 from repro.obs.progress import progress_line
 
 __all__ = [
     "NULL", "SCHEMA", "JsonlSink", "MemorySink", "NullTelemetry",
     "StdoutSink", "Telemetry", "make_telemetry", "run_manifest",
-    "StatAccum", "progress_line",
+    "STAT_FIELDS", "StatAccum", "stat_row", "progress_line",
 ]

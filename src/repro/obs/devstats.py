@@ -34,6 +34,27 @@ import jax.numpy as jnp
 from repro.core.metrics import consensus_error
 from repro.core.tree_util import (tree_mean_axis0, tree_norm, tree_sub)
 
+# column order of a stat row without the opt-in consensus tail
+STAT_FIELDS = ("global_norm", "update_norm")
+
+
+def stat_row(states, prev_avg, consensus: bool = False):
+    """One ``[S]`` f32 stats row for a bank/state pytree (leading client
+    axis) against the previous round's client average: ``(row, new_avg)``.
+
+    The shared math of :class:`StatAccum` and the mega-scan tier — the mega
+    programs thread ``prev_avg`` through their scan carry and emit one row
+    per round as a scan output, so the fused program computes exactly the
+    rows StatAccum would have (and, because the rows are unconditionally
+    part of the program, it is byte-identical with telemetry on or off).
+    """
+    avg = tree_mean_axis0(states)
+    cols = [tree_norm(avg), tree_norm(tree_sub(avg, prev_avg))]
+    if consensus:
+        ce = consensus_error(states)
+        cols.append(sum(ce.values()))
+    return jnp.stack([c.astype(jnp.float32) for c in cols]), avg
+
 
 class StatAccum:
     """Device-resident ``[K, S]`` scalar ring + donated-carry update program.
@@ -70,16 +91,8 @@ class StatAccum:
             ("consensus",) if consensus else ())
         s = len(fields)
 
-        def _row(states, prev):
-            avg = tree_mean_axis0(states)
-            cols = [tree_norm(avg), tree_norm(tree_sub(avg, prev))]
-            if consensus:
-                ce = consensus_error(states)
-                cols.append(sum(ce.values()))
-            return jnp.stack([c.astype(jnp.float32) for c in cols]), avg
-
         def _update(carry, states):
-            row, avg = _row(states, carry["prev"])
+            row, avg = stat_row(states, carry["prev"], consensus)
             return {"buf": carry["buf"].at[carry["i"]].set(row),
                     "i": (carry["i"] + 1) % k,
                     "prev": avg}

@@ -111,6 +111,11 @@ class FedDriver:
     # per-device bank bytes scale as N/devices (docs/sharding.md). The
     # masked eager/scan engines ignore it (they are vmap-scale by design).
     mesh: Optional[Any] = None
+    # mega-scan tier (docs/megascan.md): compile R full rounds into ONE
+    # donated-carry program and loop over ⌈rounds/R⌉ chunks, draining
+    # stats/telemetry once per chunk. R=1 keeps the per-round loops; the
+    # eager engine ignores it (it is the per-step reference by design).
+    rounds_per_scan: int = 1
     # optional repro.obs.Telemetry bus: per-round records, on-device stat
     # accumulation (drained every telemetry.metrics_every rounds), phase
     # spans. Strictly observational — attaching it never changes the round
@@ -122,6 +127,9 @@ class FedDriver:
         if self.engine not in ENGINES:
             raise ValueError(f"engine must be one of {ENGINES}, "
                              f"got {self.engine!r}")
+        if self.rounds_per_scan < 1:
+            raise ValueError(f"rounds_per_scan must be >= 1, "
+                             f"got {self.rounds_per_scan}")
         self.alg: Algorithm = make_algorithm(self.algorithm, self.fed,
                                              self.problem)
         self.consensus_log = []
@@ -321,6 +329,44 @@ class FedDriver:
             tele.stats(**acc.drain())
         tele.flush()
 
+    def _mega_obs(self, tele):
+        """Mega-mode stat plumbing (docs/megascan.md): the fused programs
+        emit one ``repro.obs.stat_row`` per round as a scan output — the
+        rows are unconditionally part of the program, so it compiles
+        byte-identically with telemetry on or off — and this returns the
+        emitter that converts an ``[L, 2]`` device row block into ONE
+        telemetry ``stats`` record, the once-per-chunk drain. The opt-in
+        consensus column is O(N) work per round and stays out of the fused
+        program by policy, so it is rejected up front."""
+        if tele.sinks and getattr(tele, "consensus", False):
+            raise ValueError(
+                "rounds_per_scan > 1 cannot fold the O(N) consensus stat "
+                "into the mega-scan program; run with rounds_per_scan=1 "
+                "or telemetry consensus=False")
+        state = {"round0": 0}
+
+        def emit(rows):
+            k = int(rows.shape[0])
+            if tele.sinks and k:
+                arr = np.asarray(rows, np.float32)   # the chunk's transfer
+                tele.stats(round_start=state["round0"],
+                           global_norm=[float(v) for v in arr[:, 0]],
+                           update_norm=[float(v) for v in arr[:, 1]])
+            state["round0"] += k
+
+        return emit
+
+    def _log_chunk(self, res: RunResult, dt: float, length: int,
+                   fresh: bool):
+        """Chunk wall-clock accounting: a fresh-length chunk carries its
+        compile (kept out of the steady-state log, mirroring _log_round's
+        first-round convention); steady chunks amortize their wall-clock
+        over the rounds they contain."""
+        if fresh:
+            res.compile_seconds += dt
+        else:
+            self.round_seconds.extend([dt / length] * length)
+
     # -------------------------------------------------- run loops
 
     def _log_round(self, res: RunResult, dt: float):
@@ -422,9 +468,8 @@ class FedDriver:
             ref = states
             ef = zeros_ef(self.codec, states)
 
-        @functools.partial(jax.jit, static_argnames=("n_steps", "sync_first"))
-        def segment(states, server, batches_q, kk, active_prev, active, *,
-                    n_steps, sync_first):
+        def segment_body(states, server, batches_q, kk, active_prev, active,
+                         *, n_steps, sync_first):
             if sync_first:
                 states, server = self._sync_body(states, server, active_prev)
             local = lambda st, srv, b, k: self._local_body(st, srv, b, k,
@@ -432,10 +477,9 @@ class FedDriver:
             return make_round_step(local, lambda st, srv: (st, srv),
                                    n_steps)(states, server, batches_q, kk)
 
-        @functools.partial(jax.jit, static_argnames=("n_steps", "sync_first"))
-        def segment_codec(states, server, ref, ef, batches_q, kk,
-                          active_prev, active, round_id, *, n_steps,
-                          sync_first):
+        def segment_codec_body(states, server, ref, ef, batches_q, kk,
+                               active_prev, active, round_id, *, n_steps,
+                               sync_first):
             # the sync closing round r-1 folds round_id - 1 — the same RNG
             # stream the eager engine's codec sync uses, so eager and scan
             # stay parity-comparable under stochastic codecs too
@@ -449,47 +493,179 @@ class FedDriver:
                                                            batches_q, kk)
             return states, server, ref, ef
 
+        # the plain bodies above also become the mega-scan chunk body; the
+        # per-round jits below compile the exact programs the decorated
+        # closures used to
+        segment = jax.jit(segment_body,
+                          static_argnames=("n_steps", "sync_first"))
+        segment_codec = jax.jit(segment_codec_body,
+                                static_argnames=("n_steps", "sync_first"))
+
         full, rem = divmod(total_steps, q)
         lengths = [q] * full + ([rem] if rem else [])
         eval_rounds = max(eval_every // q, 1)
         tele = self._tele()
-        acc = self._obs_begin(states)
+        R = self.rounds_per_scan
+        acc = self._obs_begin(states) if R <= 1 else None
         res = RunResult(self.alg.name, [], [], [], [], [], 0.0)
         t0 = time.time()
         t = 0
-        for r, n_steps in enumerate(lengths):
-            with tele.span("batch_build"):
-                batches_q = tree_stack([self._batches(t + j)
-                                        for j in range(n_steps)])
-            active = self._active_mask(r)
-            # round 0 has no preceding sync (sync_first=False): reuse the
-            # current mask instead of computing an unused _active_mask(-1)
-            active_prev = self._active_mask(r - 1) if r > 0 else active
-            r0 = time.time()
-            with tele.span("round_program"):
-                if lossy:
-                    states, server, ref, ef = segment_codec(
-                        states, server, ref, ef, batches_q, key, active_prev,
-                        active, jnp.int32(r), n_steps=n_steps,
-                        sync_first=r > 0)
-                else:
-                    states, server = segment(
-                        states, server, batches_q, key, active_prev, active,
-                        n_steps=n_steps, sync_first=r > 0)
-                jax.block_until_ready(states)
-            dt = time.time() - r0
-            self._log_round(res, dt)
-            t += n_steps
-            samples += n_steps * (fed.neumann_k + 2)
-            if r > 0:
-                comms += 1
-                bytes_up += int(active_prev.sum()) * msg_b
-                bytes_down += self.n_clients * down_b
-            self._obs_round(acc, states, r, dt, t - 1, samples, comms,
-                            bytes_up, bytes_down)
-            if r % eval_rounds == 0 or r == len(lengths) - 1:
-                self._record(res, states, t - 1, samples, comms, bytes_up,
-                             bytes_down)
+        if R > 1:
+            # mega-scan tier: full sync-first rounds (1 .. full-1) fuse into
+            # chunks of up to R rounds, each ONE donated-carry program; round
+            # 0 (no preceding sync) and the trailing partial round peel off
+            # as single-round programs (docs/megascan.md)
+            from repro.fed.round import make_multi_round
+            from repro.obs.devstats import stat_row
+            emit_rows = self._mega_obs(tele)
+            row_fn = jax.jit(stat_row)
+            prev_avg = jax.jit(tree_mean_axis0)(states)
+
+            if lossy:
+                def chunk_round(carry, masks, batches_q, kk, round_id):
+                    states, server, ref, ef, prev = carry
+                    states, server, ref, ef = segment_codec_body(
+                        states, server, ref, ef, batches_q, kk, masks[0],
+                        masks[1], round_id, n_steps=q, sync_first=True)
+                    row, prev = stat_row(states, prev)
+                    return (states, server, ref, ef, prev), row
+            else:
+                def chunk_round(carry, masks, batches_q, kk, round_id):
+                    states, server, prev = carry
+                    states, server = segment_body(
+                        states, server, batches_q, kk, masks[0], masks[1],
+                        n_steps=q, sync_first=True)
+                    row, prev = stat_row(states, prev)
+                    return (states, server, prev), row
+
+            mega = jax.jit(make_multi_round(chunk_round),
+                           donate_argnums=(0,))
+            mega_compiled = set()
+            # peeled single-round programs ((n_steps, sync_first) keys) also
+            # compile fresh the first time — e.g. the trailing partial round
+            # — and must stay out of the steady-state round log
+            seg_used = set()
+            n_rounds = len(lengths)
+            r = 0
+            while r < n_rounds:
+                n_steps = lengths[r]
+                L = min(R, full - r) if (r > 0 and n_steps == q) else 1
+                if L <= 1:
+                    with tele.span("batch_build"):
+                        batches_q = tree_stack([self._batches(t + j)
+                                                for j in range(n_steps)])
+                    active = self._active_mask(r)
+                    active_prev = (self._active_mask(r - 1) if r > 0
+                                   else active)
+                    seg_fresh = (n_steps, r > 0) not in seg_used
+                    seg_used.add((n_steps, r > 0))
+                    r0 = time.time()
+                    with tele.span("round_program"):
+                        if lossy:
+                            states, server, ref, ef = segment_codec(
+                                states, server, ref, ef, batches_q, key,
+                                active_prev, active, jnp.int32(r),
+                                n_steps=n_steps, sync_first=r > 0)
+                        else:
+                            states, server = segment(
+                                states, server, batches_q, key, active_prev,
+                                active, n_steps=n_steps, sync_first=r > 0)
+                        jax.block_until_ready(states)
+                    dt = time.time() - r0
+                    self._log_chunk(res, dt, 1, seg_fresh)
+                    row, prev_avg = row_fn(states, prev_avg)
+                    t += n_steps
+                    samples += n_steps * (fed.neumann_k + 2)
+                    if r > 0:
+                        comms += 1
+                        bytes_up += int(active_prev.sum()) * msg_b
+                        bytes_down += self.n_clients * down_b
+                    tele.round(r, step=t - 1, round_seconds=dt,
+                               samples=samples, comms=comms,
+                               bytes_up=bytes_up, bytes_down=bytes_down)
+                    emit_rows(row[None])
+                    if r % eval_rounds == 0 or r == n_rounds - 1:
+                        self._record(res, states, t - 1, samples, comms,
+                                     bytes_up, bytes_down)
+                    r += 1
+                    continue
+                masks_prev = [self._active_mask(rr - 1)
+                              for rr in range(r, r + L)]
+                masks_cur = [self._active_mask(rr)
+                             for rr in range(r, r + L)]
+                prev_np = [np.asarray(m) for m in masks_prev]
+                with tele.span("batch_build"):
+                    batches_R = tree_stack(
+                        [tree_stack([self._batches(t + j * q + jj)
+                                     for jj in range(q)])
+                         for j in range(L)])
+                fresh = L not in mega_compiled
+                mega_compiled.add(L)
+                r0 = time.time()
+                with tele.span("round_program"):
+                    if lossy:
+                        carry = (states, server, ref, ef, prev_avg)
+                    else:
+                        carry = (states, server, prev_avg)
+                    carry, rows = mega(
+                        carry, (jnp.stack(masks_prev), jnp.stack(masks_cur)),
+                        batches_R, key, jnp.int32(r))
+                    if lossy:
+                        states, server, ref, ef, prev_avg = carry
+                    else:
+                        states, server, prev_avg = carry
+                    jax.block_until_ready(states)
+                dt = time.time() - r0
+                self._log_chunk(res, dt, L, fresh)
+                for j in range(L):
+                    t += q
+                    samples += q * (fed.neumann_k + 2)
+                    comms += 1
+                    bytes_up += int(prev_np[j].sum()) * msg_b
+                    bytes_down += self.n_clients * down_b
+                    tele.round(r + j, step=t - 1, round_seconds=dt / L,
+                               samples=samples, comms=comms,
+                               bytes_up=bytes_up, bytes_down=bytes_down)
+                emit_rows(rows)
+                if (any((r + j) % eval_rounds == 0 for j in range(L))
+                        or r + L == n_rounds):
+                    self._record(res, states, t - 1, samples, comms,
+                                 bytes_up, bytes_down)
+                r += L
+        else:
+            for r, n_steps in enumerate(lengths):
+                with tele.span("batch_build"):
+                    batches_q = tree_stack([self._batches(t + j)
+                                            for j in range(n_steps)])
+                active = self._active_mask(r)
+                # round 0 has no preceding sync (sync_first=False): reuse
+                # the current mask instead of an unused _active_mask(-1)
+                active_prev = self._active_mask(r - 1) if r > 0 else active
+                r0 = time.time()
+                with tele.span("round_program"):
+                    if lossy:
+                        states, server, ref, ef = segment_codec(
+                            states, server, ref, ef, batches_q, key,
+                            active_prev, active, jnp.int32(r),
+                            n_steps=n_steps, sync_first=r > 0)
+                    else:
+                        states, server = segment(
+                            states, server, batches_q, key, active_prev,
+                            active, n_steps=n_steps, sync_first=r > 0)
+                    jax.block_until_ready(states)
+                dt = time.time() - r0
+                self._log_round(res, dt)
+                t += n_steps
+                samples += n_steps * (fed.neumann_k + 2)
+                if r > 0:
+                    comms += 1
+                    bytes_up += int(active_prev.sum()) * msg_b
+                    bytes_down += self.n_clients * down_b
+                self._obs_round(acc, states, r, dt, t - 1, samples, comms,
+                                bytes_up, bytes_down)
+                if r % eval_rounds == 0 or r == len(lengths) - 1:
+                    self._record(res, states, t - 1, samples, comms,
+                                 bytes_up, bytes_down)
         res.seconds = time.time() - t0
         self._obs_end(acc)
         res.final_avg_state = tree_mean_axis0(states)
@@ -663,46 +839,181 @@ class FedDriver:
         lengths = [q] * full + ([rem] if rem else [])
         eval_rounds = max(eval_every // q, 1)
         tele = self._tele()
-        acc = self._obs_begin(bank)
+        R = self.rounds_per_scan
+        acc = self._obs_begin(bank) if R <= 1 else None
         res = RunResult(self.alg.name, [], [], [], [], [], 0.0)
         t0 = time.time()
         t = 0
-        prev_ids = None
-        for r, n_steps in enumerate(lengths):
-            ids = jnp.asarray(self._run_sampler.cohort(r), jnp.int32)
-            # the sync opening round r aggregates (and bills) the PREVIOUS
-            # round's cohort — the clients whose updates are on the wire
-            sync_ids = prev_ids if prev_ids is not None else ids
-            with tele.span("batch_build"):
-                batches_q = tree_stack([self._cohort_batches(ids, t + j)
-                                        for j in range(n_steps)])
-            r0 = time.time()
-            with tele.span("round_program"):
-                bank, last_sync, ef, server = segment(
-                    bank, last_sync, ef, server, sync_ids, ids, batches_q,
-                    key, jnp.int32(r), n_steps=n_steps, sync_first=r > 0)
-                jax.block_until_ready(bank)
-            dt = time.time() - r0
-            self._log_round(res, dt)
-            prev_ids = ids
-            t += n_steps
-            samples += n_steps * (fed.neumann_k + 2)
-            if r > 0:
-                comms += 1
-                # wire convention (docs/sharding.md): uplink bills UNIQUE
-                # transmitters — a duplicate cohort id (trace shortfall
-                # cycling) occupies two aggregation slots but one client
-                # computed and shipped one message; participants-mode
-                # downlink likewise reaches each member once
-                tx = int(np.unique(np.asarray(sync_ids)).size)
-                bytes_up += tx * msg_b
-                bytes_down += (n if pcfg.sync_mode == "broadcast"
-                               else tx) * down_b
-            self._obs_round(acc, bank, r, dt, t - 1, samples, comms,
-                            bytes_up, bytes_down)
-            if r % eval_rounds == 0 or r == len(lengths) - 1:
-                self._record(res, bank, t - 1, samples, comms, bytes_up,
-                             bytes_down)
+        if R > 1:
+            # mega-scan tier: full sync-first rounds chunk into ONE donated-
+            # carry program each; round 0 and the trailing partial round
+            # peel off as single-round programs. The carry threads (bank,
+            # last_sync, ef, server, prev_ids, prev_avg) — prev_ids feeds
+            # each in-scan opening sync, prev_avg the per-round stat rows.
+            from repro.fed.round import make_multi_round
+            from repro.fed.sampling import in_scan_cohort_fn
+            from repro.obs.devstats import stat_row
+            emit_rows = self._mega_obs(tele)
+            row_fn = jax.jit(stat_row)
+            prev_avg = jax.jit(tree_mean_axis0)(bank)
+            cohort_fn = in_scan_cohort_fn(self._run_sampler)
+
+            def chunk_round(carry, ids, batches_q, kk, round_id):
+                bank, last_sync, ef, server, prev_ids, prev = carry
+                bank, last_sync, ef, server = segment_fn(
+                    bank, last_sync, ef, server, prev_ids, ids, batches_q,
+                    kk, round_id, n_steps=q, sync_first=True)
+                row, prev = stat_row(bank, prev)
+                return (bank, last_sync, ef, server, ids, prev), row
+
+            mega_fn = make_multi_round(chunk_round, cohort_fn=cohort_fn)
+            if self.mesh is None:
+                mega = jax.jit(mega_fn, donate_argnums=(0,))
+            else:
+                rep = self._replicated()
+                carry_sh = (bank_sh, vec_sh, ef_sh, rep, rep, rep)
+                ids_sh = None if cohort_fn is not None else rep
+                mega = jax.jit(mega_fn,
+                               in_shardings=(carry_sh, ids_sh, rep, rep,
+                                             rep),
+                               out_shardings=(carry_sh, rep),
+                               donate_argnums=(0,))
+            mega_compiled = set()
+            # peeled single-round programs ((n_steps, sync_first) keys) also
+            # compile fresh the first time — e.g. the trailing partial round
+            # — and must stay out of the steady-state round log
+            seg_used = set()
+            n_rounds = len(lengths)
+            prev_ids_np = None
+            r = 0
+            while r < n_rounds:
+                n_steps = lengths[r]
+                L = min(R, full - r) if (r > 0 and n_steps == q) else 1
+                # host ALWAYS draws the ids — batch gather and unique-
+                # transmitter billing need them even when cohort_fn re-draws
+                # them in-scan (the draws match bit-for-bit:
+                # tests/test_property.py)
+                ids_np = [np.asarray(self._run_sampler.cohort(rr)).astype(
+                    np.int32) for rr in range(r, r + L)]
+                if L <= 1:
+                    ids = jnp.asarray(ids_np[0])
+                    sync_np = (prev_ids_np if prev_ids_np is not None
+                               else ids_np[0])
+                    with tele.span("batch_build"):
+                        batches_q = tree_stack(
+                            [self._cohort_batches(ids_np[0], t + j)
+                             for j in range(n_steps)])
+                    seg_fresh = (n_steps, r > 0) not in seg_used
+                    seg_used.add((n_steps, r > 0))
+                    r0 = time.time()
+                    with tele.span("round_program"):
+                        bank, last_sync, ef, server = segment(
+                            bank, last_sync, ef, server,
+                            jnp.asarray(sync_np), ids, batches_q, key,
+                            jnp.int32(r), n_steps=n_steps,
+                            sync_first=r > 0)
+                        jax.block_until_ready(bank)
+                    dt = time.time() - r0
+                    self._log_chunk(res, dt, 1, seg_fresh)
+                    row, prev_avg = row_fn(bank, prev_avg)
+                    t += n_steps
+                    samples += n_steps * (fed.neumann_k + 2)
+                    if r > 0:
+                        comms += 1
+                        tx = int(np.unique(sync_np).size)
+                        bytes_up += tx * msg_b
+                        bytes_down += (n if pcfg.sync_mode == "broadcast"
+                                       else tx) * down_b
+                    tele.round(r, step=t - 1, round_seconds=dt,
+                               samples=samples, comms=comms,
+                               bytes_up=bytes_up, bytes_down=bytes_down)
+                    emit_rows(row[None])
+                    if r % eval_rounds == 0 or r == n_rounds - 1:
+                        self._record(res, bank, t - 1, samples, comms,
+                                     bytes_up, bytes_down)
+                    prev_ids_np = ids_np[0]
+                    r += 1
+                    continue
+                with tele.span("batch_build"):
+                    batches_R = tree_stack(
+                        [tree_stack([self._cohort_batches(ids_np[j],
+                                                          t + j * q + jj)
+                                     for jj in range(q)])
+                         for j in range(L)])
+                ids_R = (None if cohort_fn is not None
+                         else jnp.asarray(np.stack(ids_np)))
+                fresh = L not in mega_compiled
+                mega_compiled.add(L)
+                r0 = time.time()
+                with tele.span("round_program"):
+                    carry = (bank, last_sync, ef, server,
+                             jnp.asarray(prev_ids_np), prev_avg)
+                    carry, rows = mega(carry, ids_R, batches_R, key,
+                                       jnp.int32(r))
+                    bank, last_sync, ef, server, _, prev_avg = carry
+                    jax.block_until_ready(bank)
+                dt = time.time() - r0
+                self._log_chunk(res, dt, L, fresh)
+                # round rr's opening sync bills round rr-1's cohort
+                sync_chain = [prev_ids_np] + ids_np[:-1]
+                for j in range(L):
+                    t += q
+                    samples += q * (fed.neumann_k + 2)
+                    comms += 1
+                    tx = int(np.unique(sync_chain[j]).size)
+                    bytes_up += tx * msg_b
+                    bytes_down += (n if pcfg.sync_mode == "broadcast"
+                                   else tx) * down_b
+                    tele.round(r + j, step=t - 1, round_seconds=dt / L,
+                               samples=samples, comms=comms,
+                               bytes_up=bytes_up, bytes_down=bytes_down)
+                emit_rows(rows)
+                if (any((r + j) % eval_rounds == 0 for j in range(L))
+                        or r + L == n_rounds):
+                    self._record(res, bank, t - 1, samples, comms,
+                                 bytes_up, bytes_down)
+                prev_ids_np = ids_np[-1]
+                r += L
+        else:
+            prev_ids = None
+            for r, n_steps in enumerate(lengths):
+                ids = jnp.asarray(self._run_sampler.cohort(r), jnp.int32)
+                # the sync opening round r aggregates (and bills) the
+                # PREVIOUS round's cohort — the clients whose updates are
+                # on the wire
+                sync_ids = prev_ids if prev_ids is not None else ids
+                with tele.span("batch_build"):
+                    batches_q = tree_stack([self._cohort_batches(ids, t + j)
+                                            for j in range(n_steps)])
+                r0 = time.time()
+                with tele.span("round_program"):
+                    bank, last_sync, ef, server = segment(
+                        bank, last_sync, ef, server, sync_ids, ids,
+                        batches_q, key, jnp.int32(r), n_steps=n_steps,
+                        sync_first=r > 0)
+                    jax.block_until_ready(bank)
+                dt = time.time() - r0
+                self._log_round(res, dt)
+                prev_ids = ids
+                t += n_steps
+                samples += n_steps * (fed.neumann_k + 2)
+                if r > 0:
+                    comms += 1
+                    # wire convention (docs/sharding.md): uplink bills
+                    # UNIQUE transmitters — a duplicate cohort id (trace
+                    # shortfall cycling) occupies two aggregation slots but
+                    # one client computed and shipped one message;
+                    # participants-mode downlink likewise reaches each
+                    # member once
+                    tx = int(np.unique(np.asarray(sync_ids)).size)
+                    bytes_up += tx * msg_b
+                    bytes_down += (n if pcfg.sync_mode == "broadcast"
+                                   else tx) * down_b
+                self._obs_round(acc, bank, r, dt, t - 1, samples, comms,
+                                bytes_up, bytes_down)
+                if r % eval_rounds == 0 or r == len(lengths) - 1:
+                    self._record(res, bank, t - 1, samples, comms, bytes_up,
+                                 bytes_down)
         res.seconds = time.time() - t0
         self._obs_end(acc)
         self.final_bank = bank        # benchmarks inspect per-device bytes
@@ -783,68 +1094,205 @@ class FedDriver:
         lengths = [q] * full + ([rem] if rem else [])
         eval_rounds = max(eval_every // q, 1)
         tele = self._tele()
-        statacc = self._obs_begin(state["bank"])
+        R = self.rounds_per_scan
+        statacc = self._obs_begin(state["bank"]) if R <= 1 else None
         res = RunResult(self.alg.name, [], [], [], [], [], 0.0)
-        t0 = time.time()
-        t = 0
-        for r, n_steps in enumerate(lengths):
-            ids = jnp.asarray(self._run_sampler.cohort(r), jnp.int32)
-            with tele.span("batch_build"):
-                batches_q = tree_stack([self._cohort_batches(ids, t + j)
-                                        for j in range(n_steps)])
-            r0 = time.time()
-            with tele.span("round_program"):
-                state, stats = segment(state, ids, batches_q, key,
-                                       jnp.int32(r))
-                # fence: the dispatch is async — round wall-clock must
-                # measure completion, not dispatch (pinned by
-                # tests/test_obs.py's forced-sleep lower bound)
-                jax.block_until_ready(state)
-            dt = time.time() - r0
-            self._log_round(res, dt)
-            stale = np.asarray(stats["staleness"])
-            acc = stale[stale >= 0]
-            if acc.size:
+
+        def note_round(r, stats_np, idx=None):
+            """Host-side bookkeeping for one async round's stats (idx picks
+            a row out of a chunk's stacked stats). Returns the round's
+            staleness-log row; the counter updates happen at the call site
+            so chunked and per-round paths share one implementation."""
+            pick = ((lambda v: v[idx]) if idx is not None else (lambda v: v))
+            stale = np.asarray(pick(stats_np["staleness"]))
+            acc_ = stale[stale >= 0]
+            if acc_.size:
                 self.staleness_hist = accum_staleness_hist(
-                    self.staleness_hist, acc)
+                    self.staleness_hist, acc_)
             if tier_of is not None:
                 accum_tier_hists(self.staleness_hist_by_tier, stale,
                                  tier_of, len(pcfg.tier_fracs))
             self.staleness_log.append({
                 "round": r,
-                "arrived": int(stats["arrived"]),
-                "accepted": int(stats["accepted"]),
-                "dropped": int(stats["dropped"]),
-                "dispatched": int(stats["dispatched"]),
-                "synced": int(stats["synced"]),
-                "mean_staleness": float(stats["mean_staleness"]),
-                "eta_scale": float(stats["eta_scale"]),
+                "arrived": int(pick(stats_np["arrived"])),
+                "accepted": int(pick(stats_np["accepted"])),
+                "dropped": int(pick(stats_np["dropped"])),
+                "dispatched": int(pick(stats_np["dispatched"])),
+                "synced": int(pick(stats_np["synced"])),
+                "mean_staleness": float(pick(stats_np["mean_staleness"])),
+                "eta_scale": float(pick(stats_np["eta_scale"])),
             })
-            comms += int(int(stats["accepted"]) > 0)
-            # uplink: every arrival shipped one codec message (dropped ones
-            # too — the gate rejects them AFTER transmission); downlink:
-            # the rows that received the new global model this round
-            bytes_up += int(stats["arrived"]) * msg_b
-            bytes_down += int(stats["synced"]) * down_b
-            t += n_steps
-            # only the dispatched fraction of the cohort computed this
-            # round (in-flight slots are masked out and discarded) — the
-            # paper's sample-complexity curves must not count them
-            samples += (n_steps * (fed.neumann_k + 2)
-                        * int(stats["dispatched"]) / c)
-            row = self.staleness_log[-1]
-            self._obs_round(statacc, state["bank"], r, dt, t - 1,
-                            int(round(samples)), comms, bytes_up, bytes_down,
-                            arrived=row["arrived"], accepted=row["accepted"],
-                            dropped=row["dropped"],
-                            dispatched=row["dispatched"],
-                            synced=row["synced"],
-                            mean_staleness=row["mean_staleness"],
-                            eta_scale=row["eta_scale"])
-            if r % eval_rounds == 0 or r == len(lengths) - 1:
-                self._record(res, state["bank"], t - 1,
-                             int(round(samples)), comms, bytes_up,
-                             bytes_down)
+            return self.staleness_log[-1]
+
+        t0 = time.time()
+        t = 0
+        if R > 1:
+            # mega-scan tier: the async round is uniform in round_id (round
+            # 0 is not special), so chunks start at round 0; only the
+            # trailing partial round peels off. Per-round stats come back
+            # stacked as scan outputs and the host drains them per chunk.
+            from repro.fed.population import make_multi_async_round
+            from repro.fed.sampling import in_scan_cohort_fn
+            from repro.obs.devstats import stat_row
+            emit_rows = self._mega_obs(tele)
+            row_fn = jax.jit(stat_row)
+            prev_avg = jax.jit(tree_mean_axis0)(state["bank"])
+            cohort_fn = in_scan_cohort_fn(self._run_sampler)
+
+            def chunk_round(carry, ids, batches_q, kk, round_id):
+                st, prev = carry
+                st, stats = round_fn(st, ids, batches_q, kk, round_id)
+                row, prev = stat_row(st["bank"], prev)
+                return (st, prev), (stats, row)
+
+            mega_fn = make_multi_async_round(chunk_round,
+                                             cohort_fn=cohort_fn)
+            if self.mesh is None:
+                mega = jax.jit(mega_fn, donate_argnums=(0,))
+            else:
+                ids_sh = None if cohort_fn is not None else rep
+                mega = jax.jit(mega_fn,
+                               in_shardings=((st_sh, rep), ids_sh, rep,
+                                             rep, rep),
+                               out_shardings=((st_sh, rep),
+                                              (stats_sh, rep)),
+                               donate_argnums=(0,))
+            mega_compiled = set()
+            # peeled single-round programs (keyed by batch-stack length) also
+            # compile fresh the first time — e.g. the trailing partial round
+            # — and must stay out of the steady-state round log
+            seg_used = set()
+            n_rounds = len(lengths)
+            r = 0
+            while r < n_rounds:
+                n_steps = lengths[r]
+                L = min(R, full - r) if n_steps == q else 1
+                ids_np = [np.asarray(self._run_sampler.cohort(rr)).astype(
+                    np.int32) for rr in range(r, r + L)]
+                if L <= 1:
+                    ids = jnp.asarray(ids_np[0])
+                    with tele.span("batch_build"):
+                        batches_q = tree_stack(
+                            [self._cohort_batches(ids_np[0], t + j)
+                             for j in range(n_steps)])
+                    seg_fresh = n_steps not in seg_used
+                    seg_used.add(n_steps)
+                    r0 = time.time()
+                    with tele.span("round_program"):
+                        state, stats = segment(state, ids, batches_q, key,
+                                               jnp.int32(r))
+                        jax.block_until_ready(state)
+                    dt = time.time() - r0
+                    self._log_chunk(res, dt, 1, seg_fresh)
+                    row_dev, prev_avg = row_fn(state["bank"], prev_avg)
+                    stats_np = {k2: np.asarray(v)
+                                for k2, v in stats.items()}
+                    row = note_round(r, stats_np)
+                    comms += int(row["accepted"] > 0)
+                    bytes_up += row["arrived"] * msg_b
+                    bytes_down += row["synced"] * down_b
+                    t += n_steps
+                    samples += (n_steps * (fed.neumann_k + 2)
+                                * row["dispatched"] / c)
+                    tele.round(r, step=t - 1, round_seconds=dt,
+                               samples=int(round(samples)), comms=comms,
+                               bytes_up=bytes_up, bytes_down=bytes_down,
+                               **{k2: row[k2] for k2 in
+                                  ("arrived", "accepted", "dropped",
+                                   "dispatched", "synced",
+                                   "mean_staleness", "eta_scale")})
+                    emit_rows(row_dev[None])
+                    if r % eval_rounds == 0 or r == n_rounds - 1:
+                        self._record(res, state["bank"], t - 1,
+                                     int(round(samples)), comms, bytes_up,
+                                     bytes_down)
+                    r += 1
+                    continue
+                with tele.span("batch_build"):
+                    batches_R = tree_stack(
+                        [tree_stack([self._cohort_batches(ids_np[j],
+                                                          t + j * q + jj)
+                                     for jj in range(q)])
+                         for j in range(L)])
+                ids_R = (None if cohort_fn is not None
+                         else jnp.asarray(np.stack(ids_np)))
+                fresh = L not in mega_compiled
+                mega_compiled.add(L)
+                r0 = time.time()
+                with tele.span("round_program"):
+                    (state, prev_avg), (stats_R, rows) = mega(
+                        (state, prev_avg), ids_R, batches_R, key,
+                        jnp.int32(r))
+                    jax.block_until_ready(state)
+                dt = time.time() - r0
+                self._log_chunk(res, dt, L, fresh)
+                stats_np = {k2: np.asarray(v) for k2, v in stats_R.items()}
+                for j in range(L):
+                    row = note_round(r + j, stats_np, idx=j)
+                    comms += int(row["accepted"] > 0)
+                    bytes_up += row["arrived"] * msg_b
+                    bytes_down += row["synced"] * down_b
+                    t += q
+                    samples += (q * (fed.neumann_k + 2)
+                                * row["dispatched"] / c)
+                    tele.round(r + j, step=t - 1, round_seconds=dt / L,
+                               samples=int(round(samples)), comms=comms,
+                               bytes_up=bytes_up, bytes_down=bytes_down,
+                               **{k2: row[k2] for k2 in
+                                  ("arrived", "accepted", "dropped",
+                                   "dispatched", "synced",
+                                   "mean_staleness", "eta_scale")})
+                emit_rows(rows)
+                if (any((r + j) % eval_rounds == 0 for j in range(L))
+                        or r + L == n_rounds):
+                    self._record(res, state["bank"], t - 1,
+                                 int(round(samples)), comms, bytes_up,
+                                 bytes_down)
+                r += L
+        else:
+            for r, n_steps in enumerate(lengths):
+                ids = jnp.asarray(self._run_sampler.cohort(r), jnp.int32)
+                with tele.span("batch_build"):
+                    batches_q = tree_stack([self._cohort_batches(ids, t + j)
+                                            for j in range(n_steps)])
+                r0 = time.time()
+                with tele.span("round_program"):
+                    state, stats = segment(state, ids, batches_q, key,
+                                           jnp.int32(r))
+                    # fence: the dispatch is async — round wall-clock must
+                    # measure completion, not dispatch (pinned by
+                    # tests/test_obs.py's forced-sleep lower bound)
+                    jax.block_until_ready(state)
+                dt = time.time() - r0
+                self._log_round(res, dt)
+                stats_np = {k2: np.asarray(v) for k2, v in stats.items()}
+                row = note_round(r, stats_np)
+                comms += int(row["accepted"] > 0)
+                # uplink: every arrival shipped one codec message (dropped
+                # ones too — the gate rejects them AFTER transmission);
+                # downlink: the rows that received the new global model
+                bytes_up += row["arrived"] * msg_b
+                bytes_down += row["synced"] * down_b
+                t += n_steps
+                # only the dispatched fraction of the cohort computed this
+                # round (in-flight slots are masked out and discarded) — the
+                # paper's sample-complexity curves must not count them
+                samples += (n_steps * (fed.neumann_k + 2)
+                            * row["dispatched"] / c)
+                self._obs_round(statacc, state["bank"], r, dt, t - 1,
+                                int(round(samples)), comms, bytes_up,
+                                bytes_down,
+                                arrived=row["arrived"],
+                                accepted=row["accepted"],
+                                dropped=row["dropped"],
+                                dispatched=row["dispatched"],
+                                synced=row["synced"],
+                                mean_staleness=row["mean_staleness"],
+                                eta_scale=row["eta_scale"])
+                if r % eval_rounds == 0 or r == len(lengths) - 1:
+                    self._record(res, state["bank"], t - 1,
+                                 int(round(samples)), comms, bytes_up,
+                                 bytes_down)
         res.seconds = time.time() - t0
         tele.note(staleness_hist=[int(k) for k in self.staleness_hist])
         self._obs_end(statacc)

@@ -1,0 +1,292 @@
+"""Mega-scan tier parity matrix (repro.fed.round.make_multi_round and the
+FedDriver ``rounds_per_scan`` chunking): compiling R whole rounds into ONE
+scanned donated-carry program must reproduce R sequential single-round
+programs BIT-identically — client states, server, EF bank, last_sync,
+staleness histogram, wire bytes and sample counts — across
+{scan, population, async} × {none, int8, topk+EF} × {uniform, tiers delay}
+× R ∈ {1, 3, 7} (11 rounds, so R=3 and R=7 both end on a trailing partial
+chunk). R=1 must reduce to today's per-round program."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import PopulationConfig
+from repro.core.baselines import make_algorithm
+from repro.fed.population import (init_async_state, make_async_round,
+                                  make_multi_async_round,
+                                  make_multi_population_round,
+                                  make_population_round)
+from repro.fed.round import make_multi_round
+from repro.fed.sampling import UniformSampler
+from tests.test_system import _quad_driver
+
+STEPS = 44          # 11 rounds of q=4: R=3 → 3+3+3+2 chunks, R=7 → 7+4
+R_GRID = (1, 3, 7)
+
+CODECS = {
+    "none": {},
+    "int8": dict(codec="int8", codec_bits=4),
+    "topk": dict(codec="topk", topk_frac=0.5, error_feedback=True),
+}
+
+
+def _driver(codec="none", engine="scan", rounds_per_scan=1, steps=STEPS,
+            pop=None):
+    d = _quad_driver("adafbio", m=8)
+    d.engine = engine
+    d.rounds_per_scan = rounds_per_scan
+    if CODECS[codec]:
+        d.fed = dataclasses.replace(d.alg.fed, **CODECS[codec])
+        d.alg = make_algorithm("adafbio", d.fed, d.problem)
+    if pop is not None:
+        d.population = PopulationConfig(n=8, cohort=4, **pop)
+    r = d.run(steps, key=jax.random.PRNGKey(0), eval_every=8)
+    return d, r
+
+
+def _assert_tree_equal(a, b, label):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb), label
+    for i, (x, y) in enumerate(zip(la, lb)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=f"{label}[leaf {i}]")
+
+
+def _assert_run_equal(ref, got, label, drivers=None):
+    """Bit-identity of everything the mega program carries: final states,
+    cumulative samples / comms / wire bytes, the recorded metric at the
+    final (shared) record, and — via drivers — the final bank and the
+    async staleness bookkeeping."""
+    _assert_tree_equal(ref.final_avg_state, got.final_avg_state,
+                       f"{label}: final_avg_state")
+    assert ref.samples[-1] == got.samples[-1], label
+    assert ref.comms[-1] == got.comms[-1], label
+    assert ref.bytes_up[-1] == got.bytes_up[-1], label
+    assert ref.bytes_down[-1] == got.bytes_down[-1], label
+    np.testing.assert_array_equal(ref.grad_norm[-1], got.grad_norm[-1],
+                                  err_msg=f"{label}: grad_norm")
+    if drivers is not None:
+        dref, dgot = drivers
+        if hasattr(dref, "final_bank"):
+            _assert_tree_equal(dref.final_bank, dgot.final_bank,
+                               f"{label}: final_bank")
+        if hasattr(dref, "staleness_hist"):
+            np.testing.assert_array_equal(dref.staleness_hist,
+                                          dgot.staleness_hist,
+                                          err_msg=f"{label}: hist")
+            assert dref.staleness_log == dgot.staleness_log, label
+        if hasattr(dref, "staleness_hist_by_tier"):
+            assert (dref.staleness_hist_by_tier.keys()
+                    == dgot.staleness_hist_by_tier.keys()), label
+            for k in dref.staleness_hist_by_tier:
+                np.testing.assert_array_equal(
+                    dref.staleness_hist_by_tier[k],
+                    dgot.staleness_hist_by_tier[k],
+                    err_msg=f"{label}: tier hist {k}")
+
+
+# ------------------------------------------------------- scan engine
+
+@pytest.mark.parametrize("codec", ["none", "int8", "topk"])
+def test_scan_engine_parity(codec):
+    """Plain scan engine (all M clients every round): mega-scan(R) ≡ R
+    sequential rounds for every codec, R=1 included."""
+    dref, ref = _driver(codec=codec)
+    for R in R_GRID:
+        dgot, got = _driver(codec=codec, rounds_per_scan=R)
+        _assert_run_equal(ref, got, f"scan/{codec}/R={R}")
+
+
+@pytest.mark.parametrize("R", [3, 7])
+def test_scan_engine_parity_trailing_partial_round(R):
+    """46 steps = 11 full rounds + a 2-step partial round: the partial
+    round peels out of the chunking and still matches bit-for-bit."""
+    _, ref = _driver(steps=46)
+    _, got = _driver(steps=46, rounds_per_scan=R)
+    _assert_run_equal(ref, got, f"scan/partial-round/R={R}")
+
+
+# ------------------------------------------------------- population engine
+
+@pytest.mark.parametrize("codec", ["none", "int8", "topk"])
+def test_population_engine_parity(codec):
+    """Cohort-sampled population rounds: the chunked program fuses cohort
+    draw + gather + round + EF scatter + sync and matches exactly —
+    including the unique-transmitter wire accounting."""
+    dref, ref = _driver(codec=codec, pop={})
+    for R in R_GRID:
+        dgot, got = _driver(codec=codec, rounds_per_scan=R, pop={})
+        _assert_run_equal(ref, got, f"population/{codec}/R={R}",
+                          drivers=(dref, dgot))
+
+
+@pytest.mark.parametrize("sampler", ["roundrobin", "trace"])
+def test_population_engine_parity_samplers(sampler):
+    """roundrobin re-draws inside the scan; the trace sampler keeps its
+    host-side draw and ships the chunk's cohorts as scan inputs."""
+    dref, ref = _driver(pop={"sampler": sampler})
+    dgot, got = _driver(rounds_per_scan=3, pop={"sampler": sampler})
+    _assert_run_equal(ref, got, f"population/{sampler}/R=3",
+                      drivers=(dref, dgot))
+
+
+# ------------------------------------------------------- async engine
+
+ASYNC = dict(max_staleness=3.0, max_delay=3)
+TIERS = dict(max_staleness=4.0, max_delay=4, delay_model="tiers",
+             delay_eta=0.5)
+
+
+@pytest.mark.parametrize("pop,codec", [
+    (ASYNC, "none"),
+    (TIERS, "none"),
+    (ASYNC, "topk"),
+    pytest.param(TIERS, "topk", marks=pytest.mark.slow),
+])
+def test_async_engine_parity(pop, codec):
+    """Async rounds (pending buffer, bounded-staleness gate, delay-adaptive
+    eta): per-round stats come back stacked per chunk and the host-side
+    staleness histogram / log rebuild identically."""
+    dref, ref = _driver(codec=codec, pop=dict(pop))
+    for R in R_GRID:
+        dgot, got = _driver(codec=codec, rounds_per_scan=R, pop=dict(pop))
+        _assert_run_equal(ref, got, f"async/{codec}/R={R}",
+                          drivers=(dref, dgot))
+
+
+# ------------------------------------------------------- 2-device mesh
+
+@pytest.fixture(scope="module")
+def two_devices():
+    if len(jax.devices()) < 2:
+        pytest.skip("needs the 2-way forced host platform (conftest.py)")
+    return jax.make_mesh((2, 1), ("data", "model"))
+
+
+def _mesh_driver(mesh, rounds_per_scan=1, pop=None, codec="none"):
+    d = _quad_driver("adafbio", m=8)
+    d.rounds_per_scan = rounds_per_scan
+    if CODECS[codec]:
+        d.fed = dataclasses.replace(d.alg.fed, **CODECS[codec])
+        d.alg = make_algorithm("adafbio", d.fed, d.problem)
+    d.population = PopulationConfig(n=8, cohort=4, **(pop or {}))
+    d.mesh = mesh
+    r = d.run(STEPS, key=jax.random.PRNGKey(0), eval_every=8)
+    return d, r
+
+
+@pytest.mark.parametrize("pop,codec", [
+    ({}, "none"),
+    (dict(max_staleness=3.0, max_delay=3), "none"),
+    pytest.param({}, "topk", marks=pytest.mark.slow),
+])
+def test_mesh_parity(two_devices, pop, codec):
+    """The sharded-bank mega programs (explicit in/out shardings over the
+    2-device client mesh) reproduce the mesh R=1 trajectory bit-for-bit —
+    population and async engines, trailing partial chunks included."""
+    dref, ref = _mesh_driver(two_devices, pop=dict(pop), codec=codec)
+    for R in (3, 7):
+        dgot, got = _mesh_driver(two_devices, rounds_per_scan=R,
+                                 pop=dict(pop), codec=codec)
+        _assert_run_equal(ref, got, f"mesh/{codec}/R={R}",
+                          drivers=(dref, dgot))
+
+
+# ------------------------------------------------------- engine-level carry
+
+def _toy_population(q=2):
+    def local(states, server, batch, key, ids):
+        bump = batch.mean() + 0.01 * ids.sum().astype(jnp.float32)
+        return jax.tree.map(lambda a: a + bump, states), server
+
+    def sync(server, avg):
+        return avg, server
+    return make_population_round(local, sync, q=q)
+
+
+def test_multi_population_round_matches_sequential_carry():
+    """Direct engine check of EVERY carry component: bank, last_sync and
+    server out of make_multi_population_round equal R sequential
+    make_population_round calls bit-for-bit."""
+    q, n, c, R = 2, 6, 2, 4
+    round_fn = _toy_population(q)
+    mega = jax.jit(make_multi_population_round(round_fn, lossy=False))
+    key = jax.random.PRNGKey(3)
+    sampler = UniformSampler(n, c, jax.random.fold_in(key, 23))
+    ids_R = jnp.stack([sampler.cohort(r) for r in range(R)])
+    batches_R = jax.random.normal(key, (R, q, c))
+
+    bank = {"x": jnp.zeros((n, 3))}
+    ls = jnp.zeros((n,), jnp.int32)
+    server = {"s": jnp.zeros(())}
+    seq = (bank, ls, server)
+    one = jax.jit(round_fn)
+    for r in range(R):
+        seq = one(*seq, ids_R[r], batches_R[r], key, jnp.int32(r))
+    fused = mega(bank, ls, server, ids_R, batches_R, key, jnp.int32(0))
+    for part, a, b in zip(("bank", "last_sync", "server"), seq, fused):
+        _assert_tree_equal(a, b, f"carry {part}")
+
+    # in-scan cohort re-draw: ids ride as None and the draw happens inside
+    mega_cf = jax.jit(make_multi_population_round(
+        round_fn, lossy=False, cohort_fn=sampler.cohort))
+    fused2 = mega_cf(bank, ls, server, None, batches_R, key, jnp.int32(0))
+    for part, a, b in zip(("bank", "last_sync", "server"), seq, fused2):
+        _assert_tree_equal(a, b, f"in-scan carry {part}")
+
+
+def test_multi_async_round_matches_sequential_carry():
+    """Async engine-level check: the full async state dict (bank, pending,
+    in_flight, return_round, anchor, last_sync) and the stacked per-round
+    stats equal the sequential trajectory."""
+    q, n, c, R = 2, 5, 2, 3
+    def local(states, server, batch, key, ids):
+        return jax.tree.map(lambda a: a + 1.0 + batch.mean(), states), server
+
+    def sync(server, avg):
+        return avg, server
+    round_fn = make_async_round(local, sync, q=q, max_staleness=float("inf"),
+                                max_delay=2)
+    key = jax.random.PRNGKey(5)
+    sampler = UniformSampler(n, c, jax.random.fold_in(key, 23))
+    ids_R = jnp.stack([sampler.cohort(r) for r in range(R)])
+    batches_R = jax.random.normal(key, (R, q, c))
+
+    state = init_async_state({"x": jnp.zeros((n,))}, {}, n)
+    one = jax.jit(round_fn)
+    seq_stats = []
+    for r in range(R):
+        state, st = one(state, ids_R[r], batches_R[r], key, jnp.int32(r))
+        seq_stats.append(st)
+    mega = jax.jit(make_multi_async_round(round_fn))
+    state2, stats_R = mega(init_async_state({"x": jnp.zeros((n,))}, {}, n),
+                           ids_R, batches_R, key, jnp.int32(0))
+    _assert_tree_equal(state, state2, "async state")
+    for k in seq_stats[0]:
+        np.testing.assert_array_equal(
+            np.stack([np.asarray(s[k]) for s in seq_stats]),
+            np.asarray(stats_R[k]), err_msg=f"stats {k}")
+
+
+def test_multi_round_length_one_reduces_to_single_call():
+    """R=1 is exactly today's program: one scanned iteration returns the
+    same carry as calling the round function directly."""
+    def round_fn(carry, ids, batch_q, key, rid):
+        return carry + batch_q.sum() + rid.astype(jnp.float32), None
+
+    multi = make_multi_round(round_fn)
+    batches = jnp.ones((1, 2, 3))
+    out, _ = jax.jit(multi)(jnp.float32(0.5), None, batches,
+                            jax.random.PRNGKey(0), jnp.int32(4))
+    ref, _ = round_fn(jnp.float32(0.5), None, batches[0],
+                      jax.random.PRNGKey(0), jnp.int32(4))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_driver_rejects_bad_rounds_per_scan():
+    d = _quad_driver("adafbio", m=4)
+    with pytest.raises(ValueError, match="rounds_per_scan"):
+        dataclasses.replace(d, rounds_per_scan=0)

@@ -211,6 +211,60 @@ def test_telemetry_parity_bit_identical(name, cfg):
     assert sum(len(s["update_norm"]) for s in stats) == 3
 
 
+@pytest.mark.parametrize("name,cfg",
+                         [(n, c) for n, c in _engines() if n != "eager"])
+def test_megascan_telemetry_parity_bit_identical(name, cfg):
+    """rounds_per_scan > 1 folds the stat rows INTO the mega program as
+    unconditional scan outputs — telemetry on and off run the SAME
+    compiled bytes. The trajectory and every counter stay bit-identical,
+    and the bus still sees one round record per round and one stats row
+    per round, drained once per chunk."""
+    def run(with_tele):
+        d = _quad_driver("adafbio", m=8)
+        d.rounds_per_scan = 3
+        if "population" in cfg:
+            d.population = cfg["population"]
+        else:
+            d.engine = "scan"
+        tele = None
+        if with_tele:
+            tele = Telemetry([MemorySink()], metrics_every=2)
+            d.telemetry = tele
+        r = d.run(12, key=jax.random.PRNGKey(0), eval_every=4)
+        if tele is not None:
+            tele.close()
+        return r, tele
+
+    r_off, _ = run(False)
+    r_on, tele = run(True)
+    assert _result_tuple(r_on) == _result_tuple(r_off)
+    assert np.array_equal(np.asarray(r_on.grad_norm),
+                          np.asarray(r_off.grad_norm))
+    for a, b in zip(jax.tree.leaves(r_on.final_avg_state),
+                    jax.tree.leaves(r_off.final_avg_state)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    sink = tele.sinks[0]
+    rounds = sink.of_kind("round")
+    assert [rec["round"] for rec in rounds] == [0, 1, 2]
+    stats = sink.of_kind("stats")
+    assert stats and sum(len(s["update_norm"]) for s in stats) == 3
+    starts = [s["round_start"] for s in stats]
+    assert starts == sorted(starts)
+
+
+def test_megascan_rejects_consensus_stat():
+    """The O(N) consensus stat reads pre-sync states mid-round and cannot
+    fold into the chunked program — asking for both is a loud error, not a
+    silent drop."""
+    d = _quad_driver("adafbio", m=8)
+    d.engine = "scan"
+    d.rounds_per_scan = 2
+    d.telemetry = Telemetry([MemorySink()], metrics_every=2,
+                            consensus=True)
+    with pytest.raises(ValueError, match="consensus"):
+        d.run(12, key=jax.random.PRNGKey(0), eval_every=4)
+
+
 # ------------------------------------------------------------------ stream
 
 def test_jsonl_roundtrip_and_report_check(tmp_path):
@@ -245,6 +299,38 @@ def test_jsonl_roundtrip_and_report_check(tmp_path):
     assert ren.returncode == 0, ren.stderr
     assert "rounds: 3" in ren.stdout
     assert "phase breakdown" in ren.stdout
+
+
+def test_jsonl_chunked_drain_report_check(tmp_path):
+    """A mega-scan run's stream — round records emitted per round but
+    drained once per chunk, stats rows stacked per chunk — still satisfies
+    every scripts/report.py --check invariant (ordered rounds, equal-length
+    stat columns, summary.rounds == #round records)."""
+    out = tmp_path / "mega.jsonl"
+    d = _quad_driver("adafbio", m=8)
+    d.rounds_per_scan = 3
+    d.population = PopulationConfig(n=8, cohort=2)
+    tele = Telemetry([JsonlSink(str(out))], metrics_every=2)
+    d.telemetry = tele
+    tele.manifest(config={"task": "quad", "rounds_per_scan": 3}, seed=0)
+    d.run(20, key=jax.random.PRNGKey(0), eval_every=4)  # 5 rounds: 1+3+1
+    tele.close()
+
+    records = [json.loads(line) for line in out.read_text().splitlines()]
+    kinds = [r["kind"] for r in records]
+    assert kinds[0] == "manifest"
+    assert kinds.count("round") == 5
+    assert [r["round"] for r in records if r["kind"] == "round"] == list(
+        range(5))
+    assert records[-1]["rounds"] == 5
+    stats = [r for r in records if r["kind"] == "stats"]
+    assert sum(len(s["update_norm"]) for s in stats) == 5
+
+    chk = subprocess.run([sys.executable, "scripts/report.py", str(out),
+                          "--check"], cwd=ROOT, capture_output=True,
+                         text=True)
+    assert chk.returncode == 0, chk.stderr
+    assert "report: OK" in chk.stdout
 
 
 def test_report_check_rejects_malformed_stream(tmp_path):

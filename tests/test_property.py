@@ -160,6 +160,40 @@ def test_async_round_bitwise_stable_across_jit_retracing(seed, n, rounds):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+@given(st.integers(2, 24), st.integers(1, 12), st.integers(1, 7),
+       st.integers(0, 2 ** 30), st.sampled_from(["uniform", "roundrobin"]))
+def test_in_scan_cohort_draw_matches_host_sampler(n, c_raw, R, seed, name):
+    """Mega-scan cohort duality: the jit-traceable in-scan draw
+    (``in_scan_cohort_fn``) run inside a scanned program reproduces the
+    host-side sampler sequence EXACTLY for random (N, C, R, key) — and
+    stays bitwise stable across a full jit re-trace. The chunked driver
+    relies on this: the host draws the cohorts for batch building and wire
+    accounting while the compiled program re-draws them on device."""
+    from repro.fed.sampling import in_scan_cohort_fn, make_sampler
+    c = min(c_raw, n)
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), 23)
+    sampler = make_sampler(name, n, c, key)
+    cohort_fn = in_scan_cohort_fn(sampler)
+    assert cohort_fn is not None
+    host = np.stack([np.asarray(sampler.cohort(r)) for r in range(R)])
+
+    def scanned(round0):
+        def body(carry, i):
+            return carry, cohort_fn(round0 + i)
+        return jax.lax.scan(body, jnp.int32(0),
+                            jnp.arange(R, dtype=jnp.int32))[1]
+
+    for attempt in range(2):
+        jax.clear_caches()
+        got = np.asarray(jax.jit(scanned)(jnp.int32(0)))
+        np.testing.assert_array_equal(got, host,
+                                      err_msg=f"{name} attempt {attempt}")
+    # chunk offsets re-anchor on the absolute round id, not the scan index
+    off = np.asarray(jax.jit(scanned)(jnp.int32(3)))
+    want = np.stack([np.asarray(sampler.cohort(3 + r)) for r in range(R)])
+    np.testing.assert_array_equal(off, want, err_msg=f"{name} offset")
+
+
 @given(st.integers(2, 24), st.integers(2, 10), st.floats(0.1, 1.0),
        st.integers(0, 2 ** 30))
 def test_trace_file_replay_matches_in_memory_trace_sampler(n, period, duty,

@@ -1,0 +1,65 @@
+"""benchmarks/roofline.py smoke: the analytic roofline must work straight
+off the real ``repro.configs`` surface (no dry-run artifacts), keep the
+row schema ``benchmarks/run.py``'s roofline_summary consumes, and the
+fused-round term must amortize the dispatch latency over q*R steps."""
+import math
+import sys
+
+import pytest
+
+sys.path.insert(0, ".")
+
+from benchmarks.roofline import (load_rows, roofline_row,  # noqa: E402
+                                 synth_records)
+from repro.configs import INPUT_SHAPES, list_arch_ids  # noqa: E402
+
+ROW_KEYS = ("arch", "shape", "dominant", "t_compute_s", "t_memory_s",
+            "t_collective_s", "fits_16g")
+
+
+def test_load_rows_covers_configs_matrix_without_artifacts(tmp_path):
+    """Pointing at an empty artifact dir (the repaired dormant path) yields
+    one finite analytic row per (arch x shape) with the consumed schema."""
+    rows = load_rows(dryrun_dir=str(tmp_path))
+    assert len(rows) == len(list_arch_ids()) * len(INPUT_SHAPES)
+    seen = {(r["arch"], r["shape"]) for r in rows}
+    assert len(seen) == len(rows)
+    for r in rows:
+        for k in ROW_KEYS:
+            assert k in r, k
+        assert r["dominant"] in ("compute", "memory", "collective")
+        for k in ("t_compute_s", "t_memory_s", "t_collective_s"):
+            assert math.isfinite(r[k]) and r[k] >= 0.0, (r["arch"], k)
+        assert (r["t_compute_s"] + r["t_memory_s"]) > 0.0
+        assert isinstance(r["fits_16g"], bool)
+
+
+def test_synth_records_step_structure():
+    """Train shapes carry the local+sync pair (so the q / q*R amortization
+    applies); prefill/decode carry exactly their own step."""
+    recs = synth_records()
+    by = {(r["arch"], r["shape"]): r for r in recs}
+    assert set(by[("qwen1.5-4b", "train_4k")]["steps"]) == {"local", "sync"}
+    assert set(by[("qwen1.5-4b", "prefill_32k")]["steps"]) == {"prefill"}
+    assert set(by[("qwen1.5-4b", "decode_32k")]["steps"]) == {"decode"}
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-4b", "zamba2-1.2b"])
+def test_fused_round_term_amortizes_with_rounds_per_scan(arch):
+    """The per-program dispatch latency term shrinks strictly and
+    monotonically with R on train shapes, and R=1 reduces to the plain
+    scan-engine row; non-train shapes have no sync step and are
+    unaffected."""
+    rec = next(r for r in synth_records()
+               if r["arch"] == arch and r["shape"] == "train_4k")
+    t1 = roofline_row(rec)["t_collective_s"]
+    assert t1 == roofline_row(rec, rounds_per_scan=1)["t_collective_s"]
+    prev = t1
+    for R in (2, 4, 16):
+        cur = roofline_row(rec, rounds_per_scan=R)["t_collective_s"]
+        assert cur < prev, (R, cur, prev)
+        prev = cur
+    dec = next(r for r in synth_records()
+               if r["arch"] == arch and r["shape"] == "decode_32k")
+    assert (roofline_row(dec)["t_collective_s"]
+            == roofline_row(dec, rounds_per_scan=16)["t_collective_s"])

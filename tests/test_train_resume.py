@@ -17,23 +17,25 @@ from repro.fed.runtime import FederatedTrainer
 from repro.launch.train import run_population
 
 
-def _args(ckpt, steps, resume=False, spill="none"):
+def _args(ckpt, steps, resume=False, spill="none", rounds_per_scan=1):
     return argparse.Namespace(
         population=4, cohort=2, sampler="uniform", trace_file=None,
         max_staleness=0.0, max_delay=1, delay_eta=0.0,
         delay_model="uniform", tiers=None, delay_mu=0.0, delay_sigma=0.5,
-        spill=spill, resume=resume, ckpt=ckpt, steps=steps, eval_every=100)
+        spill=spill, resume=resume, ckpt=ckpt, steps=steps, eval_every=100,
+        rounds_per_scan=rounds_per_scan)
 
 
 def _run(tmp_path, name, codec="none", steps=8, resume=False,
-         spill="none"):
+         spill="none", rounds_per_scan=1):
     cfg = reduced(get_arch("qwen1.5-4b"), dtype="float32")
     fed = FedConfig(q=2, neumann_k=2, lr_x=1e-2, lr_y=1e-1, codec=codec,
                     topk_frac=0.5)
     shape = ShapeConfig("t", 16, 2, "train")
     tr = FederatedTrainer(cfg, fed, shape, mesh=None)
     path = str(tmp_path / name)
-    args = _args(path, steps, resume=resume, spill=spill)
+    args = _args(path, steps, resume=resume, spill=spill,
+                 rounds_per_scan=rounds_per_scan)
     run_population(args, cfg, fed, shape, tr, jax.random.PRNGKey(7))
     with open(path + ".json") as f:
         step = json.load(f)["step"]
@@ -67,6 +69,44 @@ def test_population_resume_lossy_ef_template(tmp_path):
                          resume=True)
     assert step == 8
     _assert_same(full, resumed)
+
+
+def test_megascan_resume_mid_chunk_matches_uninterrupted(tmp_path):
+    """Mega-scan chunk-offset bookkeeping: checkpoint at round 2 (step 4)
+    with q=2 — a round NOT divisible by R=3 — then resume with R=3. The
+    resumed run's first chunk is the short 2..2 remainder of nothing in
+    particular: chunks re-anchor at start_round, and the final checkpoint
+    must still equal BOTH the uninterrupted R=3 run and the R=1 run
+    bit-for-bit."""
+    full_r1, _ = _run(tmp_path, "full_r1", steps=12)
+    full_r3, step_full = _run(tmp_path, "full_r3", steps=12,
+                              rounds_per_scan=3)
+    assert step_full == 12
+    _assert_same(full_r1, full_r3)
+    # 6 rounds total; stop after round 1 (steps=4 → 2 rounds), resume at
+    # round 2 with R=3 → chunks [2,3,4] and [5] (trailing partial chunk)
+    _run(tmp_path, "part_r3", steps=4, rounds_per_scan=3)
+    resumed, step_res = _run(tmp_path, "part_r3", steps=12, resume=True,
+                             rounds_per_scan=3)
+    assert step_res == 12
+    _assert_same(full_r1, resumed)
+
+
+@pytest.mark.slow
+def test_megascan_resume_lossy_ef_template(tmp_path):
+    """Same mid-chunk round-trip through the lossy template: the EF
+    residual bank restores exactly and the chunked codec RNG (folded on
+    the absolute round id, not the chunk offset) keeps the trajectory."""
+    full, _ = _run(tmp_path, "full_topk_r3", codec="topk", steps=12,
+                   rounds_per_scan=3)
+    _run(tmp_path, "part_topk_r3", codec="topk", steps=4,
+         rounds_per_scan=3)
+    resumed, step = _run(tmp_path, "part_topk_r3", codec="topk", steps=12,
+                         resume=True, rounds_per_scan=3)
+    assert step == 12
+    _assert_same(full, resumed)
+    ref, _ = _run(tmp_path, "full_topk_r1", codec="topk", steps=12)
+    _assert_same(full, ref)
 
 
 def test_spill_checkpoint_matches_dense(tmp_path):
