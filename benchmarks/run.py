@@ -10,6 +10,9 @@
                         loss per algorithm (paper Section 6.2).
   ablation_adaptive   — AdaFBiO vs non-adaptive (Theorem 2) vs AdaBelief
                         matrices (Eq. 8-9): adaptive-matrix choice matters.
+  topology_wallclock  — star vs gossip sync layers: steady per-round
+                        wall-clock, spectral gap, and per-edge wire bytes
+                        per mixing topology (docs/topology.md).
   kernel_micro        — wall-time of the jnp reference ops on this CPU
                         (Pallas kernels are TPU-target; us_per_call here is
                         the oracle path).
@@ -162,6 +165,43 @@ def engine_wallclock(rounds=12):
     if stats.get("scan") and stats.get("eager"):
         _row("engine/speedup_eager_over_scan", 0.0,
              f"x{stats['eager'] / max(stats['scan'], 1e-12):.2f}")
+
+
+def topology_wallclock(n=8, rounds=12):
+    """Star vs gossip sync layers (repro.fed.topology) on the analytic
+    quadratic: full-participation rounds, same per-node math — what varies
+    is ONE aggregator step per round (exact average vs a Metropolis mixing
+    step over the graph). Rows report the steady per-round wall-clock plus
+    each topology's spectral gap, directed edge count, and per-edge wire
+    bytes; the complete graph's row is the parity anchor (uniform mixing
+    ≡ star averaging, tests/test_topology.py)."""
+    from repro.configs.base import PopulationConfig
+    from tests.test_system import _quad_driver
+
+    def steady(d):
+        timed = d.round_seconds[1:] or d.round_seconds
+        return sum(timed) / max(len(timed), 1)
+
+    for topo in ("star", "ring", "torus2d", "complete"):
+        d = _quad_driver("adafbio", m=n)
+        if topo == "star":
+            d.population = PopulationConfig(n=n, cohort=n)
+        else:
+            d.population = PopulationConfig(n=n, cohort=n, topology=topo)
+            d.engine = "gossip"
+        q = d.fed.q
+        steps = rounds * q
+        r = d.run(steps, key=_key(), eval_every=steps - 1)
+        extra = ""
+        if topo != "star":
+            agg = d.gossip_agg
+            syncs = max(rounds - 1, 1)   # the mix opening round r closes
+            extra = (f";gap={agg.gap:.4f};edges={int(agg.edges(0))}"
+                     f";bytes_per_edge="
+                     f"{int(r.bytes_up[-1] // (syncs * agg.edges(0)))}")
+        _row(f"topology/{topo}", steady(d) * 1e6,
+             f"q={q};rounds={rounds};gnormT={r.grad_norm[-1]:.3f}"
+             f";bytes_up={int(r.bytes_up[-1])}{extra}")
 
 
 # ---------------------------------------------------------------- population
@@ -396,6 +436,7 @@ def main() -> None:
         "fig_hyperclean": fig2_hyperclean,
         "ablation_adaptive": ablation_adaptive,
         "engine": engine_wallclock,
+        "topology": topology_wallclock,
         "population": None,     # bound to CLI args below
         "kernel": kernel_micro,
         "roofline": roofline_summary,

@@ -21,6 +21,13 @@ artifacts share a ``schema`` version field.
                  = stochastic uniform quantization; ``topk:<frac>`` =
                  magnitude sparsification), error feedback per ``--ef``.
                  See docs/compression.md.
+  topology     — sync-layer grid (``--bench topology`` →
+                 ``BENCH_topology.json``): the star baseline plus every
+                 ``--topology-grid`` gossip topology, crossed with
+                 ``--codec-grid``, over full-participation synchronous
+                 rounds on hyper-representation. Cells add the mixing
+                 matrix's spectral gap, the directed edge count, and the
+                 exact per-edge wire bytes. See docs/topology.md.
 
     PYTHONPATH=src:. python benchmarks/sweep.py --task hyperclean \
         --steps 64 --population 8 --cohort 2 --staleness-grid 2,4,inf \
@@ -45,7 +52,7 @@ import jax
 
 TASKS = ("hyperclean", "hyperrep")
 BENCHES = ("async", "compression", "bank_scale", "obs_overhead",
-           "megascan")
+           "megascan", "topology")
 # bumped whenever a cell/meta field changes shape; shared by ALL artifacts
 # so downstream consumers can gate on one number
 # 3: every artifact gains a top-level "manifest" header (repro.obs)
@@ -54,7 +61,8 @@ DEFAULT_OUT = {"async": "BENCH_async_sweep.json",
                "compression": "BENCH_compression.json",
                "bank_scale": "BENCH_bank_scale.json",
                "obs_overhead": "BENCH_obs_overhead.json",
-               "megascan": "BENCH_megascan.json"}
+               "megascan": "BENCH_megascan.json",
+               "topology": "BENCH_topology.json"}
 MEGASCAN_ENGINES = ("scan", "population", "async")
 
 
@@ -94,12 +102,14 @@ def json_safe(x):
 
 
 def run_cell(task: str, pcfg, steps: int, seed: int,
-             fed_overrides: dict = None) -> tuple:
-    """One sweep cell — the run/record core shared by BOTH benches: build
-    the task, apply any FedConfig overrides (the compression bench's codec
-    fields), run the FedDriver, and return ``(cell, driver)`` where
-    ``cell`` carries the schema fields every bench records (task, metrics,
-    the paper's cost counters, exact wire bytes, wall-clock)."""
+             fed_overrides: dict = None, engine: str = None) -> tuple:
+    """One sweep cell — the run/record core shared by the grid benches:
+    build the task, apply any FedConfig overrides (the compression bench's
+    codec fields), run the FedDriver (``engine`` overrides the driver's
+    default — the topology bench's gossip cells), and return ``(cell,
+    driver)`` where ``cell`` carries the schema fields every bench records
+    (task, metrics, the paper's cost counters, exact wire bytes,
+    wall-clock)."""
     from repro.tasks.driver import FedDriver
     fed, kw = build_task(task, pcfg.n)
     if fed_overrides:
@@ -107,6 +117,8 @@ def run_cell(task: str, pcfg, steps: int, seed: int,
     d = FedDriver(kw.pop("problem"), fed, pcfg.n, kw.pop("batch_fn"),
                   kw.pop("init_xy"), algorithm="adafbio", **kw)
     d.population = pcfg
+    if engine is not None:
+        d.engine = engine
     t0 = time.time()
     r = d.run(steps, key=jax.random.PRNGKey(seed),
               eval_every=max(steps - 1, 1))
@@ -230,6 +242,103 @@ def run_compression_sweep(args) -> dict:
             "sampler": args.sampler,
             "codec_grid": args.codec_grid,
             "ef": ef,
+            "seed": args.seed,
+        },
+        "cells": cells,
+    }
+
+
+def _per_edge(total_bytes: int, crossings: int):
+    """Exact bytes one directed edge carries per sync (None when nothing
+    was billed — a 0-sync run)."""
+    return int(round(total_bytes / crossings)) if crossings else None
+
+
+def run_topology(args) -> dict:
+    """The sync-layer grid (``--bench topology`` → ``BENCH_topology.json``):
+    the star baseline plus every ``--topology-grid`` gossip topology, each
+    crossed with ``--codec-grid``, over full-participation synchronous
+    rounds. Cells record the shared convergence/cost fields plus the
+    aggregator's mixing-matrix spectral gap, the directed edge count, and
+    the exact per-edge message bytes (``GossipAggregator.wire_round``
+    prices per directed edge; the star rows price per uplink message and
+    per broadcast-downlink receiver). Expectation (docs/topology.md):
+    convergence orders with the spectral gap — complete ≈ star, then
+    torus2d, then ring — and int8 cells ship ~4x fewer bytes per edge at
+    a small metric cost."""
+    from repro.configs.base import TOPOLOGIES, PopulationConfig
+    tasks = parse_grid(args.task, str)
+    for task in tasks:
+        if task not in TASKS:
+            raise SystemExit(f"unknown task {task!r}; known: {TASKS}")
+    topos = parse_grid(args.topology_grid, str)
+    for t in topos:
+        if t not in TOPOLOGIES:
+            raise SystemExit(f"unknown topology {t!r} in --topology-grid; "
+                             f"known: {TOPOLOGIES}")
+    grid = parse_codec_grid(args.codec_grid)
+    ef = args.ef == "on"
+    n = args.population
+    cells = []
+    total = len(tasks) * (1 + len(topos)) * len(grid)
+    for task in tasks:
+        for topo in ("star",) + tuple(topos):
+            for ov in grid:
+                level = ov.get("codec_bits", ov.get("topk_frac"))
+                print(f"[{len(cells) + 1}/{total}] {task} topology={topo} "
+                      f"codec={ov['codec']}"
+                      f"{'' if level is None else f' level={level}'}",
+                      flush=True)
+                pcfg = PopulationConfig(
+                    n=n, cohort=n, sampler=args.sampler,
+                    **({} if topo == "star"
+                       else {"topology": topo, "er_p": args.er_p,
+                             "topology_seed": args.seed}))
+                cell, d = run_cell(task, pcfg, args.steps, args.seed,
+                                   fed_overrides={**ov,
+                                                  "error_feedback": ef},
+                                   engine=None if topo == "star"
+                                   else "gossip")
+                cell.update({"topology": topo, "codec": ov["codec"],
+                             "level": level,
+                             "ef": ef if ov["codec"] != "none" else None})
+                syncs = cell["comms"]
+                if topo == "star":
+                    # exact averaging — no mixing matrix; the downlink is
+                    # one broadcast priced per receiving node
+                    cell.update({
+                        "spectral_gap": None,
+                        "edges_per_sync": n,
+                        "bytes_per_edge_up":
+                            _per_edge(cell["bytes_up"], syncs * n),
+                        "bytes_per_edge_down":
+                            _per_edge(cell["bytes_down"], syncs * n),
+                    })
+                else:
+                    agg = d.gossip_agg
+                    crossings = sum(int(agg.edges(rid))
+                                    for rid in range(syncs))
+                    cell.update({
+                        "spectral_gap": round(float(agg.gap), 6),
+                        "edges_per_sync": int(agg.edges(0)),
+                        "bytes_per_edge_up":
+                            _per_edge(cell["bytes_up"], crossings),
+                        "bytes_per_edge_down":
+                            _per_edge(cell["bytes_down"], crossings),
+                    })
+                cells.append(cell)
+    return {
+        "bench": "topology",
+        "schema": SCHEMA,
+        "meta": {
+            "tasks": list(tasks),
+            "steps": args.steps,
+            "population": n,
+            "topology_grid": list(topos),
+            "codec_grid": args.codec_grid,
+            "ef": ef,
+            "er_p": args.er_p,
+            "sampler": args.sampler,
             "seed": args.seed,
         },
         "cells": cells,
@@ -595,9 +704,12 @@ def main(argv=None) -> None:
                          "obs_overhead: telemetry-on vs -off steady "
                          "round time (budget: <= 5%%); "
                          "megascan: steady rounds/sec vs rounds_per_scan "
-                         "R per engine (target: >= 3x on population)")
-    ap.add_argument("--task", default="hyperclean,hyperrep",
-                    help="comma list of tasks: hyperclean, hyperrep")
+                         "R per engine (target: >= 3x on population); "
+                         "topology: star vs gossip sync layers x codec "
+                         "(spectral gap, per-edge bytes)")
+    ap.add_argument("--task", default=None,
+                    help="comma list of tasks: hyperclean, hyperrep "
+                         "(default: both; topology bench: hyperrep)")
     ap.add_argument("--steps", type=int, default=64,
                     help="local steps per cell (q=8 per task config)")
     ap.add_argument("--population", type=int, default=8,
@@ -625,10 +737,18 @@ def main(argv=None) -> None:
                     help="lognormal delay model log-latency scale")
     ap.add_argument("--trace-file", default=None,
                     help="JSONL trace for the trace delay model / sampler")
-    ap.add_argument("--codec-grid", default="none,int8:8,int8:4,"
-                                            "topk:0.25,topk:0.05",
-                    help="compression bench: comma list of none / "
-                         "int8:<bits> / topk:<frac> cells")
+    ap.add_argument("--codec-grid", default=None,
+                    help="compression/topology bench: comma list of none / "
+                         "int8:<bits> / topk:<frac> cells (default: "
+                         "none,int8:8,int8:4,topk:0.25,topk:0.05; topology "
+                         "bench: none,int8:8)")
+    ap.add_argument("--topology-grid", default="ring,torus2d,complete",
+                    help="topology bench: comma list of gossip topologies "
+                         "to grid against the star baseline "
+                         "(repro.configs.base.TOPOLOGIES)")
+    ap.add_argument("--er-p", type=float, default=0.4,
+                    help="topology bench: Erdős–Rényi edge probability for "
+                         "'erdos' grid entries")
     ap.add_argument("--ef", default="on", choices=["on", "off"],
                     help="compression bench: error feedback for the lossy "
                          "cells")
@@ -667,6 +787,12 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
     if args.out is None:
         args.out = DEFAULT_OUT[args.bench]
+    if args.task is None:
+        args.task = ("hyperrep" if args.bench == "topology"
+                     else "hyperclean,hyperrep")
+    if args.codec_grid is None:
+        args.codec_grid = ("none,int8:8" if args.bench == "topology"
+                           else "none,int8:8,int8:4,topk:0.25,topk:0.05")
     if args.bench == "bank_scale":
         # must land before the first jax backend touch: a CPU host splits
         # into N devices only via this env flag at initialization
@@ -681,6 +807,8 @@ def main(argv=None) -> None:
         out = run_obs_overhead(args)
     elif args.bench == "megascan":
         out = run_megascan(args)
+    elif args.bench == "topology":
+        out = run_topology(args)
     else:
         out = (run_compression_sweep(args) if args.bench == "compression"
                else run_sweep(args))

@@ -54,7 +54,8 @@ def readme_sections(readme: pathlib.Path) -> dict:
 
 
 DOCS = ("docs/ARCHITECTURE.md", "docs/async.md", "docs/compression.md",
-        "docs/sharding.md", "docs/observability.md", "docs/megascan.md")
+        "docs/sharding.md", "docs/observability.md", "docs/megascan.md",
+        "docs/topology.md")
 
 
 def main() -> int:

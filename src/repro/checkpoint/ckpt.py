@@ -1,18 +1,46 @@
 """Minimal dependency-free pytree checkpointing (npz + json treedef).
 
-Saves client states / server state / step for the training loop. Leaves are
-gathered to host (fine at the scales this container trains; a production TPU
-deployment would swap in per-shard async writes behind the same interface).
+Saves client states / server state / step for the training loop. With
+``shards=1`` (the default) every leaf gathers to host and lands in one
+``<path>.npz`` — the legacy format, byte-compatible with older runs. With
+``shards=K`` each leaf whose leading axis holds at least K rows is split
+row-contiguously (``np.array_split`` bounds) across ``<path>.shard{k}.npz``
+files and only one shard's rows are resident on host at a time; leaves too
+small to split stay in the base ``<path>.npz``. The ``.json`` sidecar
+records the layout, so :func:`load_checkpoint` reassembles either format
+transparently — sharded and dense runs resume from each other's files.
+
+:class:`LazyRows` lets a caller hand ``save_checkpoint`` a leaf that
+FETCHES row ranges on demand instead of a dense array — the host-spill
+bank (``repro.fed.spill``) checkpoints shard-by-shard without ever
+materializing the full [N, ...] bank.
 """
 from __future__ import annotations
 
 import json
 from pathlib import Path
-from typing import Any, Dict, Tuple
+from typing import Any, Callable, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+class LazyRows:
+    """A checkpoint leaf that yields row ranges on demand.
+
+    ``fetch(lo, hi)`` must return the dense rows ``[lo:hi]`` as a numpy
+    array; ``shape``/``dtype`` describe the FULL leaf. ``save_checkpoint``
+    pulls one shard's range at a time, so peak host memory is one shard,
+    not the whole leaf. Opaque to ``jax.tree`` (no registered flattening),
+    so it travels through pytrees as a leaf.
+    """
+
+    def __init__(self, fetch: Callable[[int, int], np.ndarray],
+                 shape: Tuple[int, ...], dtype) -> None:
+        self.fetch = fetch
+        self.shape = tuple(shape)
+        self.dtype = np.dtype(dtype)
 
 
 def _to_np(x) -> np.ndarray:
@@ -23,21 +51,71 @@ def _to_np(x) -> np.ndarray:
     return np.asarray(x)
 
 
-def _flatten(tree) -> Tuple[Dict[str, np.ndarray], Any]:
-    leaves, treedef = jax.tree.flatten(tree)
-    arrays = {f"leaf_{i}": _to_np(x) for i, x in enumerate(leaves)}
-    return arrays, treedef
+def _leaf_shape(x) -> Tuple[int, ...]:
+    return x.shape if isinstance(x, LazyRows) else tuple(jnp.shape(x))
 
 
-def save_checkpoint(path, tree, step: int = 0) -> None:
+def _dense(x) -> np.ndarray:
+    if isinstance(x, LazyRows):
+        return _to_np(x.fetch(0, x.shape[0]))
+    return _to_np(x)
+
+
+def _rows(x, lo: int, hi: int) -> np.ndarray:
+    if isinstance(x, LazyRows):
+        return _to_np(x.fetch(lo, hi))
+    return _to_np(x)[lo:hi]
+
+
+def shard_bounds(n: int, shards: int) -> List[Tuple[int, int]]:
+    """Row-contiguous (lo, hi) ranges matching ``np.array_split(arange(n),
+    shards)``: the first ``n % shards`` shards get one extra row."""
+    sizes = [n // shards + (1 if i < n % shards else 0)
+             for i in range(shards)]
+    off = [0]
+    for s in sizes:
+        off.append(off[-1] + s)
+    return [(off[i], off[i + 1]) for i in range(shards)]
+
+
+def save_checkpoint(path, tree, step: int = 0, shards: int = 1) -> None:
     path = Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
-    arrays, treedef = _flatten(tree)
-    np.savez(str(path) + ".npz", **arrays)
-    meta = {"step": step, "treedef": str(treedef),
-            "n_leaves": len(arrays),
-            "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
-            "shapes": {k: list(v.shape) for k, v in arrays.items()}}
+    leaves, treedef = jax.tree.flatten(
+        tree, is_leaf=lambda x: isinstance(x, LazyRows))
+    names = [f"leaf_{i}" for i in range(len(leaves))]
+    if shards <= 1:
+        arrays = {nm: _dense(x) for nm, x in zip(names, leaves)}
+        np.savez(str(path) + ".npz", **arrays)
+        meta = {"step": step, "treedef": str(treedef),
+                "n_leaves": len(arrays),
+                "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+                "shapes": {k: list(v.shape) for k, v in arrays.items()}}
+        Path(str(path) + ".json").write_text(json.dumps(meta))
+        return
+    # a leaf shards when its leading axis can feed every shard at least
+    # one row; everything else (scalars, short vectors, server leaves)
+    # stays dense in the base file
+    shapes = [_leaf_shape(x) for x in leaves]
+    sharded = [i for i, s in enumerate(shapes)
+               if len(s) >= 1 and s[0] >= shards]
+    sharded_set = set(sharded)
+    base = {names[i]: _dense(x) for i, x in enumerate(leaves)
+            if i not in sharded_set}
+    np.savez(str(path) + ".npz", **base)
+    dtypes: Dict[str, str] = {k: str(v.dtype) for k, v in base.items()}
+    for k in range(shards):
+        arrays = {}
+        for i in sharded:
+            lo, hi = shard_bounds(shapes[i][0], shards)[k]
+            arrays[names[i]] = _rows(leaves[i], lo, hi)
+            dtypes[names[i]] = str(arrays[names[i]].dtype)
+        np.savez(f"{path}.shard{k}.npz", **arrays)
+    meta = {"step": step, "treedef": str(treedef), "n_leaves": len(leaves),
+            "dtypes": dtypes,
+            "shapes": {names[i]: list(shapes[i])
+                       for i in range(len(leaves))},
+            "shards": shards, "sharded_leaves": sharded}
     Path(str(path) + ".json").write_text(json.dumps(meta))
 
 
@@ -49,9 +127,18 @@ def load_checkpoint(path, like_tree) -> Tuple[Any, int]:
     dtype/shape metadata (a mismatch means a corrupt or mixed-up
     .npz/.json pair). All checks raise ``ValueError`` naming the offending
     leaf path — not ``assert``, which vanishes under ``python -O``.
+    Handles both the dense single-file layout and the sharded layout
+    (``meta["shards"] > 1``) transparently, so sharded and dense runs
+    resume from each other's files.
     """
-    data = np.load(str(path) + ".npz")
     meta = json.loads(Path(str(path) + ".json").read_text())
+    data = dict(np.load(str(path) + ".npz"))
+    shards = int(meta.get("shards", 1))
+    if shards > 1:
+        pieces = [np.load(f"{path}.shard{k}.npz") for k in range(shards)]
+        for i in meta.get("sharded_leaves", []):
+            name = f"leaf_{i}"
+            data[name] = np.concatenate([p[name] for p in pieces], axis=0)
     leaves, treedef = jax.tree_util.tree_flatten_with_path(like_tree)
     if len(leaves) != meta["n_leaves"]:
         raise ValueError(

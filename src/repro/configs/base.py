@@ -144,6 +144,24 @@ INPUT_SHAPES = {
 
 CODECS = ("none", "int8", "topk")
 
+TOPOLOGIES = ("ring", "torus2d", "complete", "erdos")
+
+
+def validate_topology(name: str, er_p: float, time_varying: bool) -> None:
+    """Shared gossip-topology validation — ``PopulationConfig`` and
+    ``repro.fed.topology.GossipAggregator`` both call this, so the two
+    construction paths can never drift apart. Raises ``ValueError``."""
+    if name not in TOPOLOGIES:
+        raise ValueError(f"topology must be one of {TOPOLOGIES}, "
+                         f"got {name!r}")
+    if not 0.0 <= er_p <= 1.0:
+        raise ValueError(f"er_p must be in [0, 1], got {er_p}")
+    if time_varying and name != "erdos":
+        raise ValueError("time_varying resamples an Erdős–Rényi graph every "
+                         "round: the fixed topologies (ring/torus2d/"
+                         "complete) are static by definition — set "
+                         "topology='erdos'")
+
 
 def validate_codec(name: str, bits: int, topk_frac: float) -> None:
     """Shared codec validation — ``FedConfig`` and
@@ -295,6 +313,14 @@ class PopulationConfig:
     # lognormal model: log-latency location/scale (in rounds)
     delay_mu: float = 0.0
     delay_sigma: float = 0.5
+    # ---- gossip engine (repro.fed.topology) ----
+    # mixing topology of the decentralized rounds; the star engines ignore
+    # these. "erdos" draws a seeded static graph (ring backbone unioned in
+    # for connectivity) unless time_varying resamples it every round.
+    topology: str = "ring"
+    er_p: float = 0.4               # Erdős–Rényi edge probability
+    time_varying: bool = False      # resample the graph each round (erdos)
+    topology_seed: int = 0
 
     def __post_init__(self):
         if not 1 <= self.cohort <= self.n:
@@ -320,6 +346,7 @@ class PopulationConfig:
         validate_delay_model(self.delay_model, self.max_delay,
                              self.tier_fracs, self.tier_delays,
                              self.delay_sigma)
+        validate_topology(self.topology, self.er_p, self.time_varying)
         if self.delay_model == "trace" and not self.trace_file:
             raise ValueError("delay_model='trace' replays the trace_file's "
                              "per-client 'delay' field: set "

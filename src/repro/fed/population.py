@@ -52,6 +52,10 @@ import numpy as np
 
 from repro.configs.base import DELAY_MODELS, validate_delay_model
 from repro.fed.round import make_multi_round
+# weighted_mean moved to the aggregation layer (its canonical home) in the
+# topology refactor; re-exported here because it predates the move as this
+# module's public API
+from repro.fed.topology import as_aggregator, weighted_mean  # noqa: F401
 
 SYNC_MODES = ("broadcast", "participants")
 
@@ -103,13 +107,6 @@ def broadcast(bank_states, value):
     return jax.tree.map(
         lambda a, v: jnp.broadcast_to(v[None].astype(a.dtype), a.shape),
         bank_states, value)
-
-
-def weighted_mean(states, w):
-    """Weighted client mean over the leading axis (w sums to 1)."""
-    return jax.tree.map(
-        lambda a: jnp.tensordot(w, a.astype(jnp.float32),
-                                axes=1).astype(a.dtype), states)
 
 
 def cohort_staleness_weights(last_sync_c, round_id, decay: float):
@@ -183,7 +180,10 @@ def make_population_round(local_step_ids: Callable, sync_update: Callable,
     function over the COHORT (any client-vmapping is its own; ``ids`` are the
     global client ids, so per-client RNG folds match the full-population
     path). ``sync_update(server, avg_state)`` maps the aggregated client
-    state to ``(new_client_state, new_server)`` (unbatched client state).
+    state to ``(new_client_state, new_server)`` (unbatched client state) —
+    or pass a ``repro.fed.topology.Aggregator`` directly; a bare callable
+    wraps into the star default (:func:`as_aggregator`), whose ops are the
+    pre-refactor ones bit-for-bit.
 
     Returns ``round_fn(bank_states, last_sync, server, ids, batches_q, key,
     round_id) -> (bank_states, last_sync, server)`` — jit-compatible, one
@@ -205,6 +205,8 @@ def make_population_round(local_step_ids: Callable, sync_update: Callable,
                          f"got {sync_mode!r}")
     if q < 1:
         raise ValueError(f"round needs q >= 1 local steps, got {q}")
+    agg = as_aggregator(sync_update, codec=codec)
+    codec = agg.codec
     lossy = codec is not None and codec.lossy
 
     def run_steps(cur, server, ids, batches_q, key):
@@ -238,15 +240,13 @@ def make_population_round(local_step_ids: Callable, sync_update: Callable,
         cur, server = run_steps(cur, server, ids, batches_q, key)
         with jax.named_scope("round/aggregate"):
             w = staleness_weights(last_sync, ids, round_id, staleness_decay)
-            new_client, server = sync_update(server, weighted_mean(cur, w))
+            new_client, server = agg.reduce(server, cur, weights=w)
         bank_states, last_sync = write_back(bank_states, last_sync,
                                             new_client, ids, round_id)
         return bank_states, last_sync, server
 
     if not lossy:
         return round_fn
-
-    from repro.fed.compress import client_messages
 
     def round_fn_codec(bank_states, last_sync, ef_bank, server, ids,
                        batches_q, key, round_id):
@@ -255,13 +255,12 @@ def make_population_round(local_step_ids: Callable, sync_update: Callable,
         cur, server = run_steps(ref, server, ids, batches_q, key)
         with jax.named_scope("round/codec"):
             ef_c = gather(ef_bank, ids) if ef_bank is not None else None
-            recon, ef_c = client_messages(codec, key, round_id, ids, ref,
-                                          cur, ef_c)
+            recon, ef_c = agg.messages(key, round_id, ids, ref, cur, ef_c)
             if ef_bank is not None:
                 ef_bank = scatter(ef_bank, ids, ef_c)
         with jax.named_scope("round/aggregate"):
             w = staleness_weights(last_sync, ids, round_id, staleness_decay)
-            new_client, server = sync_update(server, weighted_mean(recon, w))
+            new_client, server = agg.reduce(server, recon, weights=w)
         bank_states, last_sync = write_back(bank_states, last_sync,
                                             new_client, ids, round_id)
         return bank_states, last_sync, ef_bank, server
@@ -290,6 +289,8 @@ def make_cohort_round(local_step_ids: Callable, sync_update: Callable,
     caller scatters ``ef_c`` back into its EF bank."""
     if q < 1:
         raise ValueError(f"round needs q >= 1 local steps, got {q}")
+    agg = as_aggregator(sync_update, codec=codec)
+    codec = agg.codec
     lossy = codec is not None and codec.lossy
 
     def run_steps(cur, server, ids, batches_q, key):
@@ -308,26 +309,22 @@ def make_cohort_round(local_step_ids: Callable, sync_update: Callable,
         with jax.named_scope("round/aggregate"):
             w = cohort_staleness_weights(last_sync_c, round_id,
                                          staleness_decay)
-            new_client, server = sync_update(server, weighted_mean(cur, w))
+            new_client, server = agg.reduce(server, cur, weights=w)
         return new_client, server
 
     if not lossy:
         return round_fn
-
-    from repro.fed.compress import client_messages
 
     def round_fn_codec(cur, last_sync_c, ef_c, server, ids, batches_q, key,
                        round_id):
         ref = cur                     # server-known dispatch states
         cur, server = run_steps(ref, server, ids, batches_q, key)
         with jax.named_scope("round/codec"):
-            recon, ef_c = client_messages(codec, key, round_id, ids, ref,
-                                          cur, ef_c)
+            recon, ef_c = agg.messages(key, round_id, ids, ref, cur, ef_c)
         with jax.named_scope("round/aggregate"):
             w = cohort_staleness_weights(last_sync_c, round_id,
                                          staleness_decay)
-            new_client, server = sync_update(server,
-                                             weighted_mean(recon, w))
+            new_client, server = agg.reduce(server, recon, weights=w)
         return new_client, ef_c, server
 
     return round_fn_codec
@@ -725,9 +722,9 @@ def make_async_round(local_step_ids: Callable, sync_update: Callable,
                          "max_staleness=0 setting)")
     dm = delay if delay is not None else make_delay_model("uniform",
                                                           max_delay)
+    agg = as_aggregator(sync_update, codec=codec)
+    codec = agg.codec
     lossy = codec is not None and codec.lossy
-    if lossy:
-        from repro.fed.compress import client_messages
 
     def round_fn(state, ids, batches_q, key, round_id):
         bank, pending = state["bank"], state["pending"]
@@ -747,10 +744,10 @@ def make_async_round(local_step_ids: Callable, sync_update: Callable,
         w = w / jnp.maximum(w.sum(), 1e-12)
         # no-arrival rounds aggregate the anchor (result discarded below)
         with jax.named_scope("round/aggregate"):
-            avg = _tree_where(has, weighted_mean(pending, w), anchor)
+            avg = _tree_where(has, agg.combine(pending, weights=w), anchor)
 
         # 3. server step (+ delay-adaptive scaling of the model movement)
-        new_client, new_server = sync_update(server, avg)
+        new_client, new_server = agg.server_step(server, avg)
         mean_tau = jnp.where(has, (accept * tau).sum()
                              / jnp.maximum(n_acc, 1), 0.0)
         scale = 1.0 / (1.0 + delay_eta * jnp.maximum(mean_tau - 1.0, 0.0))
@@ -792,8 +789,8 @@ def make_async_round(local_step_ids: Callable, sync_update: Callable,
             # from `pending` is the codec's reconstruction; residuals update
             # only where the dispatch actually happened
             ef_c = gather(ef, ids) if ef is not None else None
-            recon, ef_c_new = client_messages(codec, key, round_id, ids,
-                                              ref, cur, ef_c)
+            recon, ef_c_new = agg.messages(key, round_id, ids, ref, cur,
+                                           ef_c)
             cur = recon
             if ef is not None:
                 ef = scatter_where(ef, ids, ef_c_new, eligible)

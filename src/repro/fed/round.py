@@ -29,7 +29,10 @@ import jax.numpy as jnp
 
 from repro.core.tree_util import tree_stack
 
-ENGINES = ("eager", "scan")
+# "gossip" is the decentralized fifth engine (repro.fed.topology): same
+# fused round program, but the sync is a mixing-matrix step instead of the
+# star server's mean+sync_update+broadcast
+ENGINES = ("eager", "scan", "gossip")
 
 
 def make_round_step(local_step: Callable, sync_step: Callable,

@@ -253,10 +253,35 @@ class FederatedTrainer:
         return lambda states, server, batch, key: step(states, server, batch,
                                                        key, ids)
 
+    # -------------------------------------------------- aggregators
+
+    def star_aggregator(self, n: Optional[int] = None):
+        """The star sync as an ``Aggregator`` (``repro.fed.topology``):
+        ``sync_update`` with the population size ``n`` (default: the
+        trainer's client count) closed over, plus the trainer's codec. All
+        the star round builders below sync through it."""
+        from repro.fed.topology import StarAggregator
+        m = n if n is not None else self.m
+        return StarAggregator(
+            sync_update=lambda srv, avg: self.alg.sync_update(srv, avg, m),
+            codec=self.codec)
+
+    def gossip_aggregator(self, n: int, *, topology: str = "ring",
+                          er_p: float = 0.4, seed: int = 0,
+                          time_varying: bool = False):
+        """The decentralized sync: a ``GossipAggregator`` mixing an
+        n-node bank over ``topology`` (docs/topology.md)."""
+        from repro.fed.topology import GossipAggregator
+        return GossipAggregator(
+            sync_update=lambda srv, avg: self.alg.sync_update(srv, avg, n),
+            n=n, topology=topology, er_p=er_p, seed=seed,
+            time_varying=time_varying, codec=self.codec)
+
     def sync_step_fn(self) -> Callable:
+        agg = self.star_aggregator()
+
         def step(states, server):
-            avg = tree_mean_axis0(states)
-            new_client, new_server = self.alg.sync_update(server, avg, self.m)
+            new_client, new_server = agg.reduce(server, states)
             return tree_bcast_axis0(new_client, self.m), new_server
         return step
 
@@ -272,6 +297,43 @@ class FederatedTrainer:
         from repro.fed.round import make_round_step
         return make_round_step(self.local_step_fn(), self.sync_step_fn(),
                                q if q is not None else self.fed.q)
+
+    def round_step_codec_fn(self, q: Optional[int] = None) -> Callable:
+        """Codec-aware fused round for the plain all-clients path: like
+        :meth:`round_step_fn` but the sync leg ships each client's round
+        delta through ``FedConfig.codec`` against ``ref`` (the server's last
+        broadcast — what every client started the round from) before the
+        mean, carrying the per-client EF residual across rounds.
+
+        ``round(states, server, ref, ef, batches_q, key, round_id) ->
+        (states, server, ref, ef)``; the new ``ref`` is the fresh broadcast.
+        With ``codec='none'`` the codec leg is the identity and the program
+        is bit-identical to :meth:`round_step_fn` (pinned in
+        tests/test_round_engine.py). Build ``ef`` with
+        ``repro.fed.compress.zeros_ef`` over :meth:`abstract_client_states`;
+        it is ``None`` for stateless codecs."""
+        agg = self.star_aggregator()
+        local = self.local_step_fn()
+        nq = q if q is not None else self.fed.q
+        ids = jnp.arange(self.m)
+
+        def round_step(states, server, ref, ef, batches_q, key, round_id):
+            def body(carry, batch):
+                st, srv = carry
+                st, srv = local(st, srv, batch, key)
+                return (st, srv), None
+
+            with jax.named_scope("round/local_scan"):
+                (states, server), _ = jax.lax.scan(body, (states, server),
+                                                   batches_q, length=nq)
+            with jax.named_scope("round/codec"):
+                recon, ef = agg.messages(key, round_id, ids, ref, states, ef)
+            with jax.named_scope("round/sync"):
+                new_client, server = agg.reduce(server, recon)
+            states = tree_bcast_axis0(new_client, self.m)
+            return states, server, states, ef
+
+        return round_step
 
     # -------------------------------------------------- population mode
 
@@ -333,10 +395,8 @@ class FederatedTrainer:
         ids, batches_q, key, round_id)`` — build ``ef_bank`` with
         :meth:`init_ef_bank`."""
         from repro.fed.population import make_population_round
-        def sync_update(server, avg):
-            return self.alg.sync_update(server, avg, n)
         return make_population_round(
-            self.cohort_local_step_fn(n), sync_update,
+            self.cohort_local_step_fn(n), self.star_aggregator(n),
             q if q is not None else self.fed.q,
             sync_mode=sync_mode, staleness_decay=staleness_decay,
             codec=self.codec)
@@ -408,11 +468,8 @@ class FederatedTrainer:
         delays; None = uniform U[1, max_delay]). ``round(state, ids,
         batches_q, key, round_id) -> (state, stats)``."""
         from repro.fed.population import make_async_round
-
-        def sync_update(server, avg):
-            return self.alg.sync_update(server, avg, n)
         return make_async_round(
-            self.cohort_local_step_fn(n), sync_update,
+            self.cohort_local_step_fn(n), self.star_aggregator(n),
             q if q is not None else self.fed.q,
             sync_mode=sync_mode, staleness_decay=staleness_decay,
             max_staleness=max_staleness, max_delay=max_delay,
@@ -473,13 +530,95 @@ class FederatedTrainer:
         server)`` (a lossy codec adds the gathered EF slice, see
         ``repro.fed.population.make_cohort_round``)."""
         from repro.fed.population import make_cohort_round
-
-        def sync_update(server, avg):
-            return self.alg.sync_update(server, avg, n)
         return make_cohort_round(
-            self.cohort_local_step_fn(n), sync_update,
+            self.cohort_local_step_fn(n), self.star_aggregator(n),
             q if q is not None else self.fed.q,
             staleness_decay=staleness_decay, codec=self.codec)
+
+    # -------------------------------------------------- gossip mode
+
+    def gossip_local_step_fn(self, n: int) -> Callable:
+        """Per-node local step for the decentralized engine: like
+        :meth:`cohort_local_step_fn` but the server state is a stacked [n]
+        bank — every node advances against its OWN adaptive matrices and
+        step counter. In lockstep the counters stay equal, so the per-node
+        RNG fold (``fold_in(fold_in(key, gid), t)``) matches the star
+        engines' draw for the same (gid, t)."""
+        def step(states, srv_bank, batch, key, ids):
+            def one(state, srv, b, gid):
+                batches = split_client_batch(self.cfg, b)
+                t = srv["t"]
+                k = jax.random.fold_in(jax.random.fold_in(key, gid), t)
+                new_state = self.alg.local_step(state, srv["adaptive"],
+                                                batches, k, t, n)
+                new_srv = dict(srv)
+                new_srv["t"] = t + 1
+                return new_state, new_srv
+            return self._vmap_clients(one)(states, srv_bank, batch, ids)
+        return step
+
+    def init_gossip_states(self, key, batch, n: int):
+        """Gossip bank init: the population bank plus the per-node server
+        bank — the star server state (same shared init + ``warm_adaptive``
+        pass, one documented initial consensus) broadcast to a leading [n]
+        axis. Returns ``(bank, srv_bank)``."""
+        bank, _, server = self.init_population_states(key, batch, n)
+        return bank, tree_bcast_axis0(server, n)
+
+    def gossip_round_fn(self, n: int, q: Optional[int] = None, *,
+                        topology: str = "ring", er_p: float = 0.4,
+                        seed: int = 0, time_varying: bool = False):
+        """The fifth engine's fused round (``repro.fed.topology.
+        make_gossip_round``): the mixing step that closes the previous
+        round, then q local steps as one scan. ``round(bank, srv_bank, ef,
+        batches_q, key, round_id, *, n_steps, sync_first) -> (bank,
+        srv_bank, ef)``; ``ef`` is ``None`` unless the codec keeps
+        per-node residuals (:meth:`init_ef_bank`)."""
+        from repro.fed.topology import make_gossip_round
+        agg = self.gossip_aggregator(n, topology=topology, er_p=er_p,
+                                     seed=seed, time_varying=time_varying)
+        return make_gossip_round(
+            self.gossip_local_step_fn(n), agg,
+            q if q is not None else self.fed.q)
+
+    def multi_gossip_round_fn(self, n: int, q: Optional[int] = None,
+                              **topo_opts) -> Callable:
+        """Mega-scan tier over :meth:`gossip_round_fn`: ``multi(bank,
+        srv_bank, ef, batches_R, key, round0) -> (bank, srv_bank, ef)``
+        fusing R full rounds (each with its opening mix) into one scanned
+        program. Round 0 (no mix to run) is peeled off by the caller with
+        ``sync_first=False`` on the single-round program, exactly like the
+        population mega-scan's opening round."""
+        from repro.fed.round import make_multi_round
+        round_fn = self.gossip_round_fn(n, q, **topo_opts)
+
+        def chunk(carry, ids, batches_q, key, rid):
+            del ids
+            bank, srv_bank, ef = carry
+            return round_fn(bank, srv_bank, ef, batches_q, key, rid), None
+
+        mega = make_multi_round(chunk)
+
+        def multi(bank, srv_bank, ef, batches_R, key, round0):
+            carry, _ = mega((bank, srv_bank, ef), None, batches_R, key,
+                            round0)
+            return carry
+        return multi
+
+    def gossip_server_shardings(self, n: int):
+        """Shardings of the stacked [n] per-node server bank: the leading
+        node axis partitions like the state bank's rows, trailing model
+        axes keep the rule-based layout."""
+        if self.mesh is None:
+            return None
+        is_axes = lambda t: (isinstance(t, tuple) and
+                             all(u is None or isinstance(u, str) for u in t))
+        axes = jax.tree.map(lambda a: ("clients",) + a,
+                            self.server_state_axes(), is_leaf=is_axes)
+        shapes = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype),
+            self.abstract_server_state())
+        return self._shardings(axes, shapes, fallback=("model",))
 
     def eval_fn(self) -> Callable:
         """Mean UL loss f(x̄, ȳ) over the clients' val batches."""
@@ -501,7 +640,10 @@ class FederatedTrainer:
 
         ``async_opts`` (async_population_round only) forwards the async
         knobs — sync_mode / staleness_decay / max_staleness / max_delay /
-        delay_eta — to :meth:`async_population_round_fn`.
+        delay_eta — to :meth:`async_population_round_fn`. For the
+        ``"gossip_round"``/``"multi_gossip_round"`` entries the same dict
+        instead forwards the topology knobs (topology / er_p / seed /
+        time_varying) to :meth:`gossip_round_fn`.
 
         ``which`` in {"multi_population_round", "multi_async_population_
         round"} selects the mega-scan tier (docs/megascan.md):
@@ -513,6 +655,55 @@ class FederatedTrainer:
         ss = self.state_shardings()
         sv = self.server_shardings()
         rep = NamedSharding(self.mesh, P()) if self.mesh else None
+        if which in ("gossip_round", "multi_gossip_round"):
+            if population_n is None:
+                raise ValueError(f"{which} needs population_n")
+            is_axes = lambda t: (isinstance(t, tuple) and
+                                 all(u is None or isinstance(u, str)
+                                     for u in t))
+            lead = ((rounds_per_scan, self.fed.q)
+                    if which == "multi_gossip_round" else (self.fed.q,))
+            round_axes = (jax.tree.map(lambda a: (None,) * len(lead) + a,
+                                       batch_axes, is_leaf=is_axes)
+                          if batch_axes is not None else None)
+            round_specs = (jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(lead + s.shape, s.dtype),
+                batch_specs) if batch_specs is not None else None)
+            bsh = self.batch_shardings(round_specs, round_axes)
+            pss = self.population_state_shardings(population_n)
+            svb = self.gossip_server_shardings(population_n)
+            efsh = (self.population_state_shardings(population_n)
+                    if self.codec.stateful else None)
+            topo = dict(async_opts or {})
+            in_sh = (pss, svb, efsh, bsh, rep, rep)
+            out_sh = (pss, svb, efsh)
+            dn = ((0, 1, 2) if self.codec.stateful else (0, 1)) \
+                if donate else ()
+
+            def _jit(fn):
+                if self.mesh is None:
+                    return jax.jit(fn, donate_argnums=dn)
+                return jax.jit(fn, in_shardings=in_sh,
+                               out_shardings=out_sh, donate_argnums=dn)
+
+            if which == "multi_gossip_round":
+                return _jit(self.multi_gossip_round_fn(population_n, **topo))
+            # per-round programs vary in (n_steps, sync_first) — round 0
+            # skips the opening mix — so cache one compiled variant per
+            # static combination instead of threading static kwargs
+            # through the sharded jit
+            base = self.gossip_round_fn(population_n, **topo)
+            cache: Dict[Tuple[int, bool], Callable] = {}
+
+            def dispatch(*a, n_steps=None, sync_first=True):
+                ns = self.fed.q if n_steps is None else n_steps
+                k = (ns, bool(sync_first))
+                if k not in cache:
+                    cache[k] = _jit(functools.partial(
+                        base, n_steps=ns, sync_first=sync_first))
+                return cache[k](*a)
+
+            return dispatch
         if which in ("multi_population_round",
                      "multi_async_population_round"):
             if population_n is None:

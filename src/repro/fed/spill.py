@@ -138,6 +138,26 @@ class HostSpillBank:
         self.base = jax.tree.map(np.asarray, value)
         self.fresh[:] = False
 
+    def lazy_leaves(self):
+        """The bank as a pytree of :class:`repro.checkpoint.ckpt.LazyRows`
+        leaves — ``save_checkpoint(..., shards=K)`` then pulls one shard's
+        row range at a time, so a spilled checkpoint never materializes
+        the dense [N, ...] bank (peak extra host memory is one shard)."""
+        from repro.checkpoint.ckpt import LazyRows
+
+        def one(rows_leaf, base_leaf):
+            def fetch(lo, hi):
+                out = rows_leaf[lo:hi].copy()
+                if base_leaf is not None:
+                    stale = ~self.fresh[lo:hi]
+                    if stale.any():
+                        out[stale] = base_leaf.astype(rows_leaf.dtype)
+                return out
+            return LazyRows(fetch, rows_leaf.shape, rows_leaf.dtype)
+        if self.base is None:
+            return jax.tree.map(lambda r: one(r, None), self.rows)
+        return jax.tree.map(one, self.rows, self.base)
+
     def materialize(self):
         """The full dense [N, ...] bank (checkpointing / parity checks) —
         the only O(N*state) host operation besides construction."""

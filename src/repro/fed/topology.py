@@ -1,0 +1,411 @@
+"""Pluggable sync/aggregation topologies — the layer every engine syncs
+through.
+
+AdaFBiO's round structure (q local steps, one sync — paper §4, Remark 2) is
+engine-independent, but what the *sync* does is a topology choice. This
+module owns that choice behind one ``Aggregator`` contract:
+
+  * :class:`StarAggregator` — the paper's star server: combine the client
+    states into ONE average, run ``sync_update`` (Algorithm 1 lines 4-9)
+    once, broadcast/scatter the result. All four pre-existing engines
+    (eager / scan / population / async) sync through it; with it installed
+    they are bit-identical to the pre-refactor implementations
+    (tests/test_topology.py pins full trajectories).
+  * :class:`GossipAggregator` — the decentralized setting of Gao–Gu–Thai
+    (arXiv 2206.15025, PAPERS.md): no server. Each node keeps its OWN
+    server state (adaptive matrices + step counter) and one sync is one
+    doubly-stochastic mixing-matrix step ``x_i ← Σ_j W_ij x_j`` over a
+    pluggable graph, followed by every node running ``sync_update`` on its
+    own mixed average. On the complete graph W is uniform (every row
+    ``1/n``), so gossip degenerates to the star population engine — the
+    identity the parity tests ride on.
+
+The aggregator contract (duck-typed; :class:`Aggregator` documents it):
+
+  ``combine(states, weights=None)``
+      [C, ...] client states → one average. ``weights=None`` is the plain
+      mean (``tree_mean_axis0`` — what the trainer's all-clients sync
+      computes); a [C] weight vector is the convex combination
+      :func:`weighted_mean` (what the population/driver sites compute).
+  ``server_step(server, avg)``
+      the server update on the combined average → ``(new_client,
+      new_server)``.
+  ``reduce(server, states, weights=None)``
+      convenience: ``server_step(server, combine(states, weights))``.
+  ``messages(key, round_id, ids, ref, cur, ef)``
+      the codec-priced uplink leg (``repro.fed.compress.client_messages``
+      with the aggregator's codec) → ``(recon, new_ef)``.
+  ``wire_round(msg_b, down_b, *, ...)``
+      HOST-side per-sync wire pricing → ``(bytes_up, bytes_down)``. Star
+      bills ``tx`` codec-priced uplinks + ``rx`` full-precision downlinks;
+      gossip bills per DIRECTED EDGE — each node ships one codec-priced
+      message along every out-edge and receives one along every in-edge
+      (peer exchanges are compressed in both directions; self-loops are
+      free). Moving the pricing behind the aggregator is what makes
+      per-edge accounting possible at all.
+
+Write-back (broadcast / scatter / pending-row sync) stays in the engines —
+it is an *engine* policy (who receives the result), not a topology one.
+
+Mixing matrices are Metropolis–Hastings over a symmetric adjacency::
+
+    W_ij = A_ij / (1 + max(deg_i, deg_j)),   W_ii = 1 - Σ_{j≠i} W_ij
+
+— symmetric and doubly stochastic by construction, so the mix preserves
+the network average exactly and convergence is governed by the spectral
+gap ``1 − |λ₂(W)|`` (:func:`spectral_gap`; the ``--bench topology`` sweep
+grids it against convergence). Topology zoo: ring, 2D torus, complete,
+Erdős–Rényi (static seeded, or time-varying — resampled every round from
+``fold_in(fold_in(PRNGKey(seed), 0x70B0), round_id)``, a salt disjoint
+from the local-step / codec / delay streams). Semantics and the wire
+convention: docs/topology.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import TOPOLOGIES, validate_topology
+from repro.core.tree_util import tree_mean_axis0
+from repro.fed.compress import Codec, client_messages
+
+# RNG salt for time-varying graph draws — disjoint from the local-step
+# fold_in(gid)/fold_in(t) stream, the codec salt (0xC0DEC) and the async
+# delay salts, so changing topology never perturbs the sample draws
+_TOPOLOGY_SALT = 0x70B0
+
+
+def weighted_mean(states, w):
+    """Convex combination over the leading client axis: ``Σ_i w_i ·
+    state_i`` per leaf, computed in f32 and cast back to the leaf dtype
+    (``w`` is a [C] weight vector). The canonical definition — the
+    population, async and driver sync sites all aggregate through it."""
+    return jax.tree.map(
+        lambda a: jnp.tensordot(w, a.astype(jnp.float32),
+                                axes=1).astype(a.dtype), states)
+
+
+# ------------------------------------------------------------ topology zoo
+
+def ring_adjacency(n: int) -> np.ndarray:
+    """Cycle graph: node i ↔ i±1 (mod n). [n, n] bool, zero diagonal."""
+    A = np.zeros((n, n), bool)
+    for i in range(n):
+        A[i, (i - 1) % n] = True
+        A[i, (i + 1) % n] = True
+    np.fill_diagonal(A, False)
+    return A
+
+
+def torus2d_dims(n: int) -> Tuple[int, int]:
+    """The a × b grid of the 2D torus: a = largest divisor of n with
+    a <= sqrt(n). Raises for prime n (a 1 × n "torus" is just the ring —
+    ask for the ring instead)."""
+    a = int(math.isqrt(n))
+    while n % a:
+        a -= 1
+    if a == 1 and n > 2:
+        raise ValueError(f"torus2d needs a composite population size to "
+                         f"form an a x b grid, got prime n={n} "
+                         f"(use topology='ring')")
+    return a, n // a
+
+
+def torus2d_adjacency(n: int) -> np.ndarray:
+    """2D torus: nodes on an a × b wrap-around grid, each joined to its 4
+    grid neighbours (fewer when a dimension has length <= 2)."""
+    a, b = torus2d_dims(n)
+    A = np.zeros((n, n), bool)
+    for i in range(a):
+        for j in range(b):
+            u = i * b + j
+            for v in (((i - 1) % a) * b + j, ((i + 1) % a) * b + j,
+                      i * b + (j - 1) % b, i * b + (j + 1) % b):
+                if v != u:
+                    A[u, v] = True
+                    A[v, u] = True
+    return A
+
+
+def complete_adjacency(n: int) -> np.ndarray:
+    """Complete graph — Metropolis weights come out uniform (every entry
+    ``1/n``), which is exactly the star engines' unweighted mean."""
+    return ~np.eye(n, dtype=bool)
+
+
+def erdos_adjacency(n: int, p: float, seed: int) -> np.ndarray:
+    """Static seeded Erdős–Rényi graph G(n, p), unioned with the ring as a
+    connectivity backbone (a disconnected component would never reach
+    consensus: spectral gap 0). ``p`` therefore interpolates ring → complete."""
+    rng = np.random.default_rng(seed)
+    u = rng.random((n, n))
+    A = np.triu(u < p, 1)
+    A = A | A.T
+    A |= ring_adjacency(n)
+    np.fill_diagonal(A, False)
+    return A
+
+
+def metropolis_weights(adj):
+    """Doubly-stochastic Metropolis–Hastings mixing matrix of a symmetric
+    adjacency: ``W_ij = A_ij / (1 + max(deg_i, deg_j))``, diagonal takes
+    the slack. Works on a host numpy adjacency (static topologies) or a
+    traced jnp one (time-varying draws inside jit); returns f32 [n, n]."""
+    A = jnp.asarray(adj)
+    n = A.shape[0]
+    A = jnp.logical_and(A, ~jnp.eye(n, dtype=bool))
+    deg = jnp.sum(A, axis=1)
+    pair = 1.0 + jnp.maximum(deg[:, None], deg[None, :]).astype(jnp.float32)
+    W = jnp.where(A, 1.0 / pair, 0.0)
+    return W + jnp.diag(1.0 - W.sum(axis=1))
+
+
+def mixing_matrix(topology: str, n: int, *, er_p: float = 0.4,
+                  seed: int = 0) -> np.ndarray:
+    """The static [n, n] f32 Metropolis mixing matrix of a named topology."""
+    if topology not in TOPOLOGIES:
+        raise ValueError(f"topology must be one of {TOPOLOGIES}, "
+                         f"got {topology!r}")
+    if topology == "ring":
+        A = ring_adjacency(n)
+    elif topology == "torus2d":
+        A = torus2d_adjacency(n)
+    elif topology == "complete":
+        A = complete_adjacency(n)
+    else:
+        A = erdos_adjacency(n, er_p, seed)
+    return np.asarray(metropolis_weights(A), np.float32)
+
+
+def sample_er_matrix(key, n: int, p: float):
+    """One time-varying Erdős–Rényi draw INSIDE the round program: a
+    symmetric Bernoulli(p) adjacency → Metropolis weights. No backbone —
+    a transiently disconnected round just mixes less (B-connectivity in
+    expectation is the time-varying analysis' assumption)."""
+    u = jax.random.uniform(key, (n, n))
+    up = jnp.triu(u < p, k=1)
+    return metropolis_weights(jnp.logical_or(up, up.T))
+
+
+def spectral_gap(W) -> float:
+    """``1 − |λ₂(W)|`` of a symmetric doubly-stochastic mixing matrix —
+    the per-mix consensus contraction rate (0 = disconnected, 1 = one mix
+    reaches exact consensus, i.e. the complete graph / star)."""
+    lam = np.sort(np.abs(np.linalg.eigvalsh(np.asarray(W, np.float64))))
+    return float(1.0 - (lam[-2] if lam.size > 1 else 0.0))
+
+
+def directed_edges(W) -> int:
+    """Directed (ordered-pair) edge count of a mixing matrix, self-loops
+    excluded — the number of peer messages one gossip sync puts on the
+    wire."""
+    W = np.asarray(W)
+    n = W.shape[0]
+    return int(((W > 0) & ~np.eye(n, dtype=bool)).sum())
+
+
+# ------------------------------------------------------------ the contract
+
+class Aggregator:
+    """The duck-typed sync contract (module docstring). Engines accept any
+    object with these methods; :func:`as_aggregator` wraps a bare
+    ``sync_update`` callable into the star default."""
+
+    codec: Optional[Codec] = None
+
+    def combine(self, states, weights=None):
+        raise NotImplementedError
+
+    def server_step(self, server, avg):
+        raise NotImplementedError
+
+    def reduce(self, server, states, weights=None):
+        return self.server_step(server, self.combine(states, weights))
+
+    def messages(self, key, round_id, ids, ref, cur, ef=None):
+        """The codec-priced uplink leg; lossless codecs return ``(cur,
+        ef)`` untouched so the pre-codec program is unchanged."""
+        return client_messages(self.codec, key, round_id, ids, ref, cur, ef)
+
+    def wire_round(self, msg_b: int, down_b: int, **counts) -> Tuple[int, int]:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class StarAggregator(Aggregator):
+    """The paper's star server: one average, one ``sync_update``, one
+    broadcast. ``sync_update(server, avg) -> (new_client, new_server)`` is
+    the algorithm's server step with the population size already closed
+    over. Installed as the default everywhere, it reproduces the
+    pre-refactor engines bit-for-bit: ``combine`` with ``weights=None`` is
+    exactly the trainer's ``tree_mean_axis0`` mean, with a weight vector
+    exactly the population/driver ``weighted_mean`` tensordot."""
+    sync_update: Callable[[Any, Any], Tuple[Any, Any]]
+    codec: Optional[Codec] = None
+
+    def combine(self, states, weights=None):
+        if weights is None:
+            return tree_mean_axis0(states)
+        return weighted_mean(states, weights)
+
+    def server_step(self, server, avg):
+        return self.sync_update(server, avg)
+
+    def wire_round(self, msg_b: int, down_b: int, *, tx: int,
+                   rx: int) -> Tuple[int, int]:
+        """``tx`` unique transmitters ship one codec-priced message each;
+        ``rx`` receivers each take one full-precision downlink push."""
+        return tx * msg_b, rx * down_b
+
+
+def as_aggregator(sync_or_agg, codec: Optional[Codec] = None) -> Aggregator:
+    """Normalize an engine's sync argument: an :class:`Aggregator` passes
+    through (its own codec wins), a bare ``sync_update`` callable wraps
+    into the star default with ``codec``."""
+    if hasattr(sync_or_agg, "combine"):
+        return sync_or_agg
+    return StarAggregator(sync_update=sync_or_agg, codec=codec)
+
+
+@dataclasses.dataclass(frozen=True)
+class GossipAggregator(Aggregator):
+    """Decentralized gossip: one doubly-stochastic Metropolis mixing step
+    over a pluggable graph, then every node runs ``sync_update`` on its own
+    mixed average against its OWN server state (the per-node server bank
+    stacks the ``{"adaptive", "t"}`` tree on a leading [n] axis — every
+    algorithm shares that structure, so ``vmap(sync_update)`` is generic).
+
+    Static topologies build their mixing matrix once at construction;
+    ``time_varying`` (erdos only) resamples it inside the round program
+    from ``fold_in(fold_in(PRNGKey(seed), 0x70B0), round_id)`` — the host
+    can replay the same draw eagerly (:meth:`host_matrix`) for per-round
+    edge billing, so accounting stays exact even when the graph changes
+    every round."""
+    sync_update: Callable[[Any, Any], Tuple[Any, Any]]
+    n: int
+    topology: str = "ring"
+    er_p: float = 0.4
+    seed: int = 0
+    time_varying: bool = False
+    codec: Optional[Codec] = None
+
+    def __post_init__(self):
+        validate_topology(self.topology, self.er_p, self.time_varying)
+        if not self.time_varying:
+            W = mixing_matrix(self.topology, self.n, er_p=self.er_p,
+                              seed=self.seed)
+            object.__setattr__(self, "_W", jnp.asarray(W))
+
+    # -------------------------------------------------- mixing
+
+    def matrix(self, round_id):
+        """The round's [n, n] mixing matrix: a baked constant for static
+        topologies, an in-program draw for time-varying ones (``round_id``
+        may be traced — mega-scan feeds it from the scan counter)."""
+        if not self.time_varying:
+            return self._W
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(self.seed),
+                               _TOPOLOGY_SALT), round_id)
+        return sample_er_matrix(key, self.n, self.er_p)
+
+    def host_matrix(self, round_id: int) -> np.ndarray:
+        """The same matrix evaluated eagerly on the host (jax RNG is
+        deterministic across eager/jit) — for edge billing and reporting."""
+        return np.asarray(self.matrix(round_id))
+
+    def mix(self, states, W):
+        """One mixing step per leaf: ``x ← W @ x`` over the leading node
+        axis, f32 accumulate, cast back (the [n]-batched ``weighted_mean``)."""
+        return jax.tree.map(
+            lambda a: jnp.tensordot(W, a.astype(jnp.float32),
+                                    axes=1).astype(a.dtype), states)
+
+    def combine(self, states, weights=None):
+        """Gossip's ``combine`` is row-wise: every node gets its own mixed
+        average ([n, ...] in → [n, ...] out)."""
+        if weights is not None:
+            raise ValueError("gossip mixes with the matrix, not a weight "
+                             "vector — staleness weighting is a star-sync "
+                             "policy")
+        return self.mix(states, self.matrix(0))
+
+    def server_step(self, server, avg):
+        """Per-node server step: ``server`` is the stacked [n] server bank,
+        ``avg`` the [n, ...] mixed states."""
+        return jax.vmap(self.sync_update)(server, avg)
+
+    node_sync = server_step
+
+    # -------------------------------------------------- wire accounting
+
+    def edges(self, round_id: int = 0) -> int:
+        """Directed peer-message count of the round's graph (self-loops
+        free — a node does not pay to keep its own state)."""
+        return directed_edges(self.host_matrix(round_id))
+
+    def wire_round(self, msg_b: int, down_b: int, *,
+                   edges: int) -> Tuple[int, int]:
+        """Per-edge pricing: every directed edge carries ONE codec-priced
+        message — the sender's uplink is the receiver's downlink (there is
+        no full-precision broadcast in a gossip round, so ``down_b`` is
+        unused by construction)."""
+        del down_b
+        return edges * msg_b, edges * msg_b
+
+    @property
+    def gap(self) -> float:
+        """Spectral gap of the round-0 mixing matrix."""
+        return spectral_gap(self.host_matrix(0))
+
+
+# ------------------------------------------------------------ round program
+
+def make_gossip_round(local_step, agg: GossipAggregator, q: int):
+    """Build the fused gossip round — the fifth engine's program, same
+    shape as the star engines' (the mix that closes the PREVIOUS round,
+    then this round's q local steps as one ``lax.scan``).
+
+    ``local_step(bank, srv_bank, batch, key, ids)`` advances all n nodes
+    one local step against their own server rows. Returns ``round(bank,
+    srv_bank, ef, batches_q, key, round_id, *, n_steps, sync_first) ->
+    (bank, srv_bank, ef)``; ``sync_first=False`` is round 0 (nothing to
+    close). With a lossy codec the round ends by shipping each node's
+    update through the codec against ``ref`` (the node's round-start
+    state, which the previous mix made its peers' working copy); the bank
+    row becomes the reconstruction — the shared public copy the NEXT mix
+    consumes — and the per-node EF residual keeps the rest, exactly the
+    population engine's bank-row convention (docs/topology.md)."""
+    n = agg.n
+    ids = jnp.arange(n, dtype=jnp.int32)
+    codec = agg.codec
+    lossy = codec is not None and codec.lossy
+
+    def round_fn(bank, srv_bank, ef, batches_q, key, round_id, *,
+                 n_steps=q, sync_first=True):
+        if sync_first:
+            with jax.named_scope("round/mix"):
+                mixed = agg.mix(bank, agg.matrix(round_id - 1))
+            with jax.named_scope("round/node_sync"):
+                bank, srv_bank = agg.server_step(srv_bank, mixed)
+        ref = bank                    # what the previous mix published
+
+        def body(carry, batch):
+            st, srv = carry
+            st, srv = local_step(st, srv, batch, key, ids)
+            return (st, srv), None
+
+        with jax.named_scope("round/local_scan"):
+            (bank, srv_bank), _ = jax.lax.scan(body, (bank, srv_bank),
+                                               batches_q, length=n_steps)
+        if lossy:
+            with jax.named_scope("round/codec"):
+                bank, ef = agg.messages(key, round_id, ids, ref, bank, ef)
+        return bank, srv_bank, ef
+
+    return round_fn

@@ -18,7 +18,7 @@ import numpy as np
 
 from repro.checkpoint import load_checkpoint, save_checkpoint
 from repro.configs import FedConfig, get_arch, reduced
-from repro.configs.base import ShapeConfig
+from repro.configs.base import TOPOLOGIES, ShapeConfig
 from repro.data.synthetic import (FederatedLMData, make_client_batch,
                                   make_cohort_batch)
 from repro.fed.population import (DELAY_MODELS, accum_staleness_hist,
@@ -73,6 +73,26 @@ def main():
                     help="per-round compute cohort size C (population mode)")
     ap.add_argument("--sampler", default="uniform", choices=list(SAMPLERS),
                     help="cohort sampling policy (population mode)")
+    ap.add_argument("--topology", default="ring", choices=list(TOPOLOGIES),
+                    help="gossip communication graph (--engine gossip): "
+                         "ring, torus2d, complete, or erdos; the mixing "
+                         "matrix is the Metropolis weighting of the graph "
+                         "(docs/topology.md)")
+    ap.add_argument("--er-p", type=float, default=0.4,
+                    help="erdos topology edge probability (a ring backbone "
+                         "keeps the static graph connected)")
+    ap.add_argument("--time-varying", action="store_true",
+                    help="redraw the erdos gossip graph every round inside "
+                         "the round program (erdos only; per-round edge "
+                         "billing replays the same draw on host)")
+    ap.add_argument("--topology-seed", type=int, default=0,
+                    help="seed of the erdos graph draw (static and "
+                         "time-varying)")
+    ap.add_argument("--ckpt-shards", type=int, default=1,
+                    help="split bank-sized checkpoint leaves over K "
+                         "<path>.shard{k}.npz files (row-contiguous); 1 = "
+                         "the legacy single-file layout. Sharded and dense "
+                         "runs resume from each other's files")
     ap.add_argument("--trace-file", default=None,
                     help="JSONL availability trace replayed by the "
                          "trace-file sampler (format: docs/async.md)")
@@ -144,10 +164,11 @@ def main():
                     codec=args.codec, codec_bits=args.codec_bits,
                     topk_frac=args.topk_frac,
                     error_feedback=args.ef == "on")
-    if args.codec != "none" and not args.population:
-        raise SystemExit("--codec int8/topk compresses the bank round "
-                         "programs: run with --population N (the EF "
-                         "residuals live in the population bank, "
+    if args.codec != "none" and not args.population and args.engine != "scan":
+        raise SystemExit("--codec int8/topk rides the fused round programs: "
+                         "run with --population N (EF residuals live in "
+                         "the bank) or the plain --engine scan path "
+                         "(per-client EF rides the round carry, "
                          "docs/compression.md)")
     shape = ShapeConfig("cli", args.seq, args.batch, "train")
     tr = FederatedTrainer(cfg, fed, shape, mesh=mesh,
@@ -179,6 +200,20 @@ def run_cli(args, cfg, fed, shape, tr: FederatedTrainer, key, tele):
             raise SystemExit("--rounds-per-scan > 1 fuses whole rounds into "
                              "one program: use --engine scan or a "
                              "--population mode")
+    if args.engine == "gossip":
+        if not args.population:
+            raise SystemExit("--engine gossip is decentralized over a "
+                             "population bank: run with --population N "
+                             "(full participation, docs/topology.md)")
+        if args.max_staleness != 0:
+            raise SystemExit("--engine gossip runs synchronous lockstep "
+                             "rounds: set --max-staleness 0")
+        if args.spill != "none":
+            raise SystemExit("--engine gossip mixes the whole bank every "
+                             "round: the bank must stay device-resident "
+                             "(--spill none)")
+        run_gossip(args, cfg, fed, shape, tr, key, tele)
+        return
     if args.population:
         run_population(args, cfg, fed, shape, tr, key, tele)
         return
@@ -186,9 +221,20 @@ def run_cli(args, cfg, fed, shape, tr: FederatedTrainer, key, tele):
     data = FederatedLMData(vocab=cfg.vocab, n_clients=tr.m)
     batch = make_client_batch(data, cfg, specs, 0)
     states, server = tr.init_states(key, batch)
+    # plain-path codec (docs/compression.md): the fused scan round carries
+    # (ref, ef) — ref is the last broadcast every client started from, and
+    # since each round ends by broadcasting the new global state, ref ==
+    # states at every round boundary; only the EF residual checkpoints
+    lossy = tr.codec.lossy
+    ef = tr.init_ef_bank(tr.m) if lossy else None
     start = 0
     if args.resume and args.ckpt:
-        (states, server), start = load_checkpoint(args.ckpt, (states, server))
+        tmpl = (states, server, ef) if ef is not None else (states, server)
+        loaded, start = load_checkpoint(args.ckpt, tmpl)
+        if ef is not None:
+            states, server, ef = loaded
+        else:
+            states, server = loaded
         print(f"resumed from step {start}")
 
     ev = jax.jit(tr.eval_fn())
@@ -211,10 +257,23 @@ def run_cli(args, cfg, fed, shape, tr: FederatedTrainer, key, tele):
             # ONE donated-carry program and loop over ceil(rounds/R)
             # chunks; stats sample chunk boundaries, one row per chunk
             from repro.fed.round import make_multi_round
-            base = tr.round_step_fn()
+            round0 = start // fed.q
+            if lossy:
+                base_c = tr.round_step_codec_fn()
 
-            def one(carry, _ids, batch_q, kk, _rid):
-                return base(carry[0], carry[1], batch_q, kk), None
+                def one(carry, _ids, batch_q, kk, rid):
+                    # ref == the round-start broadcast == the carried
+                    # states at every boundary, so it never rides the
+                    # carry (a duplicate would alias under donation)
+                    st, srv, ef_ = carry
+                    st, srv, _, ef_ = base_c(st, srv, st, ef_, batch_q,
+                                             kk, rid)
+                    return (st, srv, ef_), None
+            else:
+                base = tr.round_step_fn()
+
+                def one(carry, _ids, batch_q, kk, _rid):
+                    return base(carry[0], carry[1], batch_q, kk), None
 
             multi = jax.jit(make_multi_round(one), donate_argnums=(0,))
             r = 0
@@ -229,8 +288,14 @@ def run_cli(args, cfg, fed, shape, tr: FederatedTrainer, key, tele):
                         for j in range(L)])
                 r0 = time.time()
                 with tele.span("round_program"):
-                    (states, server), _ = multi((states, server), None,
-                                                batch_R, key, jnp.int32(r))
+                    if lossy:
+                        (states, server, ef), _ = multi(
+                            (states, server, ef), None, batch_R, key,
+                            jnp.int32(round0 + r))
+                    else:
+                        (states, server), _ = multi((states, server), None,
+                                                    batch_R, key,
+                                                    jnp.int32(r))
                     jax.block_until_ready(states)
                 dt = time.time() - r0
                 for j in range(L):
@@ -251,7 +316,9 @@ def run_cli(args, cfg, fed, shape, tr: FederatedTrainer, key, tele):
                           flush=True)
                 r += L
         else:
-            round_fn = jax.jit(tr.round_step_fn())
+            round0 = start // fed.q
+            round_fn = jax.jit(tr.round_step_codec_fn() if lossy
+                               else tr.round_step_fn())
             for r in range(n_rounds):
                 t = start + r * fed.q
                 with tele.span("batch_build"):
@@ -260,7 +327,13 @@ def run_cli(args, cfg, fed, shape, tr: FederatedTrainer, key, tele):
                                           for j in range(fed.q)])
                 r0 = time.time()
                 with tele.span("round_program"):
-                    states, server = round_fn(states, server, batch_q, key)
+                    if lossy:
+                        states, server, _, ef = round_fn(
+                            states, server, states, ef, batch_q, key,
+                            jnp.int32(round0 + r))
+                    else:
+                        states, server = round_fn(states, server, batch_q,
+                                                  key)
                     jax.block_until_ready(states)
                 dt = time.time() - r0
                 tele.round(r, step=t + fed.q - 1, round_seconds=dt)
@@ -290,7 +363,9 @@ def run_cli(args, cfg, fed, shape, tr: FederatedTrainer, key, tele):
                 print(progress_line(loss=loss, elapsed=time.time() - t0,
                                     step=t), flush=True)
     if args.ckpt:
-        save_checkpoint(args.ckpt, (states, server), steps_done)
+        state = (states, server, ef) if ef is not None else (states, server)
+        save_checkpoint(args.ckpt, state, steps_done,
+                        shards=args.ckpt_shards)
         print(f"saved checkpoint to {args.ckpt} at step {steps_done}")
 
 
@@ -487,7 +562,8 @@ def run_population(args, cfg, fed, shape, tr: FederatedTrainer, key,
     if args.ckpt:
         state = (bank, last_sync, ef, server) if lossy else (bank, last_sync,
                                                              server)
-        save_checkpoint(args.ckpt, state, n_rounds * fed.q)
+        save_checkpoint(args.ckpt, state, n_rounds * fed.q,
+                        shards=args.ckpt_shards)
         print(f"saved population checkpoint to {args.ckpt}")
 
 
@@ -596,12 +672,147 @@ def run_population_spill(args, cfg, fed, tr: FederatedTrainer, key, data,
     print(f"wire totals ({tr.codec.name}): bytes_up={bytes_up} "
           f"bytes_down={bytes_down}", flush=True)
     if args.ckpt:
-        bank_d = spill.materialize()
-        ef_d = ef_spill.materialize() if ef_spill is not None else None
-        state = ((bank_d, jnp.asarray(last_sync), ef_d, server) if lossy
-                 else (bank_d, jnp.asarray(last_sync), server))
-        save_checkpoint(args.ckpt, state, n_rounds * fed.q)
+        # lazy leaves: save_checkpoint pulls one shard's row range at a
+        # time, so the spilled bank checkpoints without a dense
+        # materialize (with --ckpt-shards 1 it still writes the legacy
+        # single-file layout in one pull)
+        bank_l = spill.lazy_leaves()
+        ef_l = ef_spill.lazy_leaves() if ef_spill is not None else None
+        state = ((bank_l, jnp.asarray(last_sync), ef_l, server) if lossy
+                 else (bank_l, jnp.asarray(last_sync), server))
+        save_checkpoint(args.ckpt, state, n_rounds * fed.q,
+                        shards=args.ckpt_shards)
         print(f"saved population checkpoint to {args.ckpt}")
+
+
+def run_gossip(args, cfg, fed, shape, tr: FederatedTrainer, key, tele=NULL):
+    """Decentralized gossip mode (--engine gossip, docs/topology.md): no
+    central server — every bank row steps every round (full participation;
+    --cohort/--sampler are unused) and each round opens with one
+    doubly-stochastic Metropolis mixing step over --topology that closes
+    the previous round. Wire accounting prices every directed edge's
+    codec message on BOTH legs (the sender's uplink is the receiver's
+    downlink; there is no full-precision broadcast)."""
+    n = args.population
+    specs_n, axes_n = client_batch_specs(cfg, shape, n, fed)
+    data = FederatedLMData(vocab=cfg.vocab, n_clients=n)
+    topo = dict(topology=args.topology, er_p=args.er_p,
+                seed=args.topology_seed, time_varying=args.time_varying)
+    try:
+        agg = tr.gossip_aggregator(n, **topo)
+    except ValueError as e:          # bad topology spec → CLI-style exit
+        raise SystemExit(str(e))
+    bank, srv_bank = tr.init_gossip_states(
+        key, make_client_batch(data, cfg, specs_n, 0), n)
+    ef = tr.init_ef_bank(n)          # None unless the codec keeps EF state
+    start = 0
+    if args.resume and args.ckpt:
+        tmpl = (bank, srv_bank, ef) if ef is not None else (bank, srv_bank)
+        loaded, start = load_checkpoint(args.ckpt, tmpl)
+        if ef is not None:
+            bank, srv_bank, ef = loaded
+        else:
+            bank, srv_bank = loaded
+        print(f"resumed gossip run from step {start}")
+    if tr.mesh is not None:
+        # bank rows, per-node server bank, and EF stack all partition over
+        # the mesh's client axes; the mixing step is the only cross-shard op
+        bank = jax.device_put(bank, tr.population_state_shardings(n))
+        srv_bank = jax.device_put(srv_bank, tr.gossip_server_shardings(n))
+        if ef is not None:
+            ef = jax.device_put(ef, tr.population_state_shardings(n))
+    R = args.rounds_per_scan
+    round_fn = tr.jitted("gossip_round", specs_n, axes_n, population_n=n,
+                         async_opts=topo)
+    multi_fn = (tr.jitted("multi_gossip_round", specs_n, axes_n,
+                          population_n=n, rounds_per_scan=R,
+                          async_opts=topo) if R > 1 else None)
+    ev = jax.jit(tr.eval_fn())
+    msg_b, down_b = wire_costs(tr, n)
+    # static graphs bill a constant edge count; time-varying replays each
+    # round's deterministic draw on host (jax RNG matches eager vs jit)
+    static_edges = None if args.time_varying else agg.edges(0)
+    edges_of = (agg.edges if static_edges is None
+                else (lambda rid: static_edges))
+    bytes_up = bytes_down = 0
+
+    start_round = start // fed.q
+    n_rounds = max(args.steps // fed.q, start_round + 1)
+    if n_rounds * fed.q != args.steps:
+        print(f"gossip mode runs whole rounds: {n_rounds * fed.q} steps "
+              f"instead of the requested {args.steps} "
+              f"(use --steps divisible by q={fed.q})", flush=True)
+    print(f"gossip mode: N={n} nodes over {args.topology} "
+          f"(spectral gap {agg.gap:.4f}"
+          f"{', time-varying' if args.time_varying else ''}), "
+          f"rounds {start_round}..{n_rounds - 1} of q={fed.q}", flush=True)
+    acc = (StatAccum.create(bank, tele.metrics_every, tele.consensus)
+           if tele.sinks else None)
+    eval_rounds = max(args.eval_every // fed.q, 1)
+    t0 = time.time()
+    r = start_round
+    while r < n_rounds:
+        # round 0 has no previous round to close, so it peels off as a
+        # single round with the opening mix skipped — exactly the star
+        # mega-scan's opening-round convention
+        L = min(R, n_rounds - r) if (R > 1 and r > 0) else 1
+        t = r * fed.q
+        with tele.span("batch_build"):
+            if L > 1:
+                batch = tree_stack([
+                    tree_stack([make_client_batch(data, cfg, specs_n,
+                                                  (r + j) * fed.q + jj)
+                                for jj in range(fed.q)])
+                    for j in range(L)])
+            else:
+                batch = tree_stack([make_client_batch(data, cfg, specs_n,
+                                                      t + j)
+                                    for j in range(fed.q)])
+        r0 = time.time()
+        with tele.span("round_program"):
+            if L > 1:
+                bank, srv_bank, ef = multi_fn(bank, srv_bank, ef, batch,
+                                              key, jnp.int32(r))
+            else:
+                bank, srv_bank, ef = round_fn(bank, srv_bank, ef, batch,
+                                              key, jnp.int32(r),
+                                              sync_first=r > 0)
+            jax.block_until_ready(bank)
+        dt = time.time() - r0
+        for j in range(L):
+            rj = r + j
+            if rj > 0:
+                # round rj's opening mix closes round rj - 1
+                up, down = agg.wire_round(msg_b, down_b,
+                                          edges=edges_of(rj - 1))
+                bytes_up += up
+                bytes_down += down
+            tele.round(rj, step=rj * fed.q + fed.q - 1, round_seconds=dt / L,
+                       bytes_up=bytes_up, bytes_down=bytes_down)
+        if acc is not None:
+            acc.update(bank)
+            if acc.ready:
+                tele.stats(**acc.drain())
+        rr = r + L - 1
+        if (any((r + j) % eval_rounds == 0 for j in range(L))
+                or rr == n_rounds - 1):
+            last = jax.tree.map(lambda x: x[-1, -1] if L > 1 else x[-1],
+                                batch)
+            loss = float(ev(bank, last))
+            print(progress_line(loss=loss, elapsed=time.time() - t0,
+                                step=rr * fed.q + fed.q - 1, round=rr,
+                                round_seconds=dt / L, bytes_up=bytes_up,
+                                bytes_down=bytes_down), flush=True)
+        r += L
+    if acc is not None and acc.pending:
+        tele.stats(**acc.drain())
+    print(f"wire totals ({tr.codec.name}): bytes_up={bytes_up} "
+          f"bytes_down={bytes_down}", flush=True)
+    if args.ckpt:
+        state = (bank, srv_bank, ef) if ef is not None else (bank, srv_bank)
+        save_checkpoint(args.ckpt, state, n_rounds * fed.q,
+                        shards=args.ckpt_shards)
+        print(f"saved gossip checkpoint to {args.ckpt}")
 
 
 def wire_costs(tr: FederatedTrainer, n: int):
@@ -819,7 +1030,8 @@ def run_population_async(args, cfg, fed, tr: FederatedTrainer, key, data,
                      or "-"),
                   flush=True)
     if args.ckpt:
-        save_checkpoint(args.ckpt, state, n_rounds * fed.q)
+        save_checkpoint(args.ckpt, state, n_rounds * fed.q,
+                        shards=args.ckpt_shards)
         print(f"saved async population checkpoint to {args.ckpt}")
 
 

@@ -39,7 +39,12 @@ client at each aggregation (async: per arrival, dropped arrivals included
 full-precision client state per receiver of each server push (broadcast:
 everyone; participants: the cohort; async: the ``synced`` rows). The
 per-codec formulas are ``Codec.message_bytes`` / ``state_bytes``
-(docs/compression.md); all four engines use the same convention."""
+(docs/compression.md). The pricing itself lives behind the sync layer's
+``Aggregator.wire_round`` (``repro.fed.topology``): the four star engines
+share the tx-uplinks + rx-downlinks convention above, while the fifth,
+decentralized ``engine='gossip'`` prices per directed graph edge — peer
+exchanges are codec-priced in BOTH directions with no full-precision
+broadcast (docs/topology.md)."""
 from __future__ import annotations
 
 import dataclasses
@@ -104,6 +109,10 @@ class FedDriver:
     # "eager": one jitted call per local step (seed behaviour).
     # "scan":  the fused round engine — q local steps + sync compiled as ONE
     #          program per communication round (repro.fed.round).
+    # "gossip": the decentralized engine — no server; the sync is a mixing-
+    #          matrix step over population.topology's graph and every node
+    #          keeps its own server state (repro.fed.topology). Requires
+    #          population= with cohort == n (full participation).
     engine: str = "eager"
     # optional device mesh for the population/async engines: the bank, EF
     # residuals, pending buffer and [N] bookkeeping vectors partition their
@@ -182,14 +191,24 @@ class FedDriver:
         srv["t"] = t + 1
         return new, srv
 
+    def _star_aggregator(self):
+        """The star sync as an ``Aggregator`` (``repro.fed.topology``):
+        every engine except gossip aggregates, codecs and prices its wire
+        traffic through it. ``n_clients`` equals the population size in
+        population mode (validated in ``_run_population``), so one helper
+        serves all the star engines."""
+        from repro.fed.topology import StarAggregator
+        m = self.n_clients
+        return StarAggregator(
+            sync_update=lambda srv, avg: self.alg.sync_update(srv, avg, m),
+            codec=self.codec)
+
     def _sync_body(self, states, server, active):
         m = self.n_clients
         w = active.astype(jnp.float32)
         w = w / jnp.maximum(w.sum(), 1.0)
-        avg = jax.tree.map(
-            lambda a: jnp.tensordot(w, a.astype(jnp.float32),
-                                    axes=1).astype(a.dtype), states)
-        new_client, new_server = self.alg.sync_update(server, avg, m)
+        new_client, new_server = self._star_aggregator().reduce(
+            server, states, weights=w)
         return tree_bcast_axis0(new_client, m), new_server
 
     def _sync_body_codec(self, states, server, active, ref, ef, key,
@@ -200,10 +219,9 @@ class FedDriver:
         hold for non-transmitting (inactive) clients, and the aggregation
         runs over the server-side reconstructions. Returns ``(states,
         server, ref, ef)`` with the fresh broadcast as the next ``ref``."""
-        from repro.fed.compress import client_messages, mask_rows
-        recon, ef_new = client_messages(self.codec, key, round_id,
-                                        jnp.arange(self.n_clients), ref,
-                                        states, ef)
+        from repro.fed.compress import mask_rows
+        recon, ef_new = self._star_aggregator().messages(
+            key, round_id, jnp.arange(self.n_clients), ref, states, ef)
         if ef is not None:
             ef_new = mask_rows(active, ef_new, ef)
         new_states, new_server = self._sync_body(recon, server, active)
@@ -380,6 +398,8 @@ class FedDriver:
     def run(self, total_steps: int, key=None, eval_every: int = 10) -> RunResult:
         key = key if key is not None else jax.random.PRNGKey(0)
         self._setup_sampler(key)
+        if self.engine == "gossip":
+            return self._run_gossip(total_steps, key, eval_every)
         if self.population is not None:
             return self._run_population(total_steps, key, eval_every)
         if self.engine == "scan":
@@ -388,6 +408,7 @@ class FedDriver:
         states, server = self._init_run(key)
         samples = fed.q * (fed.neumann_k + 2)
         comms = 0
+        agg = self._star_aggregator()
         msg_b, down_b = self._wire_costs(states)
         bytes_up = bytes_down = 0
         lossy = self.codec.lossy
@@ -421,8 +442,11 @@ class FedDriver:
                 else:
                     states, server = sync(states, server, active_prev)
                 comms += 1
-                bytes_up += int(active_prev.sum()) * msg_b
-                bytes_down += self.n_clients * down_b
+                up, down = agg.wire_round(msg_b, down_b,
+                                          tx=int(active_prev.sum()),
+                                          rx=self.n_clients)
+                bytes_up += up
+                bytes_down += down
             states, server = local(states, server, self._batches(t), key,
                                    active)
             samples += fed.neumann_k + 2
@@ -460,6 +484,7 @@ class FedDriver:
         states, server = self._init_run(key)
         samples = fed.q * (fed.neumann_k + 2)
         comms = 0
+        agg = self._star_aggregator()
         msg_b, down_b = self._wire_costs(states)
         bytes_up = bytes_down = 0
         lossy = self.codec.lossy
@@ -578,8 +603,11 @@ class FedDriver:
                     samples += n_steps * (fed.neumann_k + 2)
                     if r > 0:
                         comms += 1
-                        bytes_up += int(active_prev.sum()) * msg_b
-                        bytes_down += self.n_clients * down_b
+                        up, down = agg.wire_round(
+                            msg_b, down_b, tx=int(active_prev.sum()),
+                            rx=self.n_clients)
+                        bytes_up += up
+                        bytes_down += down
                     tele.round(r, step=t - 1, round_seconds=dt,
                                samples=samples, comms=comms,
                                bytes_up=bytes_up, bytes_down=bytes_down)
@@ -621,8 +649,11 @@ class FedDriver:
                     t += q
                     samples += q * (fed.neumann_k + 2)
                     comms += 1
-                    bytes_up += int(prev_np[j].sum()) * msg_b
-                    bytes_down += self.n_clients * down_b
+                    up, down = agg.wire_round(msg_b, down_b,
+                                              tx=int(prev_np[j].sum()),
+                                              rx=self.n_clients)
+                    bytes_up += up
+                    bytes_down += down
                     tele.round(r + j, step=t - 1, round_seconds=dt / L,
                                samples=samples, comms=comms,
                                bytes_up=bytes_up, bytes_down=bytes_down)
@@ -659,8 +690,11 @@ class FedDriver:
                 samples += n_steps * (fed.neumann_k + 2)
                 if r > 0:
                     comms += 1
-                    bytes_up += int(active_prev.sum()) * msg_b
-                    bytes_down += self.n_clients * down_b
+                    up, down = agg.wire_round(msg_b, down_b,
+                                              tx=int(active_prev.sum()),
+                                              rx=self.n_clients)
+                    bytes_up += up
+                    bytes_down += down
                 self._obs_round(acc, states, r, dt, t - 1, samples, comms,
                                 bytes_up, bytes_down)
                 if r % eval_rounds == 0 or r == len(lengths) - 1:
@@ -726,7 +760,7 @@ class FedDriver:
         exactly (tests/test_population.py).
         """
         from repro.fed.population import (broadcast, gather, scatter,
-                                          staleness_weights, weighted_mean)
+                                          staleness_weights)
         if self.track_consensus:
             raise ValueError("track_consensus needs the masked eager engine "
                              "(it reads pre-sync client states mid-round)")
@@ -743,6 +777,7 @@ class FedDriver:
         n = pcfg.n
         fed = self.alg.fed
         q = fed.q
+        agg = self._star_aggregator()
         pop, server = self._init_population(key)
         bank, last_sync = pop.states, pop.last_sync
         samples = fed.q * (fed.neumann_k + 2)
@@ -750,7 +785,7 @@ class FedDriver:
         msg_b, down_b = self._wire_costs(bank)
         bytes_up = bytes_down = 0
         lossy = self.codec.lossy
-        from repro.fed.compress import client_messages, zeros_ef
+        from repro.fed.compress import zeros_ef
         ef = zeros_ef(self.codec, bank)
         bank_sh = self._bank_shardings(bank)
         vec_sh = self._bank_shardings(last_sync)
@@ -773,8 +808,8 @@ class FedDriver:
                 with jax.named_scope("round/aggregate"):
                     w = staleness_weights(last_sync, prev_ids, round_id - 1,
                                           pcfg.staleness_decay)
-                    avg = weighted_mean(gather(bank, prev_ids), w)
-                    new_client, server = self.alg.sync_update(server, avg, n)
+                    new_client, server = agg.reduce(
+                        server, gather(bank, prev_ids), weights=w)
                 if pcfg.sync_mode == "broadcast":
                     with jax.named_scope("round/broadcast"):
                         bank = broadcast(bank, new_client)
@@ -806,8 +841,8 @@ class FedDriver:
                 # reconstruction, which the NEXT round's sync aggregates
                 with jax.named_scope("round/codec"):
                     ef_c = gather(ef, ids) if ef is not None else None
-                    cur, ef_c = client_messages(self.codec, kk, round_id,
-                                                ids, ref, cur, ef_c)
+                    cur, ef_c = agg.messages(kk, round_id, ids, ref, cur,
+                                             ef_c)
                     if ef is not None:
                         ef = scatter(ef, ids, ef_c)
             with jax.named_scope("round/scatter"):
@@ -921,9 +956,11 @@ class FedDriver:
                     if r > 0:
                         comms += 1
                         tx = int(np.unique(sync_np).size)
-                        bytes_up += tx * msg_b
-                        bytes_down += (n if pcfg.sync_mode == "broadcast"
-                                       else tx) * down_b
+                        up, down = agg.wire_round(
+                            msg_b, down_b, tx=tx,
+                            rx=(n if pcfg.sync_mode == "broadcast" else tx))
+                        bytes_up += up
+                        bytes_down += down
                     tele.round(r, step=t - 1, round_seconds=dt,
                                samples=samples, comms=comms,
                                bytes_up=bytes_up, bytes_down=bytes_down)
@@ -961,9 +998,11 @@ class FedDriver:
                     samples += q * (fed.neumann_k + 2)
                     comms += 1
                     tx = int(np.unique(sync_chain[j]).size)
-                    bytes_up += tx * msg_b
-                    bytes_down += (n if pcfg.sync_mode == "broadcast"
-                                   else tx) * down_b
+                    up, down = agg.wire_round(
+                        msg_b, down_b, tx=tx,
+                        rx=(n if pcfg.sync_mode == "broadcast" else tx))
+                    bytes_up += up
+                    bytes_down += down
                     tele.round(r + j, step=t - 1, round_seconds=dt / L,
                                samples=samples, comms=comms,
                                bytes_up=bytes_up, bytes_down=bytes_down)
@@ -1006,9 +1045,11 @@ class FedDriver:
                     # participants-mode downlink likewise reaches each
                     # member once
                     tx = int(np.unique(np.asarray(sync_ids)).size)
-                    bytes_up += tx * msg_b
-                    bytes_down += (n if pcfg.sync_mode == "broadcast"
-                                   else tx) * down_b
+                    up, down = agg.wire_round(
+                        msg_b, down_b, tx=tx,
+                        rx=(n if pcfg.sync_mode == "broadcast" else tx))
+                    bytes_up += up
+                    bytes_down += down
                 self._obs_round(acc, bank, r, dt, t - 1, samples, comms,
                                 bytes_up, bytes_down)
                 if r % eval_rounds == 0 or r == len(lengths) - 1:
@@ -1017,6 +1058,272 @@ class FedDriver:
         res.seconds = time.time() - t0
         self._obs_end(acc)
         self.final_bank = bank        # benchmarks inspect per-device bytes
+        res.final_avg_state = tree_mean_axis0(bank)
+        return res
+
+    # -------------------------------------------------- gossip engine
+
+    def _gossip_local_step(self, n: int):
+        """Per-node local step of the decentralized engine: same math and
+        per-client RNG fold as ``_cohort_local_step``, but the server state
+        is a stacked [n] bank — every node advances against its OWN
+        adaptive matrices and step counter (in lockstep the counters stay
+        equal, so the fold_in(gid)/fold_in(t) draws match the star
+        engines' for the same (gid, t))."""
+        def step(states, srv_bank, batch, kk, ids):
+            def one(st1, srv, b, gid):
+                t = srv["t"]
+                k2 = jax.random.fold_in(jax.random.fold_in(kk, gid), t)
+                new_st = self.alg.local_step(st1, srv["adaptive"], b, k2,
+                                             t, n)
+                srv = dict(srv)
+                srv["t"] = t + 1
+                return new_st, srv
+            return jax.vmap(one)(states, srv_bank, batch, ids)
+        return step
+
+    def _run_gossip(self, total_steps: int, key, eval_every) -> RunResult:
+        """Decentralized rounds: no server — each node keeps its own server
+        state, and the sync that opens round r is ONE doubly-stochastic
+        mixing step over ``population.topology``'s graph followed by every
+        node's own ``sync_update`` (``repro.fed.topology``; semantics in
+        docs/topology.md). Same fused round shape as ``_run_population``
+        (mix closing round r-1, then q local steps as one scan; round 0 has
+        nothing to close), full participation by construction.
+
+        Wire accounting is per DIRECTED EDGE: every sync, each node ships
+        one codec-priced message along each out-edge and receives one along
+        each in-edge — there is no full-precision broadcast. Time-varying
+        graphs are billed exactly by replaying each round's draw on the
+        host (``GossipAggregator.host_matrix``).
+
+        On the complete graph the Metropolis matrix is uniform (1/n rows),
+        so this engine matches the star population engine's full-cohort
+        trajectory to float tolerance (tests/test_topology.py)."""
+        from repro.fed.compress import zeros_ef
+        from repro.fed.topology import GossipAggregator, make_gossip_round
+        if self.track_consensus:
+            raise ValueError("track_consensus needs the masked eager engine "
+                             "(it reads pre-sync client states mid-round)")
+        pcfg = self.population
+        if pcfg is None:
+            raise ValueError(
+                "engine='gossip' needs population=PopulationConfig(...) — "
+                "the population size and topology knobs live there")
+        if pcfg.n != self.n_clients:
+            raise ValueError(
+                f"population.n ({pcfg.n}) must equal n_clients "
+                f"({self.n_clients}) — batch_fn/init indices run over the "
+                f"population")
+        if pcfg.cohort != pcfg.n:
+            raise ValueError(
+                f"the gossip engine is full-participation: every node mixes "
+                f"and steps every round, so population.cohort "
+                f"({pcfg.cohort}) must equal population.n ({pcfg.n})")
+        if pcfg.asynchronous:
+            raise ValueError("the gossip engine is synchronous — set "
+                             "population.max_staleness = 0")
+        n = pcfg.n
+        fed = self.alg.fed
+        q = fed.q
+        agg = GossipAggregator(
+            sync_update=lambda srv, avg: self.alg.sync_update(srv, avg, n),
+            n=n, topology=pcfg.topology, er_p=pcfg.er_p,
+            seed=pcfg.topology_seed, time_varying=pcfg.time_varying,
+            codec=self.codec)
+        self.gossip_agg = agg        # benches/tests read .gap / .edges()
+        pop, server = self._init_population(key)
+        bank = pop.states
+        # one initial consensus pass: every node starts from the SAME
+        # warm-adaptive server state (broadcast to a [n] bank) — the star
+        # engines' init, so round-0 trajectories coincide by construction
+        srv_bank = tree_bcast_axis0(server, n)
+        samples = fed.q * (fed.neumann_k + 2)
+        comms = 0
+        msg_b, down_b = self._wire_costs(bank)
+        bytes_up = bytes_down = 0
+        ef = zeros_ef(self.codec, bank)
+        bank_sh = self._bank_shardings(bank)
+        svb_sh = self._bank_shardings(srv_bank)
+        ef_sh = self._bank_shardings(ef) if ef is not None else None
+        if self.mesh is not None:
+            bank = jax.device_put(bank, bank_sh)
+            srv_bank = jax.device_put(srv_bank, svb_sh)
+            if ef is not None:
+                ef = jax.device_put(ef, ef_sh)
+
+        round_fn = make_gossip_round(self._gossip_local_step(n), agg, q)
+        if self.mesh is None:
+            segment = jax.jit(round_fn,
+                              static_argnames=("n_steps", "sync_first"))
+        else:
+            # pjit rejects kwargs alongside in_shardings: close over the
+            # static pair and cache one jitted program per combination
+            rep = self._replicated()
+            seg_cache = {}
+
+            def segment(*a, n_steps, sync_first):
+                k = (n_steps, sync_first)
+                if k not in seg_cache:
+                    seg_cache[k] = jax.jit(
+                        functools.partial(round_fn, n_steps=n_steps,
+                                          sync_first=sync_first),
+                        in_shardings=(bank_sh, svb_sh, ef_sh, rep, rep,
+                                      rep),
+                        out_shardings=(bank_sh, svb_sh, ef_sh))
+                return seg_cache[k](*a)
+
+        # static graphs price once; time-varying ones replay per round
+        static_edges = None if pcfg.time_varying else agg.edges(0)
+
+        def round_edges(rid):
+            return (static_edges if static_edges is not None
+                    else agg.edges(rid))
+
+        full, rem = divmod(total_steps, q)
+        lengths = [q] * full + ([rem] if rem else [])
+        eval_rounds = max(eval_every // q, 1)
+        tele = self._tele()
+        R = self.rounds_per_scan
+        acc = self._obs_begin(bank) if R <= 1 else None
+        res = RunResult(self.alg.name, [], [], [], [], [], 0.0)
+        t0 = time.time()
+        t = 0
+        if R > 1:
+            # mega-scan tier: full mix-first rounds chunk into ONE donated-
+            # carry program each; round 0 and the trailing partial round
+            # peel off as single-round programs (docs/megascan.md). Time-
+            # varying graphs re-draw INSIDE the scan from the traced
+            # round_id, so the fused rounds mix exactly what per-round
+            # execution would.
+            from repro.fed.round import make_multi_round
+            from repro.obs.devstats import stat_row
+            emit_rows = self._mega_obs(tele)
+            row_fn = jax.jit(stat_row)
+            prev_avg = jax.jit(tree_mean_axis0)(bank)
+
+            def chunk_round(carry, ids, batches_q, kk, round_id):
+                del ids
+                bank, srv_bank, ef, prev = carry
+                bank, srv_bank, ef = round_fn(bank, srv_bank, ef,
+                                              batches_q, kk, round_id,
+                                              n_steps=q, sync_first=True)
+                row, prev = stat_row(bank, prev)
+                return (bank, srv_bank, ef, prev), row
+
+            mega_fn = make_multi_round(chunk_round)
+            if self.mesh is None:
+                mega = jax.jit(mega_fn, donate_argnums=(0,))
+            else:
+                rep = self._replicated()
+                carry_sh = (bank_sh, svb_sh, ef_sh, rep)
+                mega = jax.jit(mega_fn,
+                               in_shardings=(carry_sh, None, rep, rep,
+                                             rep),
+                               out_shardings=(carry_sh, rep),
+                               donate_argnums=(0,))
+            mega_compiled = set()
+            seg_used = set()
+            n_rounds = len(lengths)
+            r = 0
+            while r < n_rounds:
+                n_steps = lengths[r]
+                L = min(R, full - r) if (r > 0 and n_steps == q) else 1
+                if L <= 1:
+                    with tele.span("batch_build"):
+                        batches_q = tree_stack([self._batches(t + j)
+                                                for j in range(n_steps)])
+                    seg_fresh = (n_steps, r > 0) not in seg_used
+                    seg_used.add((n_steps, r > 0))
+                    r0 = time.time()
+                    with tele.span("round_program"):
+                        bank, srv_bank, ef = segment(
+                            bank, srv_bank, ef, batches_q, key,
+                            jnp.int32(r), n_steps=n_steps,
+                            sync_first=r > 0)
+                        jax.block_until_ready(bank)
+                    dt = time.time() - r0
+                    self._log_chunk(res, dt, 1, seg_fresh)
+                    row, prev_avg = row_fn(bank, prev_avg)
+                    t += n_steps
+                    samples += n_steps * (fed.neumann_k + 2)
+                    if r > 0:
+                        comms += 1
+                        up, down = agg.wire_round(
+                            msg_b, down_b, edges=round_edges(r - 1))
+                        bytes_up += up
+                        bytes_down += down
+                    tele.round(r, step=t - 1, round_seconds=dt,
+                               samples=samples, comms=comms,
+                               bytes_up=bytes_up, bytes_down=bytes_down)
+                    emit_rows(row[None])
+                    if r % eval_rounds == 0 or r == n_rounds - 1:
+                        self._record(res, bank, t - 1, samples, comms,
+                                     bytes_up, bytes_down)
+                    r += 1
+                    continue
+                with tele.span("batch_build"):
+                    batches_R = tree_stack(
+                        [tree_stack([self._batches(t + j * q + jj)
+                                     for jj in range(q)])
+                         for j in range(L)])
+                fresh = L not in mega_compiled
+                mega_compiled.add(L)
+                r0 = time.time()
+                with tele.span("round_program"):
+                    carry = (bank, srv_bank, ef, prev_avg)
+                    carry, rows = mega(carry, None, batches_R, key,
+                                       jnp.int32(r))
+                    bank, srv_bank, ef, prev_avg = carry
+                    jax.block_until_ready(bank)
+                dt = time.time() - r0
+                self._log_chunk(res, dt, L, fresh)
+                for j in range(L):
+                    t += q
+                    samples += q * (fed.neumann_k + 2)
+                    comms += 1
+                    up, down = agg.wire_round(
+                        msg_b, down_b, edges=round_edges(r + j - 1))
+                    bytes_up += up
+                    bytes_down += down
+                    tele.round(r + j, step=t - 1, round_seconds=dt / L,
+                               samples=samples, comms=comms,
+                               bytes_up=bytes_up, bytes_down=bytes_down)
+                emit_rows(rows)
+                if (any((r + j) % eval_rounds == 0 for j in range(L))
+                        or r + L == n_rounds):
+                    self._record(res, bank, t - 1, samples, comms,
+                                 bytes_up, bytes_down)
+                r += L
+        else:
+            for r, n_steps in enumerate(lengths):
+                with tele.span("batch_build"):
+                    batches_q = tree_stack([self._batches(t + j)
+                                            for j in range(n_steps)])
+                r0 = time.time()
+                with tele.span("round_program"):
+                    bank, srv_bank, ef = segment(
+                        bank, srv_bank, ef, batches_q, key, jnp.int32(r),
+                        n_steps=n_steps, sync_first=r > 0)
+                    jax.block_until_ready(bank)
+                dt = time.time() - r0
+                self._log_round(res, dt)
+                t += n_steps
+                samples += n_steps * (fed.neumann_k + 2)
+                if r > 0:
+                    comms += 1
+                    up, down = agg.wire_round(msg_b, down_b,
+                                              edges=round_edges(r - 1))
+                    bytes_up += up
+                    bytes_down += down
+                self._obs_round(acc, bank, r, dt, t - 1, samples, comms,
+                                bytes_up, bytes_down)
+                if r % eval_rounds == 0 or r == len(lengths) - 1:
+                    self._record(res, bank, t - 1, samples, comms,
+                                 bytes_up, bytes_down)
+        res.seconds = time.time() - t0
+        self._obs_end(acc)
+        self.final_bank = bank
         res.final_avg_state = tree_mean_axis0(bank)
         return res
 
@@ -1051,6 +1358,7 @@ class FedDriver:
         c = pcfg.cohort
         fed = self.alg.fed
         q = fed.q
+        agg = self._star_aggregator()
         # resolve() bakes the permanent per-client delay quantities into
         # the round program as constants (same key every round below)
         dm = delay_model_from_config(pcfg).resolve(key, n)
@@ -1067,8 +1375,7 @@ class FedDriver:
                    if pcfg.delay_model == "tiers" else None)
 
         round_fn = make_async_round(
-            self._cohort_local_step(n),
-            lambda srv, avg: self.alg.sync_update(srv, avg, n),
+            self._cohort_local_step(n), agg,
             q, sync_mode=pcfg.sync_mode,
             staleness_decay=pcfg.staleness_decay,
             max_staleness=pcfg.max_staleness, max_delay=pcfg.max_delay,
@@ -1189,8 +1496,11 @@ class FedDriver:
                                 for k2, v in stats.items()}
                     row = note_round(r, stats_np)
                     comms += int(row["accepted"] > 0)
-                    bytes_up += row["arrived"] * msg_b
-                    bytes_down += row["synced"] * down_b
+                    up, down = agg.wire_round(msg_b, down_b,
+                                              tx=row["arrived"],
+                                              rx=row["synced"])
+                    bytes_up += up
+                    bytes_down += down
                     t += n_steps
                     samples += (n_steps * (fed.neumann_k + 2)
                                 * row["dispatched"] / c)
@@ -1230,8 +1540,11 @@ class FedDriver:
                 for j in range(L):
                     row = note_round(r + j, stats_np, idx=j)
                     comms += int(row["accepted"] > 0)
-                    bytes_up += row["arrived"] * msg_b
-                    bytes_down += row["synced"] * down_b
+                    up, down = agg.wire_round(msg_b, down_b,
+                                              tx=row["arrived"],
+                                              rx=row["synced"])
+                    bytes_up += up
+                    bytes_down += down
                     t += q
                     samples += (q * (fed.neumann_k + 2)
                                 * row["dispatched"] / c)
@@ -1271,8 +1584,11 @@ class FedDriver:
                 # uplink: every arrival shipped one codec message (dropped
                 # ones too — the gate rejects them AFTER transmission);
                 # downlink: the rows that received the new global model
-                bytes_up += row["arrived"] * msg_b
-                bytes_down += row["synced"] * down_b
+                up, down = agg.wire_round(msg_b, down_b,
+                                          tx=row["arrived"],
+                                          rx=row["synced"])
+                bytes_up += up
+                bytes_down += down
                 t += n_steps
                 # only the dispatched fraction of the cohort computed this
                 # round (in-flight slots are masked out and discarded) — the

@@ -184,6 +184,52 @@ def test_fused_flat_buffer_matches_per_leaf():
 
 # ------------------------------------------------------------ trainer level
 
+def test_codec_round_none_bit_identical_to_plain():
+    """``FederatedTrainer.round_step_codec_fn()`` with codec='none' must be
+    BIT-identical to ``round_step_fn()``: the codec leg is the identity and
+    the aggregator reduce is op-for-op the plain sync (the satellite
+    guarantee docs/compression.md promises for the plain all-clients
+    path). Two chained rounds, exact float equality on every leaf."""
+    from repro.configs import get_arch, reduced
+    from repro.configs.base import ShapeConfig
+    from repro.fed.runtime import FederatedTrainer, client_batch_specs
+
+    cfg = reduced(get_arch("qwen1.5-4b"), dtype="float32")
+    fed = FedConfig(q=2, neumann_k=2, lr_x=1e-2, lr_y=1e-1)
+    shape = ShapeConfig("t", 16, 2, "train")
+    tr = FederatedTrainer(cfg, fed, shape, mesh=None)
+    assert not tr.codec.lossy and tr.init_ef_bank(tr.m) is None
+    specs, _ = client_batch_specs(cfg, shape, tr.m, fed)
+    key = jax.random.PRNGKey(0)
+
+    def batch_at(t):
+        kk = jax.random.fold_in(key, t)
+        return {k: (jax.random.randint(kk, v.shape, 0, cfg.vocab)
+                    if v.dtype == jnp.int32 else jnp.zeros(v.shape, v.dtype))
+                for k, v in specs.items()}
+
+    states, server = tr.init_states(key, batch_at(0))
+    plain = jax.jit(tr.round_step_fn())
+    codecf = jax.jit(tr.round_step_codec_fn())
+    st_p, srv_p = states, server
+    st_c, srv_c, ref, ef = states, server, states, None
+    for r in range(2):
+        bq = tree_stack([batch_at(r * fed.q + t) for t in range(fed.q)])
+        st_p, srv_p = plain(st_p, srv_p, bq, key)
+        st_c, srv_c, ref, ef = codecf(st_c, srv_c, ref, ef, bq, key,
+                                      jnp.int32(r))
+        assert ef is None
+    for pa, b in zip(jax.tree_util.tree_leaves_with_path(st_p),
+                     jax.tree.leaves(st_c)):
+        np.testing.assert_array_equal(np.asarray(pa[1]), np.asarray(b),
+                                      err_msg=str(pa[0]))
+    for a, b in zip(jax.tree.leaves(srv_p), jax.tree.leaves(srv_c)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the returned ref IS the fresh broadcast: identical to the new states
+    for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(st_c)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 @pytest.mark.slow
 def test_trainer_round_step_matches_eager_lm():
     """FederatedTrainer.round_step_fn() ≡ q× local_step_fn() + sync_step_fn()

@@ -1,0 +1,320 @@
+"""Aggregation-layer identity matrix (the tentpole refactor's safety net).
+
+The star sync ("client mean + ``sync_update`` + broadcast") moved out of the
+four engines into ``repro.fed.topology``'s pluggable ``Aggregator`` layer.
+``GOLDEN`` below pins full 24-step trajectories (grad-norm evals, comms,
+samples, wire bytes) captured at the pre-refactor HEAD (commit 0c4b355) for
+every engine × codec × mega-scan × mesh combination — the star aggregator
+must reproduce them BIT-identically, so the values are compared exactly, not
+to a tolerance. Do not regenerate these numbers from post-refactor code:
+they are only evidence while they predate the refactor.
+
+The gossip half of the matrix pins the payoff: the complete-graph gossip
+engine with uniform Metropolis weights equals the star population engine to
+1e-6 (they compute the same uniform mean; only vmapped-vs-scalar
+``sync_update`` compilation may differ), plus mixing-matrix invariants,
+mega-scan parity, and per-edge wire accounting.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import FedConfig
+from repro.configs.base import PopulationConfig
+from repro.core.bilevel import quadratic_bilevel_problem, quadratic_true_grad
+from repro.tasks.driver import FedDriver
+
+# Captured at pre-refactor HEAD 0c4b355 (quadratic task below, 24 steps,
+# run key PRNGKey(1), eval_every=8).
+GOLDEN = {
+    "eager": {
+        "grad_norm": [4.258377552032471, 10.474803924560547, 9.82275390625, 5.525059700012207],
+        "comms": 5, "samples": 280,
+        "bytes_up": 2240, "bytes_down": 2240,
+    },
+    "scan": {
+        "grad_norm": [6.718911170959473, 10.950937271118164, 8.414649963378906, 5.525059700012207],
+        "comms": 5, "samples": 280,
+        "bytes_up": 2240, "bytes_down": 2240,
+    },
+    "scan_r3": {
+        "grad_norm": [6.718911170959473, 10.511040687561035, 5.525059700012207],
+        "comms": 5, "samples": 280,
+        "bytes_up": 2240, "bytes_down": 2240,
+    },
+    "eager_int8": {
+        "grad_norm": [4.258377552032471, 10.415976524353027, 9.85123062133789, 5.573945999145508],
+        "comms": 5, "samples": 280,
+        "bytes_up": 600, "bytes_down": 2240,
+    },
+    "scan_int8": {
+        "grad_norm": [6.718911170959473, 10.93971061706543, 8.410233497619629, 5.573945999145508],
+        "comms": 5, "samples": 280,
+        "bytes_up": 600, "bytes_down": 2240,
+    },
+    "population": {
+        "grad_norm": [4.996356964111328, 9.135046005249023, 6.539945602416992, 3.780060291290283],
+        "comms": 5, "samples": 280,
+        "bytes_up": 2240, "bytes_down": 4480,
+    },
+    "population_r3": {
+        "grad_norm": [4.996356964111328, 8.53126049041748, 3.780060291290283],
+        "comms": 5, "samples": 280,
+        "bytes_up": 2240, "bytes_down": 4480,
+    },
+    "population_int8": {
+        "grad_norm": [4.984788417816162, 9.065518379211426, 6.603400230407715, 3.8333396911621094],
+        "comms": 5, "samples": 280,
+        "bytes_up": 600, "bytes_down": 4480,
+    },
+    "population_participants": {
+        "grad_norm": [4.996356964111328, 8.185358047485352, 8.573365211486816, 8.583778381347656],
+        "comms": 5, "samples": 280,
+        "bytes_up": 2240, "bytes_down": 2240,
+    },
+    "async": {
+        "grad_norm": [4.996356964111328, 8.442898750305176, 8.703781127929688, 8.87501335144043],
+        "comms": 5, "samples": 220,
+        "bytes_up": 1344, "bytes_down": 2800,
+    },
+    "async_r3": {
+        "grad_norm": [8.442898750305176, 8.87501335144043],
+        "comms": 5, "samples": 220,
+        "bytes_up": 1344, "bytes_down": 2800,
+    },
+    "async_int8": {
+        "grad_norm": [4.984788417816162, 8.46338176727295, 8.720943450927734, 8.743760108947754],
+        "comms": 5, "samples": 220,
+        "bytes_up": 360, "bytes_down": 2800,
+    },
+    "population_mesh": {
+        "grad_norm": [4.996356964111328, 9.135046005249023, 6.539945602416992, 3.780060291290283],
+        "comms": 5, "samples": 280,
+        "bytes_up": 2240, "bytes_down": 4480,
+    },
+}
+
+POP = dict(n=8, cohort=4)
+
+
+def quad_driver(m=4, codec="none", **kw):
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    d, p = 8, 6
+    A = jax.random.normal(k1, (p, p))
+    H = A @ A.T / p + 0.5 * jnp.eye(p)
+    Bm = jax.random.normal(k2, (p, d)) * 0.3
+    c = jax.random.normal(k3, (p,))
+    Q = jnp.eye(d) * 0.2
+    prob = quadratic_bilevel_problem(H, Bm, c, Q)
+    fed = FedConfig(q=4, neumann_k=8, lr_x=0.3, lr_y=0.3,
+                    theta=float(1.0 / jnp.linalg.eigvalsh(H)[-1]),
+                    adaptive="adam", codec=codec, codec_bits=4)
+
+    def batch_fn(client, step):
+        return {"f": 0.0, "g": 0.0, "g0": 0.0,
+                "gi": jnp.zeros((fed.neumann_k,))}
+
+    def init_xy(key):
+        return jnp.ones((d,)) * 2.0, jnp.zeros((p,))
+
+    def grad_norm(x, y):
+        return jnp.linalg.norm(quadratic_true_grad(H, Bm, c, Q, x))
+
+    return FedDriver(prob, fed, m, batch_fn, init_xy,
+                     grad_norm_fn=grad_norm, algorithm="adafbio", **kw)
+
+
+def _mesh2():
+    if len(jax.devices()) < 2:
+        pytest.skip("needs 2 devices (forced-host in tests/conftest.py)")
+    return jax.make_mesh((2, 1), ("data", "model"))
+
+
+CASES = {
+    "eager": lambda: quad_driver(engine="eager"),
+    "scan": lambda: quad_driver(engine="scan"),
+    "scan_r3": lambda: quad_driver(engine="scan", rounds_per_scan=3),
+    "eager_int8": lambda: quad_driver(engine="eager", codec="int8"),
+    "scan_int8": lambda: quad_driver(engine="scan", codec="int8"),
+    "population": lambda: quad_driver(
+        m=8, population=PopulationConfig(**POP)),
+    "population_r3": lambda: quad_driver(
+        m=8, population=PopulationConfig(**POP), rounds_per_scan=3),
+    "population_int8": lambda: quad_driver(
+        m=8, codec="int8", population=PopulationConfig(**POP)),
+    "population_participants": lambda: quad_driver(
+        m=8, population=PopulationConfig(
+            sync_mode="participants", staleness_decay=0.5, **POP)),
+    "async": lambda: quad_driver(m=8, population=PopulationConfig(
+        max_staleness=4.0, max_delay=3, delay_eta=0.3, **POP)),
+    "async_r3": lambda: quad_driver(m=8, population=PopulationConfig(
+        max_staleness=4.0, max_delay=3, delay_eta=0.3, **POP),
+        rounds_per_scan=3),
+    "async_int8": lambda: quad_driver(m=8, codec="int8",
+                                      population=PopulationConfig(
+                                          max_staleness=4.0, max_delay=3,
+                                          **POP)),
+    "population_mesh": lambda: quad_driver(
+        m=8, population=PopulationConfig(**POP), mesh=_mesh2()),
+}
+
+
+def _run(drv):
+    return drv.run(24, key=jax.random.PRNGKey(1), eval_every=8)
+
+
+# ---------------------------------------------------------------- star pins
+
+@pytest.mark.parametrize("name", sorted(GOLDEN))
+def test_star_bit_identical_to_prerefactor(name):
+    """The star aggregator reproduces the pre-refactor trajectory of every
+    engine EXACTLY — bitwise equality on each recorded grad-norm eval plus
+    the full cost accounting (comms, samples, wire bytes)."""
+    r = _run(CASES[name]())
+    g = GOLDEN[name]
+    np.testing.assert_array_equal(
+        np.asarray(r.grad_norm, np.float32),
+        np.asarray(g["grad_norm"], np.float32),
+        err_msg=f"{name}: star aggregator drifted from pre-refactor HEAD")
+    assert r.comms[-1] == g["comms"]
+    assert int(round(r.samples[-1])) == g["samples"]
+    assert r.bytes_up[-1] == g["bytes_up"]
+    assert r.bytes_down[-1] == g["bytes_down"]
+
+
+# ------------------------------------------------------------- mixing zoo
+
+def _pop(topology="ring", n=8, **kw):
+    return PopulationConfig(n=n, cohort=n, topology=topology, **kw)
+
+
+def _gossip(topology="ring", n=8, codec="none", pop_kw=None, **kw):
+    return quad_driver(m=n, codec=codec,
+                       population=_pop(topology, n=n, **(pop_kw or {})),
+                       engine="gossip", **kw)
+
+
+@pytest.mark.parametrize("topology", ["ring", "torus2d", "complete",
+                                      "erdos"])
+def test_mixing_matrix_invariants(topology):
+    """Metropolis matrices are symmetric, doubly stochastic, non-negative,
+    and connected topologies have a spectral gap in (0, 1]."""
+    from repro.fed.topology import mixing_matrix, spectral_gap
+    W = mixing_matrix(topology, 8)
+    assert W.shape == (8, 8) and (W >= 0).all()
+    np.testing.assert_allclose(W, W.T, atol=0)
+    np.testing.assert_allclose(W.sum(1), np.ones(8), atol=1e-6)
+    np.testing.assert_allclose(W.sum(0), np.ones(8), atol=1e-6)
+    gap = spectral_gap(W)
+    assert 0.0 < gap <= 1.0 + 1e-12
+
+
+def test_complete_graph_matrix_is_uniform():
+    from repro.fed.topology import mixing_matrix
+    W = mixing_matrix("complete", 8)
+    np.testing.assert_array_equal(W, np.full((8, 8), 1.0 / 8, np.float32))
+
+
+def test_prime_torus_rejected():
+    from repro.fed.topology import mixing_matrix
+    with pytest.raises(ValueError, match="ring"):
+        mixing_matrix("torus2d", 7)
+
+
+def test_spectral_gap_ordering():
+    """Denser graphs mix faster: gap(ring) < gap(torus2d) < gap(complete),
+    and the complete graph reaches exact consensus in one mix (gap 1)."""
+    from repro.fed.topology import mixing_matrix, spectral_gap
+    ring = spectral_gap(mixing_matrix("ring", 8))
+    torus = spectral_gap(mixing_matrix("torus2d", 8))
+    comp = spectral_gap(mixing_matrix("complete", 8))
+    assert ring < torus < comp
+    assert abs(comp - 1.0) < 1e-9
+
+
+# ------------------------------------------------------------ gossip engine
+
+def test_gossip_complete_equals_star_population():
+    """The payoff identity: on the complete graph the Metropolis matrix is
+    uniform, so the gossip engine's trajectory equals the star population
+    engine's full-cohort trajectory to float tolerance (the only compile
+    difference is vmapped-vs-scalar ``sync_update``)."""
+    rg = _run(_gossip("complete"))
+    rs = _run(quad_driver(m=8, population=_pop("complete")))
+    np.testing.assert_allclose(rg.grad_norm, rs.grad_norm, rtol=0,
+                               atol=1e-6)
+    assert rg.comms == rs.comms
+    assert rg.samples == rs.samples
+
+
+def test_gossip_megascan_bit_identical():
+    """R=3 mega-scan gossip rounds fuse to exactly the per-round program:
+    the final bank-mean state and last recorded eval match bit-for-bit."""
+    r1 = _run(_gossip("ring"))
+    r3 = _run(_gossip("ring", rounds_per_scan=3))
+    assert np.float32(r1.grad_norm[-1]) == np.float32(r3.grad_norm[-1])
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)),
+        r1.final_avg_state, r3.final_avg_state)
+    assert (r1.comms[-1], r1.bytes_up[-1], r1.bytes_down[-1]) == \
+        (r3.comms[-1], r3.bytes_up[-1], r3.bytes_down[-1])
+
+
+def test_gossip_per_edge_wire_accounting():
+    """Every sync bills one codec-priced message per DIRECTED edge, both
+    legs (peer exchanges are compressed in both directions; no
+    full-precision broadcast) — for the 8-ring: 16 edges x 5 syncs."""
+    for codec in ("none", "int8"):
+        drv = _gossip("ring", codec=codec)
+        r = _run(drv)
+        msg_b, _ = drv._wire_costs(drv.final_bank)
+        edges = drv.gossip_agg.edges(0)
+        assert edges == 16
+        assert r.bytes_up[-1] == 5 * edges * msg_b
+        assert r.bytes_down[-1] == r.bytes_up[-1]
+
+
+def test_gossip_time_varying_deterministic():
+    """Time-varying Erdős–Rényi graphs re-draw per round from the salted
+    round_id fold — deterministically: two identical runs coincide
+    bitwise, and the mega-scan's in-scan draw matches the per-round
+    path's eager draw."""
+    kw = dict(pop_kw=dict(er_p=0.6, time_varying=True))
+    r1 = _run(_gossip("erdos", **kw))
+    r2 = _run(_gossip("erdos", **kw))
+    np.testing.assert_array_equal(np.asarray(r1.grad_norm, np.float32),
+                                  np.asarray(r2.grad_norm, np.float32))
+    r3 = _run(_gossip("erdos", rounds_per_scan=3, **kw))
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)),
+        r1.final_avg_state, r3.final_avg_state)
+    # exact per-round edge billing survives the graph changing every round
+    assert r1.bytes_up[-1] == r3.bytes_up[-1]
+
+
+def test_gossip_mix_preserves_average():
+    """One mixing step preserves the network average exactly (doubly
+    stochastic W) — the decentralized invariant the convergence analysis
+    needs."""
+    from repro.fed.topology import GossipAggregator
+    agg = GossipAggregator(sync_update=lambda s, a: (a, s), n=8,
+                           topology="torus2d")
+    bank = {"x": jax.random.normal(jax.random.PRNGKey(3), (8, 5))}
+    mixed = agg.mix(bank, agg.matrix(0))
+    np.testing.assert_allclose(np.asarray(mixed["x"].mean(0)),
+                               np.asarray(bank["x"].mean(0)), atol=1e-5)
+
+
+def test_gossip_validation():
+    with pytest.raises(ValueError, match="full-participation"):
+        _run(quad_driver(m=8, population=PopulationConfig(n=8, cohort=4),
+                         engine="gossip"))
+    with pytest.raises(ValueError, match="synchronous"):
+        _run(quad_driver(m=8, population=_pop(max_staleness=4.0),
+                         engine="gossip"))
+    with pytest.raises(ValueError, match="population"):
+        _run(quad_driver(m=8, engine="gossip"))
+    with pytest.raises(ValueError, match="time_varying"):
+        PopulationConfig(n=8, cohort=8, topology="ring", time_varying=True)

@@ -2,8 +2,9 @@
 (``repro.launch.train.run_population``): a run checkpointed mid-flight and
 resumed must land on the same final state as an uninterrupted run —
 including the lossy-codec EF-bank template and the ``start_round``
-arithmetic — and the host-spill runner writes dense-compatible
-checkpoints."""
+arithmetic — the host-spill runner writes dense-compatible checkpoints,
+and the sharded layout (``--ckpt-shards K``) round-trips bit-identically
+with the dense single-file layout in both directions."""
 import argparse
 import json
 
@@ -17,17 +18,32 @@ from repro.fed.runtime import FederatedTrainer
 from repro.launch.train import run_population
 
 
-def _args(ckpt, steps, resume=False, spill="none", rounds_per_scan=1):
+def _args(ckpt, steps, resume=False, spill="none", rounds_per_scan=1,
+          ckpt_shards=1):
     return argparse.Namespace(
         population=4, cohort=2, sampler="uniform", trace_file=None,
         max_staleness=0.0, max_delay=1, delay_eta=0.0,
         delay_model="uniform", tiers=None, delay_mu=0.0, delay_sigma=0.5,
         spill=spill, resume=resume, ckpt=ckpt, steps=steps, eval_every=100,
-        rounds_per_scan=rounds_per_scan)
+        rounds_per_scan=rounds_per_scan, ckpt_shards=ckpt_shards)
+
+
+def _load_arrays(path):
+    """Reassemble a checkpoint's full leaf arrays from either layout —
+    the dense single .npz or the base + shard{k} files."""
+    with open(path + ".json") as f:
+        meta = json.load(f)
+    data = dict(np.load(path + ".npz").items())
+    for i in meta.get("sharded_leaves", []):
+        name = f"leaf_{i}"
+        data[name] = np.concatenate(
+            [np.load(f"{path}.shard{k}.npz")[name]
+             for k in range(meta["shards"])], axis=0)
+    return data, meta["step"]
 
 
 def _run(tmp_path, name, codec="none", steps=8, resume=False,
-         spill="none", rounds_per_scan=1):
+         spill="none", rounds_per_scan=1, ckpt_shards=1):
     cfg = reduced(get_arch("qwen1.5-4b"), dtype="float32")
     fed = FedConfig(q=2, neumann_k=2, lr_x=1e-2, lr_y=1e-1, codec=codec,
                     topk_frac=0.5)
@@ -35,16 +51,14 @@ def _run(tmp_path, name, codec="none", steps=8, resume=False,
     tr = FederatedTrainer(cfg, fed, shape, mesh=None)
     path = str(tmp_path / name)
     args = _args(path, steps, resume=resume, spill=spill,
-                 rounds_per_scan=rounds_per_scan)
+                 rounds_per_scan=rounds_per_scan, ckpt_shards=ckpt_shards)
     run_population(args, cfg, fed, shape, tr, jax.random.PRNGKey(7))
-    with open(path + ".json") as f:
-        step = json.load(f)["step"]
-    return np.load(path + ".npz"), step
+    return _load_arrays(path)
 
 
 def _assert_same(a, b):
-    assert sorted(a.files) == sorted(b.files)
-    for k in a.files:
+    assert sorted(a) == sorted(b)
+    for k in sorted(a):
         np.testing.assert_array_equal(a[k], b[k], err_msg=k)
 
 
@@ -114,5 +128,44 @@ def test_spill_checkpoint_matches_dense(tmp_path):
     materialized checkpoint interchanges with the dense runner's."""
     dense, _ = _run(tmp_path, "dense", steps=8)
     spilled, step = _run(tmp_path, "spilled", steps=8, spill="host")
+    assert step == 8
+    _assert_same(dense, spilled)
+
+
+def test_sharded_checkpoint_roundtrip(tmp_path):
+    """--ckpt-shards 3 splits the bank leaves over per-shard files whose
+    reassembly is bit-identical to the dense layout, and a run resumes
+    ACROSS layouts (sharded checkpoint → dense save and back) onto the
+    same final state."""
+    dense, _ = _run(tmp_path, "d1", steps=8)
+    sharded, step = _run(tmp_path, "s3", steps=8, ckpt_shards=3)
+    assert step == 8
+    _assert_same(dense, sharded)
+    path = str(tmp_path / "s3")
+    with open(path + ".json") as f:
+        meta = json.load(f)
+    assert meta["shards"] == 3 and meta["sharded_leaves"]
+    for k in range(3):
+        shard = np.load(f"{path}.shard{k}.npz")
+        assert len(shard.files) == len(meta["sharded_leaves"])
+    # bank rows (N=4) shard; no sharded leaf lingers dense in the base file
+    base = np.load(path + ".npz")
+    assert not set(base.files) & {f"leaf_{i}"
+                                  for i in meta["sharded_leaves"]}
+    # resume from the sharded file, finish with the dense layout
+    _run(tmp_path, "x", steps=4, ckpt_shards=3)
+    resumed, step_res = _run(tmp_path, "x", steps=8, resume=True)
+    assert step_res == 8
+    full, _ = _run(tmp_path, "d2", steps=8)
+    _assert_same(full, resumed)
+
+
+def test_spill_sharded_checkpoint_matches_dense(tmp_path):
+    """The spilled runner's sharded save (LazyRows pulls one shard's row
+    range at a time — no dense materialize) reassembles bit-identical to
+    the dense runner's checkpoint."""
+    dense, _ = _run(tmp_path, "dense_s", steps=8)
+    spilled, step = _run(tmp_path, "spill_s", steps=8, spill="host",
+                         ckpt_shards=2)
     assert step == 8
     _assert_same(dense, spilled)
