@@ -52,7 +52,7 @@ import jax
 
 TASKS = ("hyperclean", "hyperrep")
 BENCHES = ("async", "compression", "bank_scale", "obs_overhead",
-           "megascan", "topology")
+           "megascan", "topology", "serve")
 # bumped whenever a cell/meta field changes shape; shared by ALL artifacts
 # so downstream consumers can gate on one number
 # 3: every artifact gains a top-level "manifest" header (repro.obs)
@@ -62,7 +62,8 @@ DEFAULT_OUT = {"async": "BENCH_async_sweep.json",
                "bank_scale": "BENCH_bank_scale.json",
                "obs_overhead": "BENCH_obs_overhead.json",
                "megascan": "BENCH_megascan.json",
-               "topology": "BENCH_topology.json"}
+               "topology": "BENCH_topology.json",
+               "serve": "BENCH_serve.json"}
 MEGASCAN_ENGINES = ("scan", "population", "async")
 
 
@@ -610,6 +611,109 @@ def run_megascan(args) -> dict:
     }
 
 
+def run_serve(args) -> dict:
+    """Continuous-batching throughput grid (``--bench serve`` →
+    ``BENCH_serve.json``): the SAME synthetic workload served at every
+    ``--slots-grid`` pool size x ``--kv-quant-grid`` cache layout, on a
+    seed-initialized reduced ``--serve-arch`` model. Each cell records
+    requests/sec, tokens/sec, and p50/p99 latency; meta derives the
+    speedup of the largest slot pool over the slots=1 one-at-a-time
+    baseline per quant mode (the continuous-batching win — docs/serving.md
+    targets >= 2x at >= 8 slots). Every cell runs the workload twice and
+    measures the second pass: each Engine jits fresh programs, so the
+    first pass is compile-dominated and would drown the scheduling
+    signal."""
+    from repro.configs import get_arch, reduced
+    from repro.models import init_params, model_specs
+    from repro.serve import Engine, LoadSpec, generate_requests
+
+    cfg = reduced(get_arch(args.serve_arch))
+    params = init_params(model_specs(cfg), jax.random.PRNGKey(args.seed),
+                         cfg.dtype)
+    slots_grid = parse_grid(args.slots_grid, int)
+    quant_grid = []
+    for v in parse_grid(args.kv_quant_grid, str):
+        if v not in ("off", "on"):
+            raise SystemExit(f"--kv-quant-grid entries must be off/on, "
+                             f"got {v!r}")
+        quant_grid.append(v == "on")
+    prompt_lens = parse_grid(args.serve_prompt_lens, int)
+    # capacity covers the longest prompt plus the full budget: every
+    # request retires on eos/length, so cells differ only in scheduling
+    max_len = max(prompt_lens) + args.serve_max_new + 1
+    spec = LoadSpec(n_requests=args.serve_requests, rate=0.0,
+                    prompt_lens=prompt_lens,
+                    mean_new_tokens=max(args.serve_max_new / 2.0, 1.0),
+                    max_new_cap=args.serve_max_new, seed=args.seed)
+    enc = ((max_len, cfg.d_model) if cfg.family == "encdec" else None)
+    pre = ((cfg.n_prefix_embeds, cfg.d_model) if cfg.n_prefix_embeds
+           else None)
+    reqs = generate_requests(spec, cfg.vocab, enc_shape=enc,
+                             prefix_shape=pre)
+    total = len(quant_grid) * len(slots_grid)
+    cells = []
+    for kvq in quant_grid:
+        for slots in slots_grid:
+            i = len(cells) + 1
+            print(f"[{i}/{total}] slots={slots} "
+                  f"kv_quant={'on' if kvq else 'off'}: "
+                  f"{len(reqs)} requests", flush=True)
+            eng = Engine(cfg, params, slots=slots, max_len=max_len,
+                         kv_quant=kvq)
+            eng.run(reqs)                      # warmup: pays the compiles
+            eng.start_clock()                  # latencies measure from here
+            t0 = time.time()
+            done = eng.run(reqs)
+            wall = time.time() - t0
+            toks = sum(len(c.tokens) for c in done)
+            lats = sorted(c.latency_s for c in done)
+            p = lambda q: lats[min(int(q * len(lats)), len(lats) - 1)]
+            cells.append({
+                "slots": slots,
+                "kv_quant": kvq,
+                "requests": len(done),
+                "new_tokens": toks,
+                "wall_s": round(wall, 4),
+                "requests_per_s": round(len(done) / wall, 3),
+                "tokens_per_s": round(toks / wall, 2),
+                "p50_s": round(p(0.5), 5),
+                "p99_s": round(p(0.99), 5),
+            })
+            print(f"    {cells[-1]['requests_per_s']} req/s  "
+                  f"{cells[-1]['tokens_per_s']} tok/s  "
+                  f"p50 {cells[-1]['p50_s']}s", flush=True)
+    speedup = {}
+    for kvq in quant_grid:
+        mine = {c["slots"]: c["requests_per_s"] for c in cells
+                if c["kv_quant"] == kvq}
+        base = mine.get(1) or mine[min(mine)]
+        top = max(mine)
+        speedup["on" if kvq else "off"] = {
+            "slots": top, "vs_slots": 1 if 1 in mine else min(mine),
+            "requests_per_s_ratio": round(mine[top] / base, 3)}
+    best = max(s["requests_per_s_ratio"] for s in speedup.values())
+    print(f"best continuous-batching speedup: {best}x req/s", flush=True)
+    return {
+        "bench": "serve",
+        "schema": SCHEMA,
+        "meta": {
+            "arch": args.serve_arch,
+            "reduced": True,
+            "requests": args.serve_requests,
+            "prompt_lens": list(prompt_lens),
+            "max_new": args.serve_max_new,
+            "max_len": max_len,
+            "slots_grid": list(slots_grid),
+            "kv_quant_grid": ["on" if q else "off" for q in quant_grid],
+            "seed": args.seed,
+            "speedup": speedup,
+            "target_ratio": 2.0,
+            "target_met": best >= 2.0,
+        },
+        "cells": cells,
+    }
+
+
 def run_sweep(args) -> dict:
     """The full grid: per task, one sync baseline + every
     (max_staleness, delay_model, delay_eta) combination."""
@@ -706,7 +810,10 @@ def main(argv=None) -> None:
                          "megascan: steady rounds/sec vs rounds_per_scan "
                          "R per engine (target: >= 3x on population); "
                          "topology: star vs gossip sync layers x codec "
-                         "(spectral gap, per-edge bytes)")
+                         "(spectral gap, per-edge bytes); "
+                         "serve: continuous-batching requests/sec over "
+                         "slot-pool size x kv_quant (target: >= 2x at "
+                         ">= 8 slots)")
     ap.add_argument("--task", default=None,
                     help="comma list of tasks: hyperclean, hyperrep "
                          "(default: both; topology bench: hyperrep)")
@@ -779,6 +886,24 @@ def main(argv=None) -> None:
     ap.add_argument("--reps", type=int, default=3,
                     help="obs_overhead bench: repetitions per mode (the "
                          "best mean round time wins — wall-clock noise)")
+    ap.add_argument("--serve-arch", default="qwen1.5-4b",
+                    help="serve bench: architecture to serve (reduced "
+                         "smoke-size variant, seed-initialized params)")
+    ap.add_argument("--slots-grid", default="1,2,4,8",
+                    help="serve bench: comma list of slot-pool sizes "
+                         "(include 1 — the one-at-a-time baseline the "
+                         "speedup derives against)")
+    ap.add_argument("--kv-quant-grid", default="off,on",
+                    help="serve bench: comma list of off/on int8 KV-cache "
+                         "cells")
+    ap.add_argument("--serve-requests", type=int, default=16,
+                    help="serve bench: synthetic requests per cell (all "
+                         "arrive at t=0: max-throughput drain)")
+    ap.add_argument("--serve-prompt-lens", default="8,16",
+                    help="serve bench: comma list of prompt-length buckets")
+    ap.add_argument("--serve-max-new", type=int, default=16,
+                    help="serve bench: per-request generation budget cap "
+                         "(geometric draw with mean cap/2)")
     ap.add_argument("--seed", type=int, default=0,
                     help="run key seed (one key per cell, shared)")
     ap.add_argument("--out", default=None,
@@ -809,6 +934,8 @@ def main(argv=None) -> None:
         out = run_megascan(args)
     elif args.bench == "topology":
         out = run_topology(args)
+    elif args.bench == "serve":
+        out = run_serve(args)
     else:
         out = (run_compression_sweep(args) if args.bench == "compression"
                else run_sweep(args))

@@ -1,6 +1,7 @@
 """Serving demo: prefill a batch of prompts against a (reduced) assigned
-architecture, then greedy-decode new tokens from the KV/SSM cache — the same
-prefill_step/serve_step the decode dry-run shapes lower at production scale.
+architecture through ``build_serve_fns`` — the exact jitted prefill/decode
+pair the serve engine (``repro.serve``) and the decode dry-run shapes lower
+— then greedy-decode new tokens from the KV/SSM cache.
 
     PYTHONPATH=src python examples/serve_demo.py [arch] [new_tokens]
 """
@@ -12,37 +13,41 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_arch, reduced
-from repro.models import (ModelCtx, decode_step, init_cache, init_params,
-                          model_specs, prefill)
+from repro.configs.base import ShapeConfig
+from repro.fed.serve import build_serve_fns
+from repro.models import init_params, model_specs
 
 
 def main(arch="falcon-mamba-7b", new_tokens=8):
     cfg = reduced(get_arch(arch))
     params = init_params(model_specs(cfg), jax.random.PRNGKey(0), cfg.dtype)
     B, S = 2, 16
-    key = jax.random.PRNGKey(1)
-    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab)}
-    if cfg.family == "encdec":
+    max_len = S + new_tokens
+    pre = build_serve_fns(
+        cfg, ShapeConfig("demo_prefill", max_len, B, "prefill"), None)
+    dec = build_serve_fns(
+        cfg, ShapeConfig("demo_decode", max_len, B, "decode"), None)
+
+    # one independent key per random tensor — a shared key would correlate
+    # the prompt tokens with the encoder activations
+    key_tok, key_enc = jax.random.split(jax.random.PRNGKey(1))
+    batch = {"tokens": jax.random.randint(key_tok, (B, S), 0, cfg.vocab)}
+    if "enc_embeds" in pre["batch_specs"]:
+        spec = pre["batch_specs"]["enc_embeds"]
         batch["enc_embeds"] = jax.random.normal(
-            key, (B, S, cfg.d_model)).astype(jnp.bfloat16)
-    if cfg.n_prefix_embeds:
-        batch["prefix_embeds"] = jnp.zeros(
-            (B, cfg.n_prefix_embeds, cfg.d_model), jnp.bfloat16)
+            key_enc, spec.shape).astype(spec.dtype)
+    if "prefix_embeds" in pre["batch_specs"]:
+        spec = pre["batch_specs"]["prefix_embeds"]
+        batch["prefix_embeds"] = jnp.zeros(spec.shape, spec.dtype)
 
-    cache = init_cache(cfg, B, S + new_tokens,
-                       enc_len=S if cfg.family == "encdec" else 0)
-    pctx = ModelCtx(kind="prefill")
-    dctx = ModelCtx(kind="decode")
-    prefill_jit = jax.jit(lambda p, b, c: prefill(cfg, p, b, c, pctx))
-    decode_jit = jax.jit(lambda p, c, t, pos: decode_step(cfg, p, c, t, pos,
-                                                          dctx))
-
-    logits, cache = prefill_jit(params, batch, cache)
+    cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                         pre["cache_abs"])
+    logits, cache = pre["prefill"](params, batch, cache)
     tok = jnp.argmax(logits, -1).astype(jnp.int32)
     out = [tok]
     pos = S
-    for i in range(new_tokens - 1):
-        logits, cache = decode_jit(params, cache, tok, jnp.int32(pos))
+    for _ in range(new_tokens - 1):
+        logits, cache = dec["decode"](params, cache, tok, jnp.int32(pos))
         tok = jnp.argmax(logits, -1).astype(jnp.int32)
         out.append(tok)
         pos += 1

@@ -29,6 +29,8 @@ TOOLS = {
     "bench": ("benchmarks/run.py", "### `python benchmarks/run.py`"),
     "sweep": ("benchmarks/sweep.py", "### `python benchmarks/sweep.py`"),
     "report": ("scripts/report.py", "### `python scripts/report.py`"),
+    "serve": ("src/repro/launch/serve.py",
+              "### `python -m repro.launch.serve`"),
 }
 
 ARG_RE = re.compile(r"""add_argument\(\s*["'](--[a-z0-9-]+)["']""")
@@ -55,7 +57,7 @@ def readme_sections(readme: pathlib.Path) -> dict:
 
 DOCS = ("docs/ARCHITECTURE.md", "docs/async.md", "docs/compression.md",
         "docs/sharding.md", "docs/observability.md", "docs/megascan.md",
-        "docs/topology.md")
+        "docs/topology.md", "docs/serving.md")
 
 
 def main() -> int:

@@ -23,7 +23,8 @@ import argparse
 import json
 import sys
 
-KNOWN_KINDS = {"manifest", "round", "stats", "summary", "bench_row"}
+KNOWN_KINDS = {"manifest", "round", "stats", "summary", "bench_row",
+               "request", "tick"}
 
 # fields every record of the kind must carry (schema 1)
 REQUIRED = {
@@ -33,6 +34,8 @@ REQUIRED = {
     "stats": ("round_start",),
     "summary": ("rounds", "phases"),
     "bench_row": ("name", "us_per_call"),
+    "request": ("rid", "prompt_len", "new_tokens", "finish_reason"),
+    "tick": ("tick", "active"),
 }
 
 
@@ -72,6 +75,10 @@ def check(path, records):
     ids = [r.get("round") for r in rounds if isinstance(r.get("round"), int)]
     if ids != sorted(ids):
         problems.append("round records out of order")
+    ticks = [rec.get("tick") for _, rec in records
+             if rec.get("kind") == "tick" and isinstance(rec.get("tick"), int)]
+    if ticks != sorted(ticks):
+        problems.append("tick records out of order")
     for ln, rec in records:
         if rec.get("kind") != "stats":
             continue
@@ -160,6 +167,32 @@ def render(path, records):
             if vs:
                 print(f"  {k:<16} last={vs[-1]:.4g}  "
                       f"mean={sum(vs)/len(vs):.4g}  max={max(vs):.4g}")
+
+    reqs = by_kind.get("request", [])
+    ticks = by_kind.get("tick", [])
+    if reqs:
+        lats = sorted(r["latency_s"] for r in reqs
+                      if r.get("latency_s") is not None)
+        toks = sum(r.get("new_tokens", 0) for r in reqs)
+        reasons = {}
+        for r in reqs:
+            reasons[r["finish_reason"]] = reasons.get(r["finish_reason"], 0) + 1
+        print(f"\nserve: {len(reqs)} requests, {toks} generated tokens, "
+              f"{len(ticks)} ticks")
+        if lats:
+            p = lambda q: lats[min(int(q * len(lats)), len(lats) - 1)]
+            print(f"  latency      p50={p(0.5)*1e3:.1f}ms  "
+                  f"p99={p(0.99)*1e3:.1f}ms  max={lats[-1]*1e3:.1f}ms")
+        print("  finish       "
+              + "  ".join(f"{k}:{v}" for k, v in sorted(reasons.items())))
+        if summary.get("requests_per_s") is not None:
+            print(f"  throughput   {summary['requests_per_s']:.2f} req/s  "
+                  f"{summary.get('tokens_per_s', 0):.1f} tok/s  "
+                  f"(wall {summary.get('wall_s', 0):.2f}s)")
+        if ticks:
+            occ = [t.get("active", 0) for t in ticks]
+            print(f"  occupancy    mean {sum(occ)/len(occ):.2f} / "
+                  f"{max(occ)} max active slots")
 
     hist = summary.get("staleness_hist")
     if hist:

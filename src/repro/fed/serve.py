@@ -31,16 +31,20 @@ def serve_batch_specs(cfg: ArchConfig, shape: ShapeConfig,
     d = cfg.d_model
     specs: Dict[str, Any] = {}
     axes: Dict[str, Any] = {}
+    # embeddings enter the residual stream directly, so they must carry the
+    # model's activation dtype (a hardcoded bf16 spec breaks f32 models:
+    # the encoder scan carry would change dtype mid-loop)
+    emb = jnp.dtype(cfg.dtype)
     if kind == "prefill":
         sdec = max(s // 4, 8) if cfg.family == "encdec" else s
         specs["tokens"] = jax.ShapeDtypeStruct((b, sdec), jnp.int32)
         axes["tokens"] = ("batch", None)
         if cfg.n_prefix_embeds:
             specs["prefix_embeds"] = jax.ShapeDtypeStruct(
-                (b, cfg.n_prefix_embeds, d), jnp.bfloat16)
+                (b, cfg.n_prefix_embeds, d), emb)
             axes["prefix_embeds"] = ("batch", None, "act_embed")
         if cfg.family == "encdec":
-            specs["enc_embeds"] = jax.ShapeDtypeStruct((b, s, d), jnp.bfloat16)
+            specs["enc_embeds"] = jax.ShapeDtypeStruct((b, s, d), emb)
             axes["enc_embeds"] = ("batch", "seq", "act_embed")
     else:
         specs["token"] = jax.ShapeDtypeStruct((b, 1), jnp.int32)
@@ -57,9 +61,13 @@ def serve_cache(cfg: ArchConfig, shape: ShapeConfig, kv_quant: bool = False):
 
 
 def build_serve_fns(cfg: ArchConfig, shape: ShapeConfig, mesh: Optional[Mesh],
-                    kv_quant: bool = False):
+                    kv_quant: bool = False, kv_kernel: str = "xla"):
     """Returns dict with jitted prefill_fn/decode_fn + abstract inputs for
-    lowering. Params are a single (client-free) model pytree."""
+    lowering. Params are a single (client-free) model pytree.
+
+    ``kv_kernel`` selects the int8-KV decode attention path (see
+    ``ModelCtx.kv_kernel``): "xla" reference dequant, "pallas" fused kernel,
+    "interpret" the same kernel in Pallas interpret mode (CPU-safe)."""
     specs = model_specs(cfg)
     p_axes = axes_tree(specs)
     p_abs = abstract_params(specs, cfg.dtype)
@@ -70,7 +78,7 @@ def build_serve_fns(cfg: ArchConfig, shape: ShapeConfig, mesh: Optional[Mesh],
     if rules is not None and shape.global_batch == 1:
         rules = dict(rules)
         rules["batch"] = None            # long_500k: nothing to shard on batch
-    ctx = ModelCtx(rules=rules, kind=kind, window=window)
+    ctx = ModelCtx(rules=rules, kind=kind, window=window, kv_kernel=kv_kernel)
 
     def prefill_fn(params, batch, cache):
         return prefill(cfg, params, batch, cache, ctx)

@@ -65,14 +65,16 @@ def quant_decode_attention(q: jax.Array, k8: jax.Array, k_scale: jax.Array,
                            v8: jax.Array, v_scale: jax.Array, pos, *,
                            block_s: int = 512, interpret: bool = False):
     """q: [B,H,Dh] (one token); k8/v8: [B,KV,S,Dh] int8;
-    scales: [B,KV,S] f32; pos: scalar valid length. Returns [B,H,Dh]."""
+    scales: [B,KV,S] f32; pos: valid length — scalar or [B] per-row vector
+    (continuous batching). Returns [B,H,Dh]."""
     b, h, dh = q.shape
     kv, smax = k8.shape[1], k8.shape[2]
     g = h // kv
     bs = min(block_s, smax)
     assert smax % bs == 0
     q4 = q.reshape(b, kv, g, dh)
-    pos_arr = jnp.asarray([pos], jnp.int32)
+    pos_arr = jnp.broadcast_to(
+        jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
     kernel = functools.partial(_kernel, smax=smax, bs=bs, g=g, dh=dh)
     out = pl.pallas_call(
         kernel,
@@ -83,7 +85,7 @@ def quant_decode_attention(q: jax.Array, k8: jax.Array, k_scale: jax.Array,
             pl.BlockSpec((None, None, smax), lambda bi, ki: (bi, ki, 0)),
             pl.BlockSpec((None, None, smax, dh), lambda bi, ki: (bi, ki, 0, 0)),
             pl.BlockSpec((None, None, smax), lambda bi, ki: (bi, ki, 0)),
-            pl.BlockSpec((1,), lambda bi, ki: (0,)),
+            pl.BlockSpec((1,), lambda bi, ki: (bi,)),
         ],
         out_specs=pl.BlockSpec((None, None, g, dh), lambda bi, ki: (bi, ki, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((b, kv, g, dh), q.dtype),

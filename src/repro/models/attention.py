@@ -128,10 +128,11 @@ def attend_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, *,
                   pos: jax.Array, ring: bool = False) -> jax.Array:
     """One-token attention vs a cache.
 
-    q: [B,1,H,Dh]; k_cache/v_cache: [B,Smax,KV,Dh]; pos: scalar count of valid
-    tokens *including* the current one. With ``ring=True`` the cache is a ring
-    buffer (sliding window); positions were RoPE'd at write time so slot order
-    is irrelevant.
+    q: [B,1,H,Dh]; k_cache/v_cache: [B,Smax,KV,Dh]; pos: count of valid tokens
+    *including* the current one — a scalar shared by every row, or a ``[B]``
+    vector for per-row positions (continuous batching). With ``ring=True`` the
+    cache is a ring buffer (sliding window); positions were RoPE'd at write
+    time so slot order is irrelevant.
     """
     b, smax, kv, dh = k_cache.shape
     h = q.shape[2]
@@ -139,8 +140,14 @@ def attend_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, *,
     logits = jnp.einsum("bqkgd,bskd->bkgqs", q5.astype(k_cache.dtype), k_cache,
                         preferred_element_type=jnp.float32)
     slots = jnp.arange(smax)
-    valid = slots < jnp.minimum(pos, smax)
-    logits = jnp.where(valid[None, None, None, None, :], logits, NEG_INF)
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        valid = slots < jnp.minimum(pos, smax)                   # [Smax]
+        valid = valid[None, None, None, None, :]
+    else:
+        valid = slots[None, :] < jnp.minimum(pos, smax)[:, None]  # [B,Smax]
+        valid = valid[:, None, None, None, :]
+    logits = jnp.where(valid, logits, NEG_INF)
     probs = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v_cache.dtype), v_cache,
                      preferred_element_type=jnp.float32)

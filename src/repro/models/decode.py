@@ -100,35 +100,57 @@ def _qkv(cfg, p, hn, prefix=""):
 
 
 def _attn_decode_block(cfg, p, h, ck, cv, pos, window, prefix="",
-                       scales=None):
+                       scales=None, kv_kernel="xla"):
     """One-token self-attention vs cache. h: [B,1,d]. Returns h', new (ck, cv)
-    [, new scales]. ``scales``: (k_scale, v_scale) when the cache is int8."""
-    from repro.kernels.quant_decode import quantize_kv
-    w = ck.shape[1]
+    [, new scales]. ``scales``: (k_scale, v_scale) when the cache is int8.
+
+    ``pos`` is a scalar shared by every row or a ``[B]`` vector of per-row
+    positions (continuous batching). ``kv_kernel`` selects the int8 attention
+    path: "xla" (reference dequant), "pallas" (fused HBM->VMEM dequant kernel)
+    or "interpret" (same kernel, Pallas interpret mode — CPU-safe).
+    """
+    from repro.kernels.quant_decode import quant_decode_attention, quantize_kv
+    b, w = ck.shape[0], ck.shape[1]
     hn = rmsnorm(h, p[prefix + "ln_attn"], cfg.norm_eps)
     q, k, v = _qkv(cfg, p, hn, prefix)
-    posv = jnp.full((1,), pos, jnp.int32)
-    q = attn_lib.rope(q, posv[None], cfg.rope_theta)
-    k = attn_lib.rope(k, posv[None], cfg.rope_theta)
+    pos = jnp.asarray(pos, jnp.int32)
+    vec = pos.ndim == 1
+    posv = pos[:, None] if vec else jnp.full((1, 1), pos, jnp.int32)
+    q = attn_lib.rope(q, posv, cfg.rope_theta)
+    k = attn_lib.rope(k, posv, cfg.rope_theta)
     slot = pos % w if window else jnp.minimum(pos, w - 1)
+
+    def write(buf, val):
+        """Scatter one token per row at ``slot``. val: [B,1,...]."""
+        if vec:
+            return buf.at[jnp.arange(b), slot].set(val[:, 0])
+        return jax.lax.dynamic_update_slice_in_dim(buf, val, slot, axis=1)
+
     if scales is not None:
         ks, vs = scales
         k8, ksc = quantize_kv(k)
         v8, vsc = quantize_kv(v)
-        ck = jax.lax.dynamic_update_slice_in_dim(ck, k8, slot, axis=1)
-        cv = jax.lax.dynamic_update_slice_in_dim(cv, v8, slot, axis=1)
-        ks = jax.lax.dynamic_update_slice_in_dim(ks, ksc, slot, axis=1)
-        vs = jax.lax.dynamic_update_slice_in_dim(vs, vsc, slot, axis=1)
-        # XLA path: dequantize this layer's slice (transient); the TPU build
-        # fuses dequant HBM->VMEM via kernels.quant_decode.
-        kd = (ck.astype(jnp.float32) * ks[..., None]).astype(k.dtype)
-        vd = (cv.astype(jnp.float32) * vs[..., None]).astype(v.dtype)
-        o = attn_lib.attend_decode(q, kd, vd, pos=pos + 1,
-                                   ring=window is not None)
+        ck, cv = write(ck, k8), write(cv, v8)
+        ks, vs = write(ks, ksc), write(vs, vsc)
+        if kv_kernel != "xla" and window is None:
+            # Fused path: dequant happens HBM->VMEM inside the Pallas kernel
+            # (interpret mode executes the same kernel on CPU).
+            o = quant_decode_attention(
+                q[:, 0], ck.transpose(0, 2, 1, 3), ks.transpose(0, 2, 1),
+                cv.transpose(0, 2, 1, 3), vs.transpose(0, 2, 1), pos + 1,
+                block_s=128 if w % 128 == 0 else w,
+                interpret=kv_kernel == "interpret")[:, None]
+        else:
+            # XLA path: dequantize this layer's slice (transient); the TPU
+            # build fuses dequant HBM->VMEM via kernels.quant_decode.
+            kd = (ck.astype(jnp.float32) * ks[..., None]).astype(k.dtype)
+            vd = (cv.astype(jnp.float32) * vs[..., None]).astype(v.dtype)
+            o = attn_lib.attend_decode(q, kd, vd, pos=pos + 1,
+                                       ring=window is not None)
         out = jnp.einsum("bshk,hkd->bsd", o, p[prefix + "wo"])
         return h + out, ck, cv, (ks, vs)
-    ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), slot, axis=1)
-    cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), slot, axis=1)
+    ck = write(ck, k.astype(ck.dtype))
+    cv = write(cv, v.astype(cv.dtype))
     o = attn_lib.attend_decode(q, ck, cv, pos=pos + 1, ring=window is not None)
     out = jnp.einsum("bshk,hkd->bsd", o, p[prefix + "wo"])
     return h + out, ck, cv
@@ -284,7 +306,8 @@ def _hybrid_prefill(cfg, xp, h, cache, ctx, pos, w, window):
 # ------------------------------------------------------------------ decode
 
 def decode_step(cfg: ArchConfig, params, cache, token, pos, ctx: ModelCtx):
-    """token: [B,1] int32; pos: scalar int32 (tokens already cached).
+    """token: [B,1] int32; pos: int32 tokens already cached — scalar (all rows
+    at the same position) or [B] per-row (continuous batching).
     Returns (logits [B,1,V], new cache)."""
     xp, yp = params["x"], params["y"]
     h = jnp.take(xp["embed"], token, axis=0)
@@ -303,7 +326,7 @@ def decode_step(cfg: ArchConfig, params, cache, token, pos, ctx: ModelCtx):
             if quant:
                 hh, ck, cv, (ks, vs) = _attn_decode_block(
                     cfg, lp, carry, xs["k"], xs["v"], pos, window,
-                    scales=(xs["ks"], xs["vs"]))
+                    scales=(xs["ks"], xs["vs"]), kv_kernel=ctx.kv_kernel)
                 ys = {"k": ck, "v": cv, "ks": ks, "vs": vs}
             else:
                 hh, ck, cv = _attn_decode_block(cfg, lp, carry, xs["k"],

@@ -36,6 +36,7 @@ class ModelCtx:
     kind: str = "train"               # train | prefill | decode
     attn_chunk: int = 1024
     ssm_chunk: int = 256
+    kv_kernel: str = "xla"            # int8-KV decode path: xla | pallas | interpret
 
 
 # ------------------------------------------------------------------ specs

@@ -54,7 +54,8 @@ from typing import Any, Dict, List, Optional
 # bumped whenever a record kind gains/changes a required field
 SCHEMA = 1
 
-KINDS = ("manifest", "round", "stats", "summary", "bench_row")
+KINDS = ("manifest", "round", "stats", "summary", "bench_row",
+         "request", "tick")
 
 
 # ------------------------------------------------------------------ sinks
@@ -296,6 +297,24 @@ class Telemetry:
         closing summary record."""
         self._notes.update(kw)
 
+    # ------------------------------------------------------------ serving
+
+    def request(self, rid: int, **fields) -> None:
+        """One completed serve request (``repro.serve.engine``): prompt/new
+        token counts, finish reason, latency. Buffered like rounds."""
+        rec = {"kind": "request", "rid": int(rid)}
+        rec.update(_json_safe(fields))
+        self.emit(rec)
+
+    def tick(self, tick: int, **fields) -> None:
+        """One engine scheduler tick (slot occupancy, admissions,
+        completions); flushed every ``metrics_every`` ticks."""
+        rec = {"kind": "tick", "tick": int(tick)}
+        rec.update(_json_safe(fields))
+        self.emit(rec)
+        if self.sinks and (tick + 1) % self.metrics_every == 0:
+            self.flush()
+
     # ------------------------------------------------------------ spans
 
     def span(self, name: str) -> Span:
@@ -373,6 +392,12 @@ class NullTelemetry:
         pass
 
     def note(self, **kw) -> None:
+        pass
+
+    def request(self, rid, **fields) -> None:
+        pass
+
+    def tick(self, tick, **fields) -> None:
         pass
 
     def span(self, name):

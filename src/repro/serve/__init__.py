@@ -1,0 +1,16 @@
+"""Serving subsystem: continuous-batching decode engine for the trained
+global model (docs/serving.md).
+
+- ``engine``: fixed-slot continuous-batching scheduler over ONE shared
+  jitted decode step (per-slot positions, EOS/budget retirement, immediate
+  refill), optional int8 KV cache via the quant_decode Pallas kernel.
+- ``bridge``: launch/train.py checkpoint -> serve params (x̄, ȳ).
+- ``loadgen``: synthetic open-loop request generator (Poisson arrivals)
+  and the replay driver the ``--bench serve`` sweep runs on.
+"""
+from repro.serve.bridge import load_serve_params
+from repro.serve.engine import Completion, Engine, Request
+from repro.serve.loadgen import LoadSpec, generate_requests, replay
+
+__all__ = ["Completion", "Engine", "LoadSpec", "Request",
+           "generate_requests", "load_serve_params", "replay"]

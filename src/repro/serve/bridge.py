@@ -1,0 +1,134 @@
+"""Checkpoint -> serve-params bridge (docs/serving.md).
+
+``launch/train.py`` checkpoints carry a whole training state — a client
+bank (or plain client states), server state, and mode-specific extras — in
+one of several tuple layouts. Serving needs only the trained global model
+(x̄, ȳ). This module reconstructs candidate abstract templates from the
+requested ``ArchConfig``, matches the stored treedef/shapes against them
+via :func:`repro.checkpoint.load_checkpoint` (which validates every leaf
+and raises ``ValueError`` naming the mismatched leaf path — the PR 4
+convention), and returns the client-mean ``{"x": x̄, "y": ȳ}`` params the
+serve engine consumes. Every sync engine broadcasts the aggregate back to
+the bank each round, so the rows agree at checkpoint time and the mean is
+the canonical global model.
+
+Dense and ``--ckpt-shards K`` layouts both load (``load_checkpoint``
+reassembles shards transparently).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import load_checkpoint
+from repro.configs.base import ArchConfig, FedConfig, ShapeConfig
+
+ADAPTIVE_VARIANTS = ("adam", "none", "adabelief")
+
+
+def _abstractify(tree):
+    return jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(jnp.shape(a), a.dtype), tree)
+
+
+def _candidate_templates(cfg: ArchConfig, n: int, codec: str,
+                         codec_bits: int, topk_frac: float):
+    """(name, template) pairs for every checkpoint layout train.py writes,
+    at population/client count ``n``. The structures come from
+    FederatedTrainer itself (single source of truth), enumerated over the
+    server's adaptive variants and — when ``codec`` is lossy — the EF-bank
+    layouts."""
+    from repro.fed.runtime import FederatedTrainer
+    shape = ShapeConfig("bridge", 8, 1, "train")
+    out = []
+    for adaptive in ADAPTIVE_VARIANTS:
+        fed = FedConfig(adaptive=adaptive, codec=codec,
+                        codec_bits=codec_bits, topk_frac=topk_frac,
+                        error_feedback=codec != "none")
+        tr = FederatedTrainer(cfg, fed, shape, mesh=None)
+        bank = tr.abstract_population_states(n)
+        server = tr.abstract_server_state()
+        last_sync = jax.ShapeDtypeStruct((n,), jnp.int32)
+        ef = tr.init_ef_bank(n) if tr.codec.lossy else None
+        ef = _abstractify(ef) if ef is not None else None
+        tag = f"adaptive={adaptive}"
+        out.append((f"population[{tag}]", (bank, last_sync, server)))
+        srv_bank = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), server)
+        out.append((f"gossip[{tag}]", (bank, srv_bank)))
+        out.append((f"plain[{tag}]", (bank, server)))
+        if ef is not None:
+            out.append((f"population+ef[{tag}]", (bank, last_sync, ef,
+                                                  server)))
+            out.append((f"gossip+ef[{tag}]", (bank, srv_bank, ef)))
+            out.append((f"plain+ef[{tag}]", (bank, server, ef)))
+    return out
+
+
+def _tree_mean_axis0(tree):
+    return jax.tree.map(lambda a: jnp.mean(a, axis=0), tree)
+
+
+def load_serve_params(path, cfg: ArchConfig, *, codec: str = "none",
+                      codec_bits: int = 8, topk_frac: float = 0.05,
+                      ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """Load a ``launch/train.py`` checkpoint and extract serve params.
+
+    Returns ``(params, info)`` where ``params = {"x": x̄, "y": ȳ}`` matches
+    ``model_specs(cfg)`` (the engine's expected pytree) and ``info`` names
+    the matched layout, the client count, and the training step. A
+    checkpoint whose leaf shapes don't fit ``cfg`` raises ``ValueError``
+    naming the mismatched leaf path; a checkpoint whose structure matches
+    no known layout raises ``ValueError`` listing the candidates tried.
+    ``codec`` must name the training run's codec for lossy (EF-bank)
+    checkpoints — lossless checkpoints carry no EF bank and load with the
+    default.
+    """
+    meta_path = Path(str(path) + ".json")
+    if not meta_path.is_file():
+        raise ValueError(f"checkpoint {path}: no {meta_path.name} sidecar "
+                         f"(is this a launch/train.py checkpoint?)")
+    meta = json.loads(meta_path.read_text())
+    leaf0 = meta.get("shapes", {}).get("leaf_0")
+    if not leaf0:
+        raise ValueError(f"checkpoint {path}: sidecar records no leaf "
+                         f"shapes — cannot infer the client count")
+    # every layout leads with the client bank; its first leaf's leading
+    # axis is the population / client count
+    n = int(leaf0[0])
+    treedef = meta.get("treedef")
+    candidates = _candidate_templates(cfg, n, codec, codec_bits, topk_frac)
+    errors = []
+    # first pass: exact treedef match (distinguishes e.g. plain from gossip
+    # only by leaf shapes, so several candidates may match — the loader's
+    # shape validation picks the right one); second pass: leaf-count match,
+    # so a structurally different arch still surfaces the loader's
+    # leaf-path ValueError (PR 4 convention) instead of a generic miss
+    passes = ([(name, t) for name, t in candidates
+               if treedef is None or str(jax.tree.structure(t)) == treedef],
+              [(name, t) for name, t in candidates
+               if len(jax.tree.leaves(t)) == meta.get("n_leaves")])
+    for cands in passes:
+        for name, tmpl in cands:
+            try:
+                state, step = load_checkpoint(path, tmpl)
+            except ValueError as e:
+                errors.append((name, e))
+                continue
+            bank = state[0] if isinstance(state, tuple) else state
+            avg = _tree_mean_axis0(bank)
+            params = {"x": avg["x"], "y": avg["y"]}
+            return params, {"layout": name, "clients": n, "step": step}
+        if errors:
+            # a candidate's structure fit but a leaf didn't — surface the
+            # loader's leaf-path ValueError (arch mismatch)
+            raise errors[0][1]
+    raise ValueError(
+        f"checkpoint {path}: structure matches no known launch/train.py "
+        f"layout (tried {', '.join(name for name, _ in candidates)}); "
+        f"async-engine checkpoints are not servable — rerun training with "
+        f"a sync engine or pass the matching --codec for EF-bank layouts")
